@@ -1,0 +1,59 @@
+"""Kernel microbenchmarks: correctness re-check at paper dims + analytic
+VMEM footprints per BlockSpec (the CPU container cannot time TPU kernels;
+interpret-mode wall time is meaningless — footprints and oracle agreement
+are what transfer)."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.mla_decode import mla_decode_kernel
+
+from .common import check, save, table
+
+
+def mla_vmem_footprint(H=128, D=576, v_dim=512, block_k=512) -> dict:
+    f32 = 4
+    return {
+        "q (H,D)": H * D * f32,
+        "cache block (bk,D)": block_k * D * f32,
+        "scores (H,bk)": H * block_k * f32,
+        "acc (H,v)": H * v_dim * f32,
+        "m+l (H,2)": H * 2 * f32,
+    }
+
+
+def run() -> bool:
+    # paper dims, interpret mode, vs oracle
+    B, H, S, Dl, Dr = 1, 128, 2048, 512, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, H, Dl + Dr), jnp.float32)
+    ckv = jax.random.normal(ks[1], (B, S, Dl), jnp.float32)
+    krope = jax.random.normal(ks[2], (B, S, Dr), jnp.float32)
+    t0 = time.time()
+    out = mla_decode_kernel(q, ckv, krope, S - 1, block_k=512,
+                            interpret=True)
+    dt = time.time() - t0
+    want = ref.mla_decode_ref(q, ckv, krope, S - 1)
+    err = float(jnp.max(jnp.abs(out - want)))
+    ok = check("mla_decode kernel == oracle at DeepSeek dims",
+               err < 1e-4, f"max err {err:.2e} ({dt:.1f}s interpret)")
+
+    fp = mla_vmem_footprint()
+    total = sum(fp.values())
+    rows = [[k, f"{v/2**10:.0f} KiB"] for k, v in fp.items()]
+    rows.append(["TOTAL", f"{total/2**20:.2f} MiB"])
+    md = ("# Kernel VMEM budgets (TPU v5e: ~128 MiB VMEM/core)\n\n"
+          "## mla_decode (grid (B, nk), block_k=512)\n\n"
+          + table(["buffer", "bytes"], rows))
+    save("kernel_vmem.md", md)
+    print(md)
+    ok &= check("mla_decode VMEM fits v5e", total < 100 * 2 ** 20,
+                f"{total/2**20:.2f} MiB")
+    return ok
+
+
+if __name__ == "__main__":
+    raise SystemExit(0 if run() else 1)

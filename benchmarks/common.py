@@ -1,0 +1,38 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def save(name: str, payload) -> str:
+    os.makedirs(ART, exist_ok=True)
+    path = os.path.join(ART, name)
+    with open(path, "w") as f:
+        if name.endswith(".json"):
+            json.dump(payload, f, indent=1)
+        else:
+            f.write(payload)
+    return path
+
+
+def table(headers: List[str], rows: List[List]) -> str:
+    """Markdown table."""
+    def fmt(x):
+        if isinstance(x, float):
+            return f"{x:.4g}"
+        return str(x)
+    out = ["| " + " | ".join(headers) + " |",
+           "|" + "|".join("---" for _ in headers) + "|"]
+    for r in rows:
+        out.append("| " + " | ".join(fmt(x) for x in r) + " |")
+    return "\n".join(out) + "\n"
+
+
+def check(name: str, ok: bool, detail: str = "") -> bool:
+    mark = "PASS" if ok else "FAIL"
+    print(f"  [{mark}] {name}" + (f" — {detail}" if detail else ""))
+    return ok

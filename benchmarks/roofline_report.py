@@ -1,0 +1,96 @@
+"""§Roofline report: aggregate the dry-run artifacts into the per-cell
+three-term roofline table (EXPERIMENTS.md consumes this output).
+
+MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) for train shapes;
+             2*N(_active)*D for inference shapes (fwd only).
+The MODEL_FLOPS / HLO_FLOPS ratio flags remat/recompute waste.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro import configs, models
+from repro.configs.shapes import SHAPES
+
+from .common import save, table
+
+DRY = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+
+
+def active_params(cfg) -> float:
+    """Active params per token (MoE: routed top-k + shared only)."""
+    total = models.param_count(cfg)
+    if not cfg.n_experts:
+        return total
+    # routed expert params NOT active: (E - top_k)/E of the routed bank
+    plan = cfg.layer_plan()
+    n_moe = sum(1 for s in (plan[0] + plan[1] * plan[2] + plan[3])
+                if s.ffn == "moe")
+    routed = n_moe * cfg.n_experts * 3 * cfg.d_model * cfg.moe_d_ff
+    active_routed = routed * cfg.top_k / cfg.n_experts
+    return total - routed + active_routed
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = configs.full(arch)
+    sh = SHAPES[shape_name]
+    n = active_params(cfg)
+    if sh.kind == "train":
+        tokens = sh.global_batch * sh.seq_len
+        return 6.0 * n * tokens
+    if sh.kind == "prefill":
+        return 2.0 * n * sh.global_batch * sh.seq_len
+    return 2.0 * n * sh.global_batch      # decode: 1 token/seq
+
+
+def load_cells(mesh_tag: str):
+    cells = {}
+    for path in glob.glob(os.path.join(DRY, f"{mesh_tag}_*.json")):
+        d = json.load(open(path))
+        pol = d.get("policy") or "-"
+        cells[(d["arch"], d["shape"], d.get("scheme"), pol)] = d
+    return cells
+
+
+def run(mesh_tag: str = "16x16") -> bool:
+    cells = load_cells(mesh_tag)
+    if not cells:
+        print(f"[roofline] no dry-run artifacts for mesh {mesh_tag}; run "
+              "PYTHONPATH=src python -m repro.launch.dryrun first")
+        return True
+    rows = []
+    for (arch, shape, scheme, pol), d in sorted(cells.items()):
+        mf = model_flops(arch, shape)
+        hlo = d["hlo_flops_per_chip"] * d["chips"]
+        rows.append([
+            arch, shape, scheme or "-", pol,
+            f"{d['t_compute']:.3e}", f"{d['t_memory']:.3e}",
+            f"{d['t_collective']:.3e}", d["bound"],
+            f"{d['roofline_fraction']:.3f}",
+            f"{mf / max(hlo, 1):.2f}",
+            d.get("hbm_residency_gib", "-"),
+        ])
+    md = (f"# Roofline — per (arch x shape), mesh {mesh_tag}, TPU v5e "
+          "(197 TF/s bf16, 819 GB/s HBM, 50 GB/s ICI)\n\n"
+          + table(["arch", "shape", "scheme", "policy", "t_compute",
+                   "t_memory", "t_collective", "bound", "roofline frac",
+                   "model/HLO flops", "HBM res GiB"], rows))
+    # skipped cells
+    skip_rows = []
+    for arch in configs.ARCHS:
+        for s, why in configs.skip_shapes(arch).items():
+            skip_rows.append([arch, s, why])
+    if skip_rows:
+        md += "\n## Skipped cells\n\n" + table(["arch", "shape", "reason"],
+                                               skip_rows)
+    save(f"roofline_{mesh_tag}.md", md)
+    print(md)
+    return True
+
+
+if __name__ == "__main__":
+    import sys
+    tag = sys.argv[1] if len(sys.argv) > 1 else "16x16"
+    raise SystemExit(0 if run(tag) else 1)

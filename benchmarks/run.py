@@ -1,0 +1,49 @@
+"""Benchmark driver: one module per paper table/figure + kernel + roofline.
+
+    PYTHONPATH=src python -m benchmarks.run
+
+Exit status is non-zero if any paper-claim check fails.
+"""
+import sys
+
+from . import (bench_fig2_ordering, bench_fig3_ops_mem, bench_fig4_oi,
+               bench_fig5_throughput, bench_fig6_energy, bench_kernels,
+               bench_table1_params, roofline_report)
+
+SUITES = [
+    ("Table 1 — attention-layer param counts", bench_table1_params.run),
+    ("Fig 2 — matmul ordering op counts", bench_fig2_ordering.run),
+    ("Fig 3 — ops & memory accesses", bench_fig3_ops_mem.run),
+    ("Fig 4 — operational intensity", bench_fig4_oi.run),
+    ("Fig 5 — throughput vs compute/BW ratio", bench_fig5_throughput.run),
+    ("Fig 6 — energy vs TOPS/W", bench_fig6_energy.run),
+    ("Pallas kernels — oracle agreement + VMEM budgets", bench_kernels.run),
+    ("Roofline report (single-pod artifacts)",
+     lambda: roofline_report.run("16x16")),
+    ("Roofline report (multi-pod artifacts)",
+     lambda: roofline_report.run("2x16x16")),
+]
+
+
+def main() -> int:
+    failures = []
+    for name, fn in SUITES:
+        print(f"\n{'='*72}\n{name}\n{'='*72}")
+        try:
+            ok = fn()
+        except Exception as e:  # noqa: BLE001
+            import traceback
+            traceback.print_exc()
+            ok = False
+        if not ok:
+            failures.append(name)
+    print(f"\n{'='*72}")
+    if failures:
+        print(f"{len(failures)} suite(s) FAILED: {failures}")
+        return 1
+    print(f"all {len(SUITES)} benchmark suites passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

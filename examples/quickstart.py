@@ -1,0 +1,71 @@
+"""Quickstart: the paper's technique in 60 lines.
+
+Builds a small MLA model (DeepSeek-V2-style, reduced dims), trains a few
+steps on the synthetic pipeline, then serves tokens under ALL FOUR MLA
+execution schemes, verifying they emit identical tokens — the paper's
+central observation ("both implement the same algorithm with identical
+weights; the choice between them can be made dynamically").
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as configs
+import repro.models as models
+from repro.core.schemes import auto_dispatch
+from repro.data import DataConfig, SyntheticLM
+from repro.hwmodel.platforms import PLATFORMS
+from repro.nn import module as nnm
+from repro.optim import AdamWConfig, adamw_init
+from repro.runtime import TrainStepConfig, make_prefill_step, \
+    make_serve_step, make_train_step
+
+cfg = configs.smoke("deepseek-v2-236b")          # MLA + MoE, reduced dims
+print(f"model: {cfg.name}  ({models.param_count(cfg)/1e6:.2f}M params)")
+
+# --- train a few steps -----------------------------------------------------
+params = nnm.init_params(jax.random.PRNGKey(0), models.model_defs(cfg),
+                         jnp.float32)
+opt_cfg = AdamWConfig(lr=1e-3)
+opt = adamw_init(params, opt_cfg)
+step, _ = make_train_step(cfg, None, opt_cfg,
+                          TrainStepConfig(compute_dtype=jnp.float32))
+data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=8))
+for i in range(10):
+    toks, labels = data.next_batch()
+    params, opt, m = step(params, opt, {"tokens": jnp.asarray(toks),
+                                        "labels": jnp.asarray(labels)})
+    if i % 3 == 0:
+        print(f"  step {i}: loss {float(m['loss']):.4f}")
+
+# --- the paper's co-design insight, executable -----------------------------
+for plat in ("edge_tpu", "a17_pro", "tpu_v5e"):
+    s = auto_dispatch(cfg.mla_config(), PLATFORMS[plat], cache_len=4096)
+    print(f"auto_dispatch({plat:10s}) -> MLA scheme '{s}'")
+
+# --- serve under every scheme: identical tokens ----------------------------
+prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, cfg.vocab)
+outs = {}
+for scheme in ("naive", "seq", "rc", "ru"):
+    from repro.launch.serve import _prepare_mla
+    p = _prepare_mla(params, cfg, scheme)
+    prefill = make_prefill_step(cfg, None, batch=2, capacity=24,
+                                compute_dtype=jnp.float32, scheme=scheme)
+    decode = make_serve_step(cfg, None, compute_dtype=jnp.float32,
+                             scheme=scheme)
+    logits, cache = prefill(p, prompt)
+    toks = [int(jnp.argmax(logits[0]))]
+    for t in range(6):
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+        logits, cache = decode(p, nxt, cache, 12 + t)
+        toks.append(int(jnp.argmax(logits[0])))
+    outs[scheme] = toks
+    print(f"  scheme {scheme:6s}: {toks}")
+assert all(v == outs["naive"] for v in outs.values()), \
+    "schemes must emit identical tokens"
+print("OK — all four execution schemes emit identical tokens.")

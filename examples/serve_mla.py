@@ -1,0 +1,76 @@
+"""End-to-end serving driver (the paper is an inference paper — this is
+the headline example): batched requests against an MLA model with the
+execution scheme picked per deployment platform, latent-KV caching, and
+per-phase timing.
+
+    PYTHONPATH=src python examples/serve_mla.py --batch 8 --gen 32
+    PYTHONPATH=src python examples/serve_mla.py --platform edge_tpu
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as configs
+import repro.models as models
+from repro.core.schemes import auto_dispatch, step_time
+from repro.hwmodel.platforms import PLATFORMS
+from repro.launch.serve import _prepare_mla
+from repro.nn import module as nnm
+from repro.runtime import make_prefill_step, make_serve_step
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--batch", type=int, default=8)
+ap.add_argument("--prompt-len", type=int, default=48)
+ap.add_argument("--gen", type=int, default=32)
+ap.add_argument("--platform", default="tpu_v5e", choices=sorted(PLATFORMS))
+args = ap.parse_args()
+
+cfg = configs.smoke("deepseek-v2-236b")
+mla = cfg.mla_config()
+plat = PLATFORMS[args.platform]
+capacity = args.prompt_len + args.gen + 1
+
+scheme = auto_dispatch(mla, plat, cache_len=capacity, batch=args.batch)
+print(f"platform {plat.name}: ridge OI = {plat.ridge_oi:.0f} FLOP/B "
+      f"-> scheme '{scheme}'")
+for s in ("naive", "seq", "rc", "ru"):
+    t = step_time(s, mla, plat, cache_len=capacity, batch=args.batch)
+    print(f"  modeled decode step ({s:6s}): {t*1e6:9.2f} us/layer")
+
+params = nnm.init_params(jax.random.PRNGKey(0), models.model_defs(cfg),
+                         jnp.float32)
+params = _prepare_mla(params, cfg, scheme)
+prefill = make_prefill_step(cfg, None, batch=args.batch, capacity=capacity,
+                            compute_dtype=jnp.float32, scheme=scheme)
+decode = make_serve_step(cfg, None, compute_dtype=jnp.float32, scheme=scheme)
+
+prompts = jax.random.randint(jax.random.PRNGKey(1),
+                             (args.batch, args.prompt_len), 0, cfg.vocab)
+t0 = time.time()
+logits, cache = prefill(params, prompts)
+jax.block_until_ready(logits)
+print(f"prefill {args.batch} x {args.prompt_len}: {time.time()-t0:.2f}s")
+
+generated = []
+t0 = time.time()
+for i in range(args.gen):
+    nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+    generated.append(np.asarray(nxt))
+    logits, cache = decode(params, nxt, cache, args.prompt_len + i)
+jax.block_until_ready(logits)
+dt = time.time() - t0
+print(f"decode {args.gen} steps x {args.batch} seqs: {dt:.2f}s "
+      f"({args.gen*args.batch/dt:.1f} tok/s on CPU)")
+print("first sequence:", np.stack(generated, 1)[0][:24])
+
+# latent-cache footprint vs dense-KV equivalent (the paper's Fig 3 point)
+lat = (mla.kv_lora_rank + mla.qk_rope_dim) * 2
+dense = 2 * cfg.n_heads * mla.qk_dim * 2
+print(f"KV-cache bytes/token/layer: latent {lat} vs dense {dense} "
+      f"({dense/lat:.1f}x smaller)")

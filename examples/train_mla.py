@@ -1,0 +1,69 @@
+"""End-to-end training driver: a ~100M-param MLA+MoE model (DeepSeek-V2
+family, narrow) trained for a few hundred steps on the deterministic
+synthetic pipeline, with checkpoints + auto-resume.  Loss drops from
+~ln(vocab) to well below — proving the full substrate (data -> model ->
+optimizer -> loop -> checkpoint) end-to-end.
+
+Default is a CPU-friendly 5-minute run; pass --steps 300 --d-model 512
+for the full-size version.
+
+    PYTHONPATH=src python examples/train_mla.py
+    PYTHONPATH=src python examples/train_mla.py --steps 300 --d-model 512
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+import repro.models as models
+from repro.configs import deepseek_v2_236b
+from repro.data import DataConfig, SyntheticLM
+from repro.nn import module as nnm
+from repro.optim import AdamWConfig, adamw_init, cosine
+from repro.runtime import LoopConfig, TrainLoop, TrainStepConfig, \
+    make_train_step
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=60)
+ap.add_argument("--d-model", type=int, default=256)
+ap.add_argument("--layers", type=int, default=4)
+ap.add_argument("--batch", type=int, default=8)
+ap.add_argument("--seq", type=int, default=64)
+ap.add_argument("--vocab", type=int, default=4096)
+ap.add_argument("--ckpt-dir", default="/tmp/repro_train_mla")
+args = ap.parse_args()
+
+cfg = dataclasses.replace(
+    deepseek_v2_236b.SMOKE, name="mla-100m",
+    n_layers=args.layers, d_model=args.d_model,
+    n_heads=8, q_lora_rank=args.d_model // 2, kv_lora_rank=args.d_model // 4,
+    qk_nope_dim=32, qk_rope_dim=16, v_head_dim=32,
+    d_ff=args.d_model * 2, vocab=args.vocab,
+    n_experts=8, top_k=2, moe_d_ff=args.d_model * 2, n_shared_experts=1,
+    first_dense_layers=1, first_dense_d_ff=args.d_model * 4,
+    max_seq=args.seq * 2)
+print(f"{cfg.name}: {models.param_count(cfg)/1e6:.1f}M params "
+      f"(--d-model 512 --layers 6 gives ~100M+)")
+
+params = nnm.init_params(jax.random.PRNGKey(0), models.model_defs(cfg),
+                         jnp.float32)
+opt_cfg = AdamWConfig(lr=cosine(3e-3, warmup=20, total=args.steps))
+opt = adamw_init(params, opt_cfg)
+step, _ = make_train_step(cfg, None, opt_cfg,
+                          TrainStepConfig(compute_dtype=jnp.float32))
+data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                              global_batch=args.batch))
+loop = TrainLoop(LoopConfig(total_steps=args.steps, ckpt_every=25,
+                            ckpt_dir=args.ckpt_dir, log_every=10),
+                 step, params, opt, data)
+metrics = loop.run()
+import math
+print(f"final loss {float(metrics['loss']):.3f} "
+      f"(uniform = ln({cfg.vocab}) = {math.log(cfg.vocab):.3f})")
+assert float(metrics["loss"]) < math.log(cfg.vocab) * 0.9, \
+    "loss should drop well below uniform"
+print("OK")

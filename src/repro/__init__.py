@@ -1,0 +1,7 @@
+"""repro — multi-pod JAX framework around DeepSeek-style MLA.
+
+Reproduction of Geens & Verhelst, "Hardware-Centric Analysis of DeepSeek's
+Multi-Head Latent Attention" (2025), grown into a deployable training +
+serving framework. See DESIGN.md.
+"""
+__version__ = "0.1.0"

@@ -1,0 +1,431 @@
+"""While-loop-aware cost accounting over optimized HLO text.
+
+Why this exists: ``compiled.cost_analysis()`` counts a ``while`` body (i.e.
+every ``lax.scan`` over layers, every interpreted Pallas grid) exactly ONCE,
+under-reporting FLOPs/bytes by the trip count (verified empirically — see
+EXPERIMENTS.md §Methodology).  This module parses ``compiled.as_text()``,
+builds the computation call graph (fusion ``calls=``, while ``body=/
+condition=``, ``to_apply=``), extracts static trip counts from while
+conditions, and accumulates:
+
+  * flops            — dot ops: 2 * |output| * prod(lhs contracting dims)
+  * bytes            — Σ (operand sizes + output size) of scheduled ops
+                       (fusion-internal ops are free, matching XLA's
+                       post-fusion "bytes accessed" convention)
+  * collective_bytes — ring-model traffic per chip:
+        all-gather        (G-1) * operand
+        reduce-scatter    (G-1)/G * operand
+        all-reduce        2*(G-1)/G * operand
+        all-to-all        (G-1)/G * operand
+        collective-permute operand
+
+All quantities are PER-DEVICE (the SPMD program is per-device); multiply by
+#chips for global totals.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# op type may be a tuple "(s32[], bf16[..]{1,0}, /*index=5*/f32[...], ...)"
+# whose /*index=N*/ comments contain '=' — match balanced-paren-free body.
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\([^()]*\)|\S+)\s+([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*"?n"?[^0-9]*(\d+)')
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> Tuple[str, List[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return "", []
+    dt, dims = m.groups()
+    return dt, [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    operands: List[str]
+    attrs: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    ops: List[Op]
+    shapes: Dict[str, str]  # op name -> type string
+
+
+@dataclasses.dataclass
+class HLOCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+    collective_raw_operand_bytes: float = 0.0
+    while_trip_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+    warnings: List[str] = dataclasses.field(default_factory=list)
+
+
+_SKIP_BYTES = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "while", "fusion-skip",
+    "conditional", "call", "custom-call-skip",
+    # 'convert' is free: on TPU dtype converts fuse into producers/consumers;
+    # on the CPU lowering they additionally appear as float-normalization
+    # artifacts (bf16 ops sandwiched in f32 converts) that do not exist in
+    # the TPU executable.  See EXPERIMENTS.md §Methodology.
+    "convert", "copy-done", "copy-start",
+}
+
+# Ops whose HBM traffic is the SLICE they move, not the buffer they index:
+#   dynamic-slice  reads |output| bytes (+ tiny indices)
+#   dynamic-update-slice updates |update| bytes in place (read+write)
+# Counting the full operand would bill a 17 GB stacked decode cache once
+# per layer per step (~1000 GB/step phantom traffic).
+_SLICE_OPS = {"dynamic-slice", "dynamic-update-slice", "slice", "gather",
+              "scatter", "pad"}
+
+
+def _parse_operands(argstr: str) -> List[str]:
+    """Operand names from an op's argument list (up to the closing paren)."""
+    depth, out, cur = 0, [], []
+    for ch in argstr:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            if depth == 0:
+                break
+            depth -= 1
+        cur.append(ch)
+    body = "".join(cur)
+    names = re.findall(r"%([\w.\-]+)", body)
+    return names
+
+
+def parse_computations(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if cur is None:
+            if line.rstrip().endswith("{"):
+                m = _COMP_RE.match(line.strip())
+                if m:
+                    cur = Computation(m.group(2), bool(m.group(1)), [], {})
+            continue
+        if line.startswith("}") or line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            name, type_str, opcode, rest = m.groups()
+            ops = _parse_operands(rest)
+            cur.ops.append(Op(name, type_str, opcode, ops, rest))
+            cur.shapes[name] = type_str
+    return comps
+
+
+def _group_size(attrs: str, num_partitions: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", attrs)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", attrs)
+    if m:
+        return len(m.group(1).split(","))
+    return num_partitions
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    _, out_dims = _shape_dims(op.type_str)
+    out_elems = 1
+    for d in out_dims:
+        out_elems *= d
+    lhs_type = comp.shapes.get(op.operands[0], "") if op.operands else ""
+    _, lhs_dims = _shape_dims(lhs_type)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.attrs)
+    contract = 1
+    if m and m.group(1):
+        for idx in m.group(1).split(","):
+            i = int(idx)
+            if i < len(lhs_dims):
+                contract *= lhs_dims[i]
+    return 2.0 * out_elems * contract
+
+
+def _while_trip_count(cond: Computation) -> Optional[int]:
+    """Static trip count: the s32 constant in the condition region
+    (scan/fori induction always starts at 0 and compares LT limit)."""
+    consts = []
+    for op in cond.ops:
+        if op.opcode == "constant" and op.type_str.startswith("s32"):
+            # op.attrs holds everything after "constant(", e.g. "6), meta..."
+            m = re.match(r"(-?\d+)\)", op.attrs)
+            if m:
+                consts.append(int(m.group(1)))
+    if len(consts) == 1:
+        return consts[0]
+    if consts:
+        return max(consts)  # limit is the largest (offsets are small)
+    return None
+
+
+_TRANSPARENT_OPS = {"parameter", "convert", "bitcast", "reshape", "transpose",
+                    "copy", "tuple", "get-tuple-element", "constant"}
+
+
+def _transparent_comps(comps: Dict[str, Computation]) -> set:
+    """Computations that only move/convert data (no math): fusions calling
+    them are dtype/layout shims.  On TPU these fuse into their consumers;
+    on the CPU lowering they are float-normalization artifacts (bf16 ops
+    rewritten to f32 with convert sandwiches).  Their traffic is charged at
+    the PRE-convert operand size via _EffectiveShapes."""
+    out = set()
+    for c in comps.values():
+        if c.ops and all(op.opcode in _TRANSPARENT_OPS for op in c.ops):
+            out.add(c.name)
+    return out
+
+
+class _EffectiveShapes:
+    """Resolve an op name to the type it would have without convert shims."""
+
+    def __init__(self, comp: Computation, comps: Dict[str, Computation],
+                 transparent: set):
+        self.comp, self.comps, self.transparent = comp, comps, transparent
+        self.memo: Dict[str, str] = {}
+
+    def type_of(self, name: str, depth: int = 0) -> str:
+        if name in self.memo:
+            return self.memo[name]
+        t = self.comp.shapes.get(name, "")
+        if depth < 8:
+            op = next((o for o in self.comp.ops if o.name == name), None)
+            if op is not None:
+                if op.opcode == "convert" and op.operands:
+                    t = self.type_of(op.operands[0], depth + 1)
+                elif op.opcode == "fusion":
+                    m = re.search(r"calls=%?([\w.\-]+)", op.attrs)
+                    if m and m.group(1) in self.transparent and op.operands:
+                        # shim fusion: effective type = its largest operand
+                        ts = [self.type_of(o, depth + 1) for o in op.operands]
+                        t = max(ts, key=_shape_bytes, default=t)
+                elif any(op.opcode.startswith(c) for c in COLLECTIVES) \
+                        and op.operands:
+                    # own dims, operand's effective dtype (a gather of a
+                    # convert-shimmed tensor moves bf16 on TPU)
+                    src = self.type_of(op.operands[0], depth + 1)
+                    m_dt = _SHAPE_RE.search(src)
+                    if m_dt:
+                        t = re.sub(r"^\(?\w+\[", m_dt.group(1) + "[", t, count=1)
+        self.memo[name] = t
+        return t
+
+    def bytes_of(self, name: str) -> int:
+        return _shape_bytes(self.type_of(name))
+
+
+def _fusion_dus_update_bytes(op: Op, comp: Computation,
+                             comps: Dict[str, Computation]) -> Optional[float]:
+    """If ``op`` is a fusion whose body performs a dynamic-update-slice of a
+    loop-carried buffer, charge 2x the update slice (in-place read+write on
+    TPU), not the full buffer."""
+    m = re.search(r"calls=%?([\w.\-]+)", op.attrs)
+    if not m or m.group(1) not in comps:
+        return None
+    inner = comps[m.group(1)]
+    dus = [o for o in inner.ops if o.opcode == "dynamic-update-slice"]
+    if not dus:
+        return None
+    total = 0.0
+    for d in dus:
+        upd = inner.shapes.get(d.operands[1], "") if len(d.operands) > 1 else ""
+        total += 2.0 * _shape_bytes(upd)
+    return total
+
+
+def _fusion_operand_bytes(op: Op, comp: Computation,
+                          comps: Dict[str, Computation],
+                          eff: "_EffectiveShapes") -> float:
+    """Fusion traffic = output + Σ operands, EXCEPT operands the fusion body
+    consumes only through (dynamic-)slice ops: those read the slice, not
+    the buffer (in-loop reads of stacked scan inputs — the weight/cache
+    xs of a lax.scan — would otherwise be billed at full-stack size every
+    iteration)."""
+    m = re.search(r"calls=%?([\w.\-]+)", op.attrs)
+    inner = comps.get(m.group(1)) if m else None
+    total = eff.bytes_of(op.name)
+    for idx, o in enumerate(op.operands):
+        charged = None
+        if inner is not None:
+            pname = next((p.name for p in inner.ops if p.opcode == "parameter"
+                          and p.attrs.startswith(f"{idx})")), None)
+            if pname is not None:
+                users = [u for u in inner.ops if pname in u.operands]
+                if users and all(u.opcode in ("dynamic-slice", "slice")
+                                 for u in users):
+                    charged = sum(_shape_bytes(u.type_str) for u in users)
+        total += charged if charged is not None else eff.bytes_of(o)
+    return total
+
+
+def analyze(text: str, num_partitions: int = 1) -> HLOCost:
+    comps = parse_computations(text)
+    cost = HLOCost()
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        cost.warnings.append("no ENTRY computation found")
+        return cost
+    transparent = _transparent_comps(comps)
+
+    # ---- pre-pass: call edges (comp -> [(callee, factor)]) -------------
+    edges: Dict[str, List[Tuple[str, float]]] = {c: [] for c in comps}
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.opcode == "while":
+                body = re.search(r"body=%?([\w.\-]+)", op.attrs)
+                cond = re.search(r"condition=%?([\w.\-]+)", op.attrs)
+                trip = None
+                m_trip = _TRIP_RE.search(op.attrs)   # XLA backend_config
+                if m_trip:
+                    trip = int(m_trip.group(1))
+                if trip is None and cond and cond.group(1) in comps:
+                    trip = _while_trip_count(comps[cond.group(1)])
+                if trip is None:
+                    trip = 1
+                    cost.warnings.append(f"unknown trip count for {op.name}")
+                cost.while_trip_counts[op.name] = trip
+                if body and body.group(1) in comps:
+                    edges[comp.name].append((body.group(1), float(trip)))
+                if cond and cond.group(1) in comps:
+                    edges[comp.name].append((cond.group(1), float(trip + 1)))
+            else:
+                for attr_key in ("calls", "to_apply"):
+                    mm = re.search(rf"{attr_key}=%?([\w.\-]+)", op.attrs)
+                    if mm and mm.group(1) in comps:
+                        edges[comp.name].append((mm.group(1), 1.0))
+
+    # ---- multipliers via fixed-point over the call graph ---------------
+    mult: Dict[str, float] = {c: 0.0 for c in comps}
+    mult[entry.name] = 1.0
+    for _ in range(len(comps) + 2):
+        changed = False
+        for name, comp_edges in edges.items():
+            m_self = mult.get(name, 0.0)
+            if m_self == 0.0:
+                continue
+            for callee, factor in comp_edges:
+                new = m_self * factor
+                if new > mult[callee] + 1e-9:
+                    mult[callee] = new
+                    changed = True
+        if not changed:
+            break
+
+    # which computations are fusion-internal (bytes are free there)
+    fusion_called: set = set()
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.opcode == "fusion":
+                mm = re.search(r"calls=%?([\w.\-]+)", op.attrs)
+                if mm:
+                    fusion_called.add(mm.group(1))
+
+    # ---- accumulate ----------------------------------------------------
+    for comp in comps.values():
+        k = mult.get(comp.name, 0.0)
+        if k == 0.0:
+            continue
+        scheduled = comp.name not in fusion_called
+        eff = _EffectiveShapes(comp, comps, transparent)
+        for op in comp.ops:
+            if op.opcode == "dot":
+                cost.flops += k * _dot_flops(op, comp)
+            elif op.opcode == "convolution":
+                # rare here; approximate: 2*|out|*prod(kernel spatial+cin)
+                _, out_dims = _shape_dims(op.type_str)
+                out_elems = 1
+                for d in out_dims:
+                    out_elems *= d
+                rhs_type = comp.shapes.get(op.operands[1], "") if len(op.operands) > 1 else ""
+                _, rhs_dims = _shape_dims(rhs_type)
+                kern = 1
+                for d in rhs_dims[:-1]:
+                    kern *= d
+                cost.flops += k * 2.0 * out_elems * kern
+            if op.opcode in COLLECTIVES or any(op.opcode.startswith(c + "-") for c in COLLECTIVES):
+                base = next(c for c in COLLECTIVES if op.opcode.startswith(c))
+                # pre-convert sizes: on TPU the gathered tensor stays bf16
+                operand_bytes = sum(eff.bytes_of(o) for o in op.operands)
+                g = _group_size(op.attrs, num_partitions)
+                factor = {
+                    "all-gather": float(g - 1),
+                    "reduce-scatter": (g - 1) / max(g, 1),
+                    "all-reduce": 2.0 * (g - 1) / max(g, 1),
+                    "all-to-all": (g - 1) / max(g, 1),
+                    "collective-permute": 1.0,
+                }[base]
+                traffic = k * operand_bytes * factor
+                cost.collective_bytes += traffic
+                cost.collective_raw_operand_bytes += k * operand_bytes
+                cost.collective_by_kind[base] = cost.collective_by_kind.get(base, 0.0) + traffic
+            if scheduled and op.opcode not in _SKIP_BYTES:
+                if op.opcode in _SLICE_OPS:
+                    if op.opcode == "dynamic-update-slice":
+                        upd = eff.bytes_of(op.operands[1]) \
+                            if len(op.operands) > 1 else 0
+                        b = 2 * upd                      # read+write the slice
+                    elif op.opcode == "scatter":
+                        upd = eff.bytes_of(op.operands[-1]) if op.operands else 0
+                        b = 2 * upd
+                    else:                                # ds/slice/gather/pad
+                        b = 2 * _shape_bytes(op.type_str)
+                elif op.opcode == "fusion":
+                    mm = re.search(r"calls=%?([\w.\-]+)", op.attrs)
+                    if mm and mm.group(1) in transparent:
+                        b = 0                            # dtype/layout shim
+                    else:
+                        dus_b = _fusion_dus_update_bytes(op, comp, comps)
+                        if dus_b is not None:
+                            b = dus_b
+                        else:
+                            b = _fusion_operand_bytes(op, comp, comps, eff)
+                else:
+                    b = eff.bytes_of(op.name) + sum(
+                        eff.bytes_of(o) for o in op.operands)
+                cost.bytes += k * b
+    return cost
+
+
+def analyze_compiled(compiled, num_partitions: int = 1) -> HLOCost:
+    return analyze(compiled.as_text(), num_partitions=num_partitions)

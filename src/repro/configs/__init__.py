@@ -1,0 +1,54 @@
+"""Config registry: ``get(arch_id)`` -> (FULL, SMOKE, SKIP_SHAPES)."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, Tuple
+
+from repro.models.common import ModelConfig
+from .shapes import SHAPES, Shape
+
+_MODULES: Dict[str, str] = {
+    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
+    "gemma3-1b": "gemma3_1b",
+    "granite-34b": "granite_34b",
+    "phi3-mini-3.8b": "phi3_mini_3_8b",
+    "starcoder2-7b": "starcoder2_7b",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "xlstm-350m": "xlstm_350m",
+    "whisper-medium": "whisper_medium",
+    "internvl2-26b": "internvl2_26b",
+    # bonus (paper Table 1 dims; not in the assigned 40-cell matrix):
+    "deepseek-v3-671b": "deepseek_v3_671b",
+}
+
+ARCHS = [a for a in _MODULES if a != "deepseek-v3-671b"]
+
+
+def _load(arch: str):
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+
+
+def full(arch: str) -> ModelConfig:
+    return _load(arch).FULL
+
+
+def smoke(arch: str) -> ModelConfig:
+    return _load(arch).SMOKE
+
+
+def skip_shapes(arch: str) -> dict:
+    return _load(arch).SKIP_SHAPES
+
+
+def cells(include_skipped: bool = False):
+    """All (arch, shape) cells of the assigned matrix."""
+    out = []
+    for a in ARCHS:
+        skips = skip_shapes(a)
+        for s in SHAPES.values():
+            if include_skipped or s.name not in skips:
+                out.append((a, s.name))
+    return out

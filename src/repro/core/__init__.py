@@ -1,0 +1,9 @@
+from . import attention, cache, mla, schemes
+from .mla import MLAConfig, mla_decode, mla_defs, mla_prefill, prepare_serving, SCHEMES
+from .schemes import PlatformPoint, auto_dispatch
+
+__all__ = [
+    "attention", "cache", "mla", "schemes",
+    "MLAConfig", "mla_decode", "mla_defs", "mla_prefill", "prepare_serving",
+    "SCHEMES", "PlatformPoint", "auto_dispatch",
+]

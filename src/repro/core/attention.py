@@ -1,0 +1,68 @@
+"""Standard MHA/GQA/MQA attention — the paper's baseline family (MHA_l/MHA_s).
+
+Pure-jnp reference implementations; models may swap in the Pallas flash
+kernel (repro.kernels) for the prefill/train path.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30  # large-but-finite: avoids NaN from all-masked rows
+
+
+def _sliding_window_mask(q_pos, k_pos, window: Optional[int]):
+    m = k_pos[None, :] <= q_pos[:, None]  # causal
+    if window is not None:
+        m &= k_pos[None, :] > (q_pos[:, None] - window)
+    return m
+
+
+def gqa_attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
+                  q_positions=None, k_positions=None, softmax_scale: Optional[float] = None):
+    """q: (B, Lq, H, Dh); k,v: (B, Lk, Hkv, Dh). H % Hkv == 0.
+
+    Returns (B, Lq, H, Dv). fp32 softmax; bf16-safe.
+    """
+    B, Lq, H, Dh = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    scale = softmax_scale if softmax_scale is not None else Dh ** -0.5
+    qg = q.reshape(B, Lq, Hkv, G, Dh)
+    # native-dtype operands, fp32 accumulation (MXU semantics; avoids
+    # materializing f32 copies of K/V — see core/mla.py dtype note).
+    scores = jnp.einsum("blhgd,bshd->bhgls", qg.astype(k.dtype), k,
+                        preferred_element_type=jnp.float32) * scale
+    if causal or window is not None:
+        q_pos = q_positions if q_positions is not None else jnp.arange(Lq)
+        k_pos = k_positions if k_positions is not None else jnp.arange(k.shape[1])
+        mask = _sliding_window_mask(q_pos, k_pos, window)  # (Lq, Lk)
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgls,bshd->blhgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Lq, H, v.shape[-1]).astype(q.dtype)
+
+
+def gqa_decode(q, k_cache, v_cache, index, *, window: Optional[int] = None,
+               softmax_scale: Optional[float] = None):
+    """One-token decode. q: (B, H, Dh); caches (B, S, Hkv, Dh); ``index`` =
+    position of the new token (cache already contains it at ``index``)."""
+    B, H, Dh = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = H // Hkv
+    scale = softmax_scale if softmax_scale is not None else Dh ** -0.5
+    qg = q.reshape(B, Hkv, G, Dh)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qg.astype(k_cache.dtype), k_cache,
+                        preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(S)
+    valid = pos <= index
+    if window is not None:
+        valid &= pos > (index - window)
+    scores = jnp.where(valid[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, H, v_cache.shape[-1]).astype(q.dtype)

@@ -1,0 +1,88 @@
+"""Decode-time state pytrees: dense KV cache, MLA latent cache, SSM state.
+
+All caches are plain dicts of arrays (pytree-friendly for pjit donation).
+``index`` is the number of valid tokens already in the cache; new tokens are
+written at ``index`` and attention masks positions ``>= index+1``.
+
+Shapes (S = capacity):
+  KVCache      : k (B,S,Hkv,Dh)  v (B,S,Hkv,Dh)
+  LatentCache  : ckv (B,S,D_kvl)  krope (B,S,D_rope)        <- the paper's
+                 compact cache: (D_kvl + D_rope) bytes/token vs
+                 2*Hkv*Dh for dense KV.
+  MambaState   : conv (B,W-1,C)  ssm (B,C,N)
+  XLSTMState   : mLSTM matrix memory + normalizer, sLSTM registers
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def kv_cache(batch: int, capacity: int, n_kv: int, head_dim: int,
+             dtype=jnp.bfloat16, layers: Optional[int] = None) -> Dict[str, Any]:
+    lead = (layers,) if layers else ()
+    return {
+        "k": jnp.zeros(lead + (batch, capacity, n_kv, head_dim), dtype),
+        "v": jnp.zeros(lead + (batch, capacity, n_kv, head_dim), dtype),
+    }
+
+
+def latent_cache(batch: int, capacity: int, kv_lora: int, rope_dim: int,
+                 dtype=jnp.bfloat16, layers: Optional[int] = None) -> Dict[str, Any]:
+    """Split layout {ckv | krope} — (D_kvl + D_rope) bytes/token total, the
+    paper's compact cache.  The split (vs a fused [ckv|krope] array) lets
+    the PV contraction read ``ckv`` directly: a fused layout needs a
+    ``kv[..., :D_kvl]`` slice every layer, a real copy on TPU measured at
+    ~0.9 GB/chip/step on the deepseek-v2 decode_32k cell
+    (EXPERIMENTS.md §Perf A3)."""
+    lead = (layers,) if layers else ()
+    return {
+        "ckv": jnp.zeros(lead + (batch, capacity, kv_lora), dtype),
+        "krope": jnp.zeros(lead + (batch, capacity, rope_dim), dtype),
+    }
+
+
+def mamba_state(batch: int, d_inner: int, d_state: int, conv_width: int,
+                dtype=jnp.bfloat16, layers: Optional[int] = None) -> Dict[str, Any]:
+    lead = (layers,) if layers else ()
+    return {
+        "conv": jnp.zeros(lead + (batch, conv_width - 1, d_inner), dtype),
+        "ssm": jnp.zeros(lead + (batch, d_inner, d_state), jnp.float32),
+    }
+
+
+def update_kv(cache: Dict[str, Any], k_new, v_new, index) -> Dict[str, Any]:
+    """Write (B, Lnew, Hkv, Dh) at position ``index`` along the seq axis."""
+    out = dict(cache)
+    out["k"] = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), index, axis=1)
+    out["v"] = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), index, axis=1)
+    return out
+
+
+def update_latent(cache: Dict[str, Any], ckv_new, krope_new, index) -> Dict[str, Any]:
+    """Write (B, Lnew, D_kvl) + (B, Lnew, D_rope) at ``index``."""
+    return {
+        "ckv": jax.lax.dynamic_update_slice_in_dim(
+            cache["ckv"], ckv_new.astype(cache["ckv"].dtype), index, axis=1),
+        "krope": jax.lax.dynamic_update_slice_in_dim(
+            cache["krope"], krope_new.astype(cache["krope"].dtype), index,
+            axis=1),
+    }
+
+
+def valid_mask(capacity: int, index, n_new: int = 1):
+    """(n_new, capacity) bool mask: new token i may attend cache pos j iff
+    j <= index + i (cache already contains the new tokens when scored)."""
+    j = jnp.arange(capacity)
+    i = jnp.arange(n_new)
+    return j[None, :] <= (index + i[:, None])
+
+
+def bytes_per_token_dense(n_kv: int, head_dim: int, dtype_bytes: int = 2) -> int:
+    return 2 * n_kv * head_dim * dtype_bytes
+
+
+def bytes_per_token_latent(kv_lora: int, rope_dim: int, dtype_bytes: int = 2) -> int:
+    return (kv_lora + rope_dim) * dtype_bytes

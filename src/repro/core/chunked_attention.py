@@ -1,0 +1,343 @@
+"""Memory-bounded attention in pure JAX ("XLA-flash") — the train/prefill
+attention path used by the dry-run and large-shape lowering.
+
+Why not the Pallas kernel here?  On this CPU container Pallas lowers only in
+interpret mode (emulation HLO pollutes the roofline); on a real TPU the
+Pallas flash kernel (kernels/flash_attention.py) is the drop-in upgrade
+(``impl='kernel'``).  This path guarantees the compiled HLO never holds an
+(Lq, Lk) tensor: a ``lax.scan`` over q-blocks computes each block's scores
+against the full K width, softmaxes, and reduces — peak live score memory
+is (B, block_q, H, Lk).
+
+A ``custom_vjp`` mirrors the scan in the backward pass (recompute-from-lse,
+flash-attention style), so autodiff stores only (q, k, v, out, lse) — NOT
+the per-block probability tensors.
+
+Layouts match the model stack: q (B, Lq, H, D); k, v (B, Lk, Hkv, D*).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+def _block_mask(q_pos, k_pos, causal: bool, window: Optional[int], lk_valid: int):
+    """(bq, Lk) bool mask."""
+    m = k_pos[None, :] < lk_valid
+    if causal:
+        m &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        m &= k_pos[None, :] > (q_pos[:, None] - window)
+    return m
+
+
+def _fwd_block(qb, k, v, q_pos, *, scale, causal, window, lk_valid):
+    """qb: (B,bq,Hkv,G,D); k,v: (B,Lk,Hkv,D*). Returns (out, lse).
+
+    Native-dtype dots with fp32 accumulation (MXU semantics); an explicit
+    astype(f32) on K/V is loop-invariant w.r.t. the q-block scan and XLA
+    would hoist it into a full f32 HBM copy of K/V."""
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", qb.astype(k.dtype), k,
+                   preferred_element_type=jnp.float32) * scale
+    k_pos = jnp.arange(k.shape[1])
+    mask = _block_mask(q_pos, k_pos, causal, window, lk_valid)
+    s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    m = jnp.maximum(m, NEG_INF / 2)  # fully-masked rows stay finite
+    p = jnp.exp(s - m)
+    p = jnp.where(mask[None, :, None, None, :], p, 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bqhgk,bkhd->bqhgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32) \
+        / jnp.maximum(l, 1e-30)
+    lse = (m + jnp.log(jnp.maximum(l, 1e-30)))[..., 0]
+    return out, lse
+
+
+def _pad_q(q, bq):
+    Lq = q.shape[1]
+    pad = -Lq % bq
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return q, q.shape[1] // bq
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def chunked_attention(q, k, v, causal: bool = True,
+                      window: Optional[int] = None, q_offset: int = 0,
+                      softmax_scale: Optional[float] = None,
+                      block_q: int = 256):
+    """q: (B, Lq, H, Dqk); k, v: (B, Lk, Hkv, D) -> (B, Lq, H, Dv)."""
+    out, _ = _chunked_fwd(q, k, v, causal, window, q_offset, softmax_scale,
+                          block_q)
+    return out
+
+
+# ----------------------------------------------------- block-pair variant --
+#
+# For causal (and windowed) self-attention the q-block scan above still
+# computes scores against the FULL key width — 2x wasted FLOPs for causal,
+# far more for sliding windows.  The pair-scan iterates only the (q-block,
+# k-block) pairs inside the mask support (the flash-attention grid as a
+# lax.scan), with the online-softmax state as the carry.
+# EXPERIMENTS.md §Perf B2.
+
+
+def _pair_list(nq, nk, bq, bk, q_offset, causal, window, lk_valid):
+    """Static list of (i, j) block pairs intersecting the mask support."""
+    pairs = []
+    for i in range(nq):
+        q_lo, q_hi = q_offset + i * bq, q_offset + (i + 1) * bq - 1
+        for j in range(nk):
+            k_lo, k_hi = j * bk, (j + 1) * bk - 1
+            if k_lo >= lk_valid:
+                continue
+            if causal and k_lo > q_hi:
+                continue
+            if window is not None and k_hi <= q_lo - window:
+                continue
+            pairs.append((i, j))
+    return pairs
+
+
+def chunked_attention_pairs(q, k, v, causal: bool = True,
+                            window: Optional[int] = None, q_offset: int = 0,
+                            softmax_scale: Optional[float] = None,
+                            block_q: int = 256, block_k: int = 256):
+    """Mask-aware block-pair attention; same contract as chunked_attention.
+
+    FLOPs scale with the mask support: ~(nq+1)/(2*nq) of full for causal,
+    ~(window + bq)/Lk for sliding windows."""
+    return _pairs_vjp(q, k, v, causal, window, q_offset, softmax_scale,
+                      block_q, block_k)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _pairs_vjp(q, k, v, causal, window, q_offset, softmax_scale, block_q,
+               block_k):
+    out, _ = _pairs_fwd(q, k, v, causal, window, q_offset, softmax_scale,
+                        block_q, block_k)
+    return out
+
+
+def _pairs_setup(q, k, v, block_q, block_k):
+    B, Lq, H, Dqk = q.shape
+    Lk, Hkv = k.shape[1], k.shape[2]
+    bq, bk = min(block_q, Lq), min(block_k, Lk)
+    pad_q, pad_k = -Lq % bq, -Lk % bk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    return q, k, v, bq, bk, q.shape[1] // bq, k.shape[1] // bk, Lq, Lk
+
+
+def _block_mask_pair(i, j, bq, bk, q_offset, causal, window, lk_valid):
+    q_pos = q_offset + i * bq + jnp.arange(bq)
+    k_pos = j * bk + jnp.arange(bk)
+    m = k_pos[None, :] < lk_valid
+    if causal:
+        m &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        m &= k_pos[None, :] > (q_pos[:, None] - window)
+    return m
+
+
+def _pairs_fwd(q, k, v, causal, window, q_offset, softmax_scale, block_q,
+               block_k):
+    q0 = q
+    scale = softmax_scale if softmax_scale is not None else q.shape[-1] ** -0.5
+    q, k, v, bq, bk, nq, nk, Lq, Lk = _pairs_setup(q, k, v, block_q, block_k)
+    B, Lqp, H, Dqk = q.shape
+    Hkv, Dv = k.shape[2], v.shape[-1]
+    G = H // Hkv
+    pairs = _pair_list(nq, nk, bq, bk, q_offset, causal, window, Lk)
+    ii = jnp.array([p[0] for p in pairs])
+    jj = jnp.array([p[1] for p in pairs])
+    cdt = k.dtype
+
+    def body(carry, ij):
+        m_st, l_st, acc = carry              # (B,Lqp,H) f32, (B,Lqp,H,Dv) f32
+        i, j = ij
+        qb = jax.lax.dynamic_slice_in_dim(q, i * bq, bq, 1)
+        kb = jax.lax.dynamic_slice_in_dim(k, j * bk, bk, 1)
+        vb = jax.lax.dynamic_slice_in_dim(v, j * bk, bk, 1)
+        qg = qb.reshape(B, bq, Hkv, G, Dqk)
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", qg.astype(cdt), kb,
+                       preferred_element_type=jnp.float32) * scale
+        mask = _block_mask_pair(i, j, bq, bk, q_offset, causal, window, Lk)
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_rows = jax.lax.dynamic_slice_in_dim(m_st, i * bq, bq, 1) \
+            .reshape(B, bq, Hkv, G)
+        l_rows = jax.lax.dynamic_slice_in_dim(l_st, i * bq, bq, 1) \
+            .reshape(B, bq, Hkv, G)
+        a_rows = jax.lax.dynamic_slice_in_dim(acc, i * bq, bq, 1) \
+            .reshape(B, bq, Hkv, G, Dv)
+        m_new = jnp.maximum(m_rows, jnp.max(s, axis=-1))
+        m_new = jnp.maximum(m_new, NEG_INF / 2)
+        p = jnp.where(mask[None, :, None, None, :],
+                      jnp.exp(s - m_new[..., None]), 0.0)
+        corr = jnp.exp(m_rows - m_new)
+        l_new = l_rows * corr + jnp.sum(p, axis=-1)
+        a_new = a_rows * corr[..., None] + jnp.einsum(
+            "bqhgk,bkhd->bqhgd", p.astype(cdt), vb,
+            preferred_element_type=jnp.float32)
+        upd = lambda st, rows: jax.lax.dynamic_update_slice_in_dim(
+            st, rows.reshape((B, bq) + st.shape[2:]), i * bq, 1)
+        return (upd(m_st, m_new), upd(l_st, l_new), upd(acc, a_new)), ()
+
+    m0 = jnp.full((B, Lqp, H), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Lqp, H), jnp.float32)
+    a0 = jnp.zeros((B, Lqp, H, Dv), jnp.float32)
+    (m_st, l_st, acc), _ = jax.lax.scan(body, (m0, l0, a0), (ii, jj))
+    l_safe = jnp.maximum(l_st, 1e-30)
+    out = (acc / l_safe[..., None])[:, :Lq].astype(q0.dtype)
+    lse = (m_st + jnp.log(l_safe))[:, :Lq]
+    return out, (q0, k[:, :Lk], v[:, :Lk], out, lse)
+
+
+def _pairs_bwd(causal, window, q_offset, softmax_scale, block_q, block_k,
+               res, dout):
+    q0, k0, v0, out, lse = res
+    scale = softmax_scale if softmax_scale is not None else q0.shape[-1] ** -0.5
+    q, k, v, bq, bk, nq, nk, Lq, Lk = _pairs_setup(q0, k0, v0, block_q, block_k)
+    B, Lqp, H, Dqk = q.shape
+    Hkv, Dv = k.shape[2], v.shape[-1]
+    G = H // Hkv
+    Lkp = k.shape[1]
+    pad4 = lambda x, n: jnp.pad(x, ((0, 0), (0, n), (0, 0), (0, 0))) if n else x
+    pad3 = lambda x, n: jnp.pad(x, ((0, 0), (0, n), (0, 0))) if n else x
+    do = pad4(dout, Lqp - Lq)
+    ob = pad4(out, Lqp - Lq)
+    lsep = pad3(lse, Lqp - Lq)
+    delta = jnp.sum(do.astype(jnp.float32) * ob.astype(jnp.float32), axis=-1)
+    pairs = _pair_list(nq, nk, bq, bk, q_offset, causal, window, Lk)
+    ii = jnp.array([p[0] for p in pairs])
+    jj = jnp.array([p[1] for p in pairs])
+    cdt = k.dtype
+
+    def body(carry, ij):
+        dq_st, dk_st, dv_st = carry
+        i, j = ij
+        qb = jax.lax.dynamic_slice_in_dim(q, i * bq, bq, 1) \
+            .reshape(B, bq, Hkv, G, Dqk)
+        kb = jax.lax.dynamic_slice_in_dim(k, j * bk, bk, 1)
+        vb = jax.lax.dynamic_slice_in_dim(v, j * bk, bk, 1)
+        dob = jax.lax.dynamic_slice_in_dim(do, i * bq, bq, 1) \
+            .reshape(B, bq, Hkv, G, Dv)
+        lseb = jax.lax.dynamic_slice_in_dim(lsep, i * bq, bq, 1) \
+            .reshape(B, bq, Hkv, G)
+        dlb = jax.lax.dynamic_slice_in_dim(delta, i * bq, bq, 1) \
+            .reshape(B, bq, Hkv, G)
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", qb.astype(cdt), kb,
+                       preferred_element_type=jnp.float32) * scale
+        mask = _block_mask_pair(i, j, bq, bk, q_offset, causal, window, Lk)
+        p = jnp.where(mask[None, :, None, None, :],
+                      jnp.exp(s - lseb[..., None]), 0.0)
+        dp = jnp.einsum("bqhgd,bkhd->bqhgk", dob.astype(cdt), vb,
+                        preferred_element_type=jnp.float32)
+        ds = p * (dp - dlb[..., None]) * scale
+        dq_blk = jnp.einsum("bqhgk,bkhd->bqhgd", ds.astype(cdt), kb,
+                            preferred_element_type=jnp.float32)
+        dk_blk = jnp.einsum("bqhgk,bqhgd->bkhd", ds.astype(cdt),
+                            qb.astype(cdt), preferred_element_type=jnp.float32)
+        dv_blk = jnp.einsum("bqhgk,bqhgd->bkhd", p.astype(cdt),
+                            dob.astype(cdt), preferred_element_type=jnp.float32)
+        dq_rows = jax.lax.dynamic_slice_in_dim(dq_st, i * bq, bq, 1) \
+            + dq_blk.reshape(B, bq, H, Dqk)
+        dk_rows = jax.lax.dynamic_slice_in_dim(dk_st, j * bk, bk, 1) + dk_blk
+        dv_rows = jax.lax.dynamic_slice_in_dim(dv_st, j * bk, bk, 1) + dv_blk
+        return (jax.lax.dynamic_update_slice_in_dim(dq_st, dq_rows, i * bq, 1),
+                jax.lax.dynamic_update_slice_in_dim(dk_st, dk_rows, j * bk, 1),
+                jax.lax.dynamic_update_slice_in_dim(dv_st, dv_rows, j * bk, 1)), ()
+
+    dq0 = jnp.zeros((B, Lqp, H, Dqk), jnp.float32)
+    dk0 = jnp.zeros((B, Lkp, Hkv, Dqk), jnp.float32)
+    dv0 = jnp.zeros((B, Lkp, Hkv, Dv), jnp.float32)
+    (dq, dk, dv), _ = jax.lax.scan(body, (dq0, dk0, dv0), (ii, jj))
+    return (dq[:, :Lq].astype(q0.dtype), dk[:, :Lk].astype(k0.dtype),
+            dv[:, :Lk].astype(v0.dtype))
+
+
+_pairs_vjp.defvjp(_pairs_fwd, _pairs_bwd)
+
+
+def _chunked_fwd(q, k, v, causal, window, q_offset, softmax_scale, block_q):
+    B, Lq, H, Dqk = q.shape
+    Lk, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = softmax_scale if softmax_scale is not None else Dqk ** -0.5
+    bq = min(block_q, Lq)
+    qp, nq = _pad_q(q, bq)
+    qb = qp.reshape(B, nq, bq, Hkv, G, Dqk).swapaxes(0, 1)  # (nq,B,bq,Hkv,G,D)
+
+    def body(_, args):
+        i, qblk = args
+        q_pos = q_offset + i * bq + jnp.arange(bq)
+        o, lse = _fwd_block(qblk, k, v, q_pos, scale=scale, causal=causal,
+                            window=window, lk_valid=Lk)
+        return (), (o, lse)
+
+    _, (ob, lseb) = jax.lax.scan(body, (), (jnp.arange(nq), qb))
+    out = ob.swapaxes(0, 1).reshape(B, nq * bq, H, v.shape[-1])[:, :Lq]
+    lse = lseb.swapaxes(0, 1).reshape(B, nq * bq, Hkv, G)[:, :Lq]
+    return out.astype(q.dtype), (q, k, v, out.astype(q.dtype), lse)
+
+
+def _chunked_bwd(causal, window, q_offset, softmax_scale, block_q, res, dout):
+    q, k, v, out, lse = res
+    B, Lq, H, Dqk = q.shape
+    Lk, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = softmax_scale if softmax_scale is not None else Dqk ** -0.5
+    bq = min(block_q, Lq)
+    pad = -Lq % bq
+    nq = (Lq + pad) // bq
+    pad4 = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else x
+    qb = pad4(q).reshape(B, nq, bq, Hkv, G, Dqk).swapaxes(0, 1)
+    dob = pad4(dout).reshape(B, nq, bq, Hkv, G, -1).swapaxes(0, 1)
+    ob = pad4(out).reshape(B, nq, bq, Hkv, G, -1).swapaxes(0, 1)
+    lseb = (jnp.pad(lse, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else lse) \
+        .reshape(B, nq, bq, Hkv, G).swapaxes(0, 1)
+    k_pos = jnp.arange(Lk)
+    cdt = k.dtype
+
+    def body(carry, args):
+        dk_acc, dv_acc = carry
+        i, qblk, doblk, oblk, lseblk = args
+        q_pos = q_offset + i * bq + jnp.arange(bq)
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", qblk.astype(cdt), k,
+                       preferred_element_type=jnp.float32) * scale
+        mask = _block_mask(q_pos, k_pos, causal, window, Lk)
+        p = jnp.where(mask[None, :, None, None, :],
+                      jnp.exp(s - lseblk[..., None]), 0.0)
+        dof = doblk.astype(jnp.float32)
+        delta = jnp.sum(dof * oblk.astype(jnp.float32), axis=-1, keepdims=True)
+        dp = jnp.einsum("bqhgd,bkhd->bqhgk", doblk.astype(cdt), v,
+                        preferred_element_type=jnp.float32)
+        ds = p * (dp - delta) * scale
+        dq_blk = jnp.einsum("bqhgk,bkhd->bqhgd", ds.astype(cdt), k,
+                            preferred_element_type=jnp.float32)
+        dk_acc = dk_acc + jnp.einsum("bqhgk,bqhgd->bkhd", ds.astype(cdt),
+                                     qblk.astype(cdt),
+                                     preferred_element_type=jnp.float32)
+        dv_acc = dv_acc + jnp.einsum("bqhgk,bqhgd->bkhd", p.astype(cdt),
+                                     doblk.astype(cdt),
+                                     preferred_element_type=jnp.float32)
+        return (dk_acc, dv_acc), dq_blk
+
+    zeros_k = jnp.zeros((B, Lk, Hkv, Dqk), jnp.float32)
+    zeros_v = jnp.zeros((B, Lk, Hkv, v.shape[-1]), jnp.float32)
+    (dk, dv), dqb = jax.lax.scan(
+        body, (zeros_k, zeros_v), (jnp.arange(nq), qb, dob, ob, lseb))
+    dq = dqb.swapaxes(0, 1).reshape(B, nq * bq, H, Dqk)[:, :Lq]
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+chunked_attention.defvjp(_chunked_fwd, _chunked_bwd)

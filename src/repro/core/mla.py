@@ -1,0 +1,246 @@
+"""Multi-Head Latent Attention (DeepSeek-V2/V3) with the paper's execution
+schemes as a first-class, runtime-selectable feature.
+
+Decode score chain (paper notation, per head):
+
+    z = q_l . W_up^Q . W_up^{K,T} . C^T          (+ decoupled RoPE path)
+
+Execution schemes (``scheme=`` argument of :func:`mla_decode`):
+
+  'naive'  1->3->2 : up-project the whole latent cache to K/V, run MHA.
+           Cost: O(L * D_kvl * (D_qk + D_v)) extra FLOPs per step. Paper's
+           strawman; implemented for fidelity + as a numerics oracle.
+  'seq'    1->2->3 : q_l -> (W_up^Q) -> q -> (W_up^{K,T}) -> latent space.
+           Fewest FLOPs (D_ql*D_qk + D_qk*D_kvl MACs/head) at the same
+           weight bytes as 'rc'.  *Beyond-paper deployment default* — see
+           DESIGN.md: strictly dominates rc/ru on a two-term roofline.
+  'rc'     2->1->3 : recompute W_absorb = W_up^Q @ W_up^{K,T} every step,
+           keep it on-chip (paper's MLA_rc).  +D_ql*D_qk*D_kvl MACs/head,
+           but only the small factors are read from HBM -> highest OI.
+  'ru'     1->2->3 on precomputed W_absorb streamed from HBM (paper's
+           MLA_ru). Fewest marginal FLOPs but D_ql*D_kvl weight words/head.
+
+All schemes compute the *same function with identical weights* (paper:
+"the choice between them can be made dynamically").  ``tests/test_mla.py``
+asserts allclose-equivalence across schemes, prefill vs decode.
+
+Output chain ``y = s . C . W_up^V . W^O`` is executed left-to-right in
+decode ((s@C)@W_uv@W_o — FLOP- and byte-optimal; see DESIGN.md note on the
+paper's "right-to-left" remark which applies to the prefill phase where the
+score matrix is L x L and V must be materialized first).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..nn import layers as nl
+from ..nn.module import P
+from . import cache as cachelib
+from .attention import NEG_INF, gqa_attention
+
+SCHEMES = ("naive", "seq", "rc", "ru")
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    d_model: int
+    n_heads: int
+    q_lora_rank: int
+    kv_lora_rank: int
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    rope_base: float = 10000.0
+
+    @property
+    def qk_dim(self) -> int:
+        return self.qk_nope_dim + self.qk_rope_dim
+
+    @property
+    def cache_dims(self) -> Tuple[int, int]:
+        return self.kv_lora_rank, self.qk_rope_dim
+
+
+def mla_defs(cfg: MLAConfig) -> Dict[str, Any]:
+    H, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    return {
+        # q path: down -> norm -> up (nope+rope per head)
+        "w_dq": P((cfg.d_model, cfg.q_lora_rank), ("embed", "q_lora")),
+        "q_norm": nl.rmsnorm_defs(cfg.q_lora_rank, "q_lora"),
+        "w_uq": P((cfg.q_lora_rank, H, dn + dr), ("q_lora", "heads", None)),
+        # kv path: joint down-projection -> [latent | shared rope key]
+        "w_dkv": P((cfg.d_model, cfg.kv_lora_rank + dr), ("embed", None)),
+        "kv_norm": nl.rmsnorm_defs(cfg.kv_lora_rank, "kv_lora"),
+        "w_uk": P((cfg.kv_lora_rank, H, dn), ("kv_lora", "heads", None)),
+        "w_uv": P((cfg.kv_lora_rank, H, dv), ("kv_lora", "heads", None)),
+        "w_o": P((H, dv, cfg.d_model), ("heads", None, "embed")),
+    }
+
+
+def param_count(cfg: MLAConfig, rope: bool = True) -> int:
+    """Closed-form #params of one MLA layer (paper Table 1 when rope=False)."""
+    H, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, (cfg.qk_rope_dim if rope else 0), cfg.v_head_dim
+    return (cfg.d_model * cfg.q_lora_rank
+            + cfg.q_lora_rank * H * (dn + dr)
+            + cfg.d_model * (cfg.kv_lora_rank + dr)
+            + cfg.kv_lora_rank * H * (dn + dv)
+            + H * dv * cfg.d_model)
+
+
+def absorb_qk(params: Dict[str, Any], cfg: MLAConfig):
+    """W_absorb = W_up^Q(nope) @ W_up^{K,T} : (H, D_ql, D_kvl).
+
+    'ru' precomputes this once at engine build; 'rc' recomputes per step."""
+    w_uq_nope = params["w_uq"][:, :, : cfg.qk_nope_dim]  # (Q, H, dn)
+    return jnp.einsum("qhn,khn->hqk", w_uq_nope.astype(jnp.float32),
+                      params["w_uk"].astype(jnp.float32))
+
+
+def prepare_serving(params: Dict[str, Any], cfg: MLAConfig, scheme: str) -> Dict[str, Any]:
+    """Engine-build step: attach precomputed absorbed weights for 'ru'."""
+    if scheme == "ru":
+        params = dict(params)
+        params["w_absorb"] = absorb_qk(params, cfg).astype(params["w_uq"].dtype)
+    return params
+
+
+# ------------------------------------------------------------- projections -
+
+
+def _q_proj(params, cfg: MLAConfig, x, positions):
+    """x: (B, L, D) -> q_l (B,L,Q), q_nope (B,L,H,dn), q_rope (B,L,H,dr)."""
+    q_l = nl.rmsnorm(params["q_norm"], x @ params["w_dq"].astype(x.dtype))
+    q = jnp.einsum("blq,qhd->blhd", q_l, params["w_uq"].astype(x.dtype))
+    q_nope, q_rope = q[..., : cfg.qk_nope_dim], q[..., cfg.qk_nope_dim:]
+    q_rope = nl.apply_rope(q_rope, positions, cfg.rope_base)
+    return q_l, q_nope, q_rope
+
+
+def _kv_latent(params, cfg: MLAConfig, x, positions):
+    """x: (B, L, D) -> ckv (B,L,Dkvl) normalized, krope (B,L,dr) rotated."""
+    c = x @ params["w_dkv"].astype(x.dtype)
+    ckv = nl.rmsnorm(params["kv_norm"], c[..., : cfg.kv_lora_rank])
+    krope = nl.apply_rope(c[..., cfg.kv_lora_rank:], positions, cfg.rope_base)
+    return ckv, krope
+
+
+# ----------------------------------------------------------------- prefill -
+
+
+def mla_prefill(params, cfg: MLAConfig, x, positions, *, attn_fn=None,
+                return_cache: bool = True):
+    """Training / prefill forward ("MHA mode": materialize K, V per head).
+
+    x: (B, L, D). Returns (out (B,L,D), cache_entries or None).
+    The paper's "right-to-left" output ordering = compute V first, standard
+    attention in the full space — optimal when scores are L x L.
+    """
+    _, q_nope, q_rope = _q_proj(params, cfg, x, positions)
+    ckv, krope = _kv_latent(params, cfg, x, positions)
+    k_nope = jnp.einsum("blk,khn->blhn", ckv, params["w_uk"].astype(x.dtype))
+    v = jnp.einsum("blk,khv->blhv", ckv, params["w_uv"].astype(x.dtype))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(krope[:, :, None, :], k_nope.shape[:3] + (cfg.qk_rope_dim,))],
+        axis=-1)
+    scale = cfg.qk_dim ** -0.5
+    if attn_fn is None:
+        o = gqa_attention(q, k, v, causal=True, q_positions=positions[0],
+                          k_positions=positions[0], softmax_scale=scale)
+    else:
+        o = attn_fn(q, k, v, softmax_scale=scale)
+    out = jnp.einsum("blhv,hvd->bld", o, params["w_o"].astype(x.dtype))
+    entries = {"ckv": ckv, "krope": krope} if return_cache else None
+    return out, entries
+
+
+# ------------------------------------------------------------------ decode -
+
+
+def _q_latent(params, cfg: MLAConfig, q_l, q_nope, scheme: str):
+    """Map the nope-query into the KV-latent space per execution scheme.
+    Returns q_eff: (B, H, D_kvl) (single-token decode: L dim squeezed)."""
+    if scheme == "seq":
+        # 1->2->3: q_nope @ W_uk^T, factored — fewest FLOPs.
+        return jnp.einsum("bhn,khn->bhk", q_nope, params["w_uk"].astype(q_nope.dtype))
+    if scheme == "rc":
+        # 2->1->3: recompute the absorbed matrix on the fly (stays in VMEM /
+        # fused by XLA — never written to HBM).
+        w_absorb = jnp.einsum("qhn,khn->hqk",
+                              params["w_uq"][:, :, : cfg.qk_nope_dim].astype(jnp.float32),
+                              params["w_uk"].astype(jnp.float32)).astype(q_l.dtype)
+        return jnp.einsum("bq,hqk->bhk", q_l, w_absorb)
+    if scheme == "ru":
+        return jnp.einsum("bq,hqk->bhk", q_l, params["w_absorb"].astype(q_l.dtype))
+    raise ValueError(f"unknown scheme {scheme}")
+
+
+def mla_decode(params, cfg: MLAConfig, x_t, cache: Dict[str, Any], index,
+               *, scheme: str = "seq", decode_kernel=None):
+    """One-token decode. x_t: (B, D). cache: latent cache dict (B, S, .).
+    ``index``: number of tokens already cached (new token written there).
+
+    Returns (out (B, D), new_cache).
+    """
+    B = x_t.shape[0]
+    pos = jnp.full((B, 1), index, dtype=jnp.int32)
+    x = x_t[:, None, :]
+    q_l, q_nope, q_rope = _q_proj(params, cfg, x, pos)
+    q_l, q_nope, q_rope = q_l[:, 0], q_nope[:, 0], q_rope[:, 0]
+    ckv_new, krope_new = _kv_latent(params, cfg, x, pos)
+    cache = cachelib.update_latent(cache, ckv_new, krope_new, index)
+    ckv_c, krope_c = cache["ckv"], cache["krope"]   # (B,S,Dl), (B,S,Dr)
+    Dl = cfg.kv_lora_rank
+    S = ckv_c.shape[1]
+    scale = cfg.qk_dim ** -0.5
+
+    # NOTE on dtypes: all cache-wide contractions run with NATIVE-dtype
+    # operands and ``preferred_element_type=f32`` (MXU semantics: bf16 in,
+    # fp32 accumulate).  An ``astype(f32)`` on the cache here would be
+    # hoisted out of the layer scan by XLA and materialize an f32 copy of
+    # the ENTIRE stacked cache in HBM (observed: +35 GB/chip at the
+    # deepseek-v2 decode_32k cell) — see EXPERIMENTS.md §Perf iteration 0.
+    if scheme == "naive":
+        # 1->3->2: up-project the entire cache (paper's strawman).
+        k_nope = jnp.einsum("bsk,khn->bshn", ckv_c, params["w_uk"].astype(ckv_c.dtype))
+        v_full = jnp.einsum("bsk,khv->bshv", ckv_c, params["w_uv"].astype(ckv_c.dtype))
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(krope_c[:, :, None, :].astype(k_nope.dtype),
+                                      k_nope.shape[:3] + (cfg.qk_rope_dim,))], axis=-1)
+        scores = jnp.einsum("bhd,bshd->bhs", q.astype(k.dtype), k,
+                            preferred_element_type=jnp.float32) * scale
+        valid = jnp.arange(S) <= index
+        scores = jnp.where(valid[None, None], scores, NEG_INF)
+        p = jax.nn.softmax(scores, axis=-1)
+        o = jnp.einsum("bhs,bshv->bhv", p.astype(v_full.dtype), v_full,
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+    else:
+        q_eff = _q_latent(params, cfg, q_l, q_nope, scheme)  # (B, H, Dkvl)
+        if decode_kernel is not None:
+            q_full = jnp.concatenate([q_eff, q_rope], axis=-1)
+            o_lat = decode_kernel(q_full, ckv_c, krope_c, index,
+                                  softmax_scale=scale)
+        else:
+            # MQA-style attention in the latent space (head-shared K=V).
+            # Two-term scores: no q concat, no cache slice for the PV
+            # contraction (the split-cache layout, §Perf A3).
+            scores = (jnp.einsum("bhk,bsk->bhs", q_eff.astype(ckv_c.dtype),
+                                 ckv_c, preferred_element_type=jnp.float32)
+                      + jnp.einsum("bhr,bsr->bhs", q_rope.astype(krope_c.dtype),
+                                   krope_c, preferred_element_type=jnp.float32)
+                      ) * scale
+            valid = jnp.arange(S) <= index
+            scores = jnp.where(valid[None, None], scores, NEG_INF)
+            p = jax.nn.softmax(scores, axis=-1)
+            o_lat = jnp.einsum("bhs,bsk->bhk", p.astype(ckv_c.dtype), ckv_c,
+                               preferred_element_type=jnp.float32).astype(x_t.dtype)
+        # output chain left-to-right: (s@C) @ W_uv @ W_o
+        o = jnp.einsum("bhk,khv->bhv", o_lat, params["w_uv"].astype(x_t.dtype))
+
+    out = jnp.einsum("bhv,hvd->bd", o, params["w_o"].astype(x_t.dtype))
+    return out, cache

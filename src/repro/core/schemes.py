@@ -1,0 +1,40 @@
+"""Runtime execution-scheme dispatch — the paper's co-design insight made
+executable: pick MLA_rc vs MLA_ru (vs seq) from the platform's
+compute-to-bandwidth ratio, batch size and cache length.
+
+The decision rule is the roofline argument of the paper's Fig 5: estimate
+per-step time  t = max(flops/peak, bytes/bw)  for each scheme from the
+closed-form costs in ``repro.hwmodel.attention_costs`` and take argmin.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from .mla import MLAConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class PlatformPoint:
+    name: str
+    peak_flops: float      # FLOP/s (bf16)
+    hbm_bw: float          # B/s
+    dtype_bytes: int = 2
+
+    @property
+    def ridge_oi(self) -> float:
+        return self.peak_flops / self.hbm_bw
+
+
+def step_time(scheme: str, cfg: MLAConfig, platform: PlatformPoint,
+              cache_len: int, batch: int = 1) -> float:
+    from ..hwmodel import attention_costs as ac  # local import: no cycle
+    c = ac.mla_decode_cost(cfg, scheme=scheme, cache_len=cache_len,
+                           batch=batch, dtype_bytes=platform.dtype_bytes)
+    return max(c.flops / platform.peak_flops, c.bytes / platform.hbm_bw)
+
+
+def auto_dispatch(cfg: MLAConfig, platform: PlatformPoint, cache_len: int,
+                  batch: int = 1, candidates=("seq", "rc", "ru")) -> str:
+    """Return the fastest scheme for this (platform, cache, batch) point."""
+    return min(candidates, key=lambda s: step_time(s, cfg, platform, cache_len, batch))

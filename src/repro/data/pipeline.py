@@ -1,0 +1,102 @@
+"""Deterministic synthetic LM data pipeline.
+
+Requirements it satisfies (DESIGN.md §7):
+  * shardable   — each (host, step) pair derives its batch shard from a
+    counter-based PRNG (threefry fold-in of step & host), so any number of
+    hosts produce disjoint, reproducible data with NO coordination;
+  * checkpointable — iterator state is just {step}; restoring a checkpoint
+    replays the exact token stream from that step;
+  * elastic     — resharding to a different host count only changes which
+    host materializes which rows, not the global batch content (the global
+    batch for step s is a pure function of (seed, s)).
+
+The synthetic distribution is a order-0 Markov stream with a
+position-dependent bias — enough structure that a ~100M model's loss
+visibly drops (examples/train_mla.py) while needing no external corpus.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    n_hosts: int = 1
+    host_id: int = 0
+
+    @property
+    def local_batch(self) -> int:
+        assert self.global_batch % self.n_hosts == 0
+        return self.global_batch // self.n_hosts
+
+
+@dataclasses.dataclass
+class DataState:
+    step: int = 0
+
+
+def _row_at(seed: int, step: int, row: jax.Array, L: int, V: int) -> jax.Array:
+    """One global row (seq_len+1,) — pure fn of (seed, step, global row id).
+
+    Learnable structure: a mixture of a NARROW unigram (75% of tokens from
+    the first min(32, V//4) ids) and a uniform tail — cross entropy drops
+    from ln(V) toward the mixture entropy (~1 nat of headroom) within tens
+    of steps for any architecture (the unigram is learnable by the output
+    bias/embedding alone), which the examples/tests assert."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    key = jax.random.fold_in(key, row)
+    k1, k2, k3 = jax.random.split(key, 3)
+    narrow_v = max(2, min(32, V // 4))
+    base = jax.random.randint(k1, (L,), 0, V, dtype=jnp.int32)
+    narrow = jax.random.randint(k3, (L,), 0, narrow_v, dtype=jnp.int32)
+    gate = jax.random.uniform(k2, (L,)) < 0.75
+    return jnp.where(gate, narrow, base)
+
+
+def _batch_at(cfg: DataConfig, step: int, host_id: Optional[int] = None) -> np.ndarray:
+    """Tokens (local_batch, seq_len+1) for this host at ``step``.
+
+    Rows are keyed by *global* row id, so the global batch content is
+    invariant to the host count (elastic resharding changes only which
+    host materializes which rows)."""
+    host = cfg.host_id if host_id is None else host_id
+    rows = jnp.arange(cfg.local_batch, dtype=jnp.int32) + host * cfg.local_batch
+    L, V = cfg.seq_len + 1, cfg.vocab
+    toks = jax.vmap(lambda r: _row_at(cfg.seed, step, r, L, V))(rows)
+    return np.asarray(toks)
+
+
+class SyntheticLM:
+    """Iterator with explicit, restorable state."""
+
+    def __init__(self, cfg: DataConfig, state: Optional[DataState] = None):
+        self.cfg = cfg
+        self.state = state or DataState()
+
+    def next_batch(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Returns (tokens (B, L), labels (B, L)) and advances the state."""
+        toks = _batch_at(self.cfg, self.state.step)
+        self.state = DataState(self.state.step + 1)
+        return toks[:, :-1], toks[:, 1:]
+
+    def peek_global(self, step: int) -> np.ndarray:
+        """Full global batch at a step (tests: shard-invariance)."""
+        return np.concatenate(
+            [_batch_at(dataclasses.replace(self.cfg, host_id=h), step)
+             for h in range(self.cfg.n_hosts)], axis=0)
+
+    # ---- checkpoint integration ----------------------------------------
+    def state_dict(self) -> dict:
+        return {"step": self.state.step}
+
+    def load_state_dict(self, d: dict) -> None:
+        self.state = DataState(int(d["step"]))

@@ -1,0 +1,212 @@
+"""Closed-form operation / off-chip-byte counts for the paper's four
+attention methods (MLA_rc, MLA_ru, MHA_l, MHA_s) plus the 'seq' and
+'naive' orderings — the analytical backbone of Figs 2-4.
+
+Conventions (matching the letter):
+  * "operations" = FLOPs = 2 x MACs.
+  * Off-chip accesses count weights (once per step, batch-shared), the
+    KV / latent cache (read once, new entry written), and optionally
+    activations in/out (``include_io``).  Intermediates are assumed to
+    stay on-chip (the paper's fused-execution assumption; realized on TPU
+    by the Pallas kernels / XLA fusion — see kernels/mla_decode.py).
+  * ``rope=False`` reproduces the paper exactly (it omits RoPE); the
+    framework default is rope=True for deployment honesty.
+  * Softmax is neglected in Fig 3 (paper does the same) and modeled in
+    ``roofline.py`` via ``softmax_flops`` (Stream models it).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from ..core.mla import MLAConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class MHAConfig:
+    d_model: int
+    n_heads: int
+    qk_dim: int
+    v_dim: int
+
+    def param_count(self) -> int:
+        return self.n_heads * self.d_model * (2 * self.qk_dim + self.v_dim) \
+            + self.n_heads * self.v_dim * self.d_model
+
+
+# DeepSeek-V3 instantiations (paper Table 1)
+DSV3_MLA = MLAConfig(d_model=7168, n_heads=128, q_lora_rank=1536,
+                     kv_lora_rank=512, qk_nope_dim=128, qk_rope_dim=64,
+                     v_head_dim=128)
+MHA_L = MHAConfig(d_model=7168, n_heads=128, qk_dim=128, v_dim=128)
+MHA_S = MHAConfig(d_model=4363, n_heads=128, qk_dim=77, v_dim=77)
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float
+    bytes: float
+    breakdown: Dict[str, float]
+
+    @property
+    def oi(self) -> float:
+        return self.flops / max(self.bytes, 1.0)
+
+
+# ------------------------------------------------------------------ MLA ----
+
+
+def _dims(cfg: MLAConfig, rope: bool):
+    dr = cfg.qk_rope_dim if rope else 0
+    return cfg.d_model, cfg.n_heads, cfg.q_lora_rank, cfg.kv_lora_rank, \
+        cfg.qk_nope_dim, dr, cfg.v_head_dim
+
+
+def mla_decode_cost(cfg: MLAConfig, *, scheme: str, cache_len: int,
+                    batch: int = 1, dtype_bytes: int = 2, rope: bool = False,
+                    include_io: bool = False) -> Cost:
+    """One decode step of one MLA layer. ``cache_len`` = L (incl. new token)."""
+    D, H, Q, K, dn, dr, dv = _dims(cfg, rope)
+    B, L, w = batch, cache_len, dtype_bytes
+    fl: Dict[str, float] = {}
+    by: Dict[str, float] = {}
+
+    # ---- common projections (per token) --------------------------------
+    fl["q_down"] = 2 * B * D * Q
+    fl["kv_down"] = 2 * B * D * (K + dr)
+    fl["attn_scores"] = 2 * B * H * L * (K + dr)
+    fl["attn_out"] = 2 * B * H * L * K
+    fl["v_up"] = 2 * B * H * K * dv
+    fl["o_proj"] = 2 * B * H * dv * D
+    by["w_common"] = (D * Q + D * (K + dr) + K * H * dv + H * dv * D) * w
+    by["cache_read"] = B * L * (K + dr) * w
+    by["cache_write"] = B * (K + dr) * w
+
+    # ---- scheme-specific nope-query transform --------------------------
+    if scheme == "seq":                       # 1->2->3, factored
+        fl["q_up"] = 2 * B * Q * H * (dn + dr)
+        fl["q_latent"] = 2 * B * H * dn * K
+        by["w_scheme"] = (Q * H * (dn + dr) + K * H * dn) * w
+    elif scheme == "rc":                      # 2->1->3, recompute absorb
+        fl["q_up_rope"] = 2 * B * Q * H * dr
+        fl["absorb_recompute"] = 2 * H * Q * dn * K  # batch-shared!
+        fl["q_latent"] = 2 * B * H * Q * K
+        by["w_scheme"] = (Q * H * (dn + dr) + K * H * dn) * w
+    elif scheme == "ru":                      # precomputed absorb, streamed
+        fl["q_up_rope"] = 2 * B * Q * H * dr
+        fl["q_latent"] = 2 * B * H * Q * K
+        by["w_scheme"] = (H * Q * K + Q * H * dr) * w
+    elif scheme == "naive":                   # 1->3->2, up-project cache
+        fl["q_up"] = 2 * B * Q * H * (dn + dr)
+        fl["k_up"] = 2 * B * L * K * H * dn
+        fl["v_up_cache"] = 2 * B * L * K * H * dv
+        # attention runs in the full space instead of latent:
+        fl["attn_scores"] = 2 * B * H * L * (dn + dr)
+        fl["attn_out"] = 2 * B * H * L * dv
+        fl["v_up"] = 0.0
+        by["w_scheme"] = (Q * H * (dn + dr) + K * H * dn) * w
+        # up-projected K/V do not fit on-chip for large L: spilled + re-read
+        by["kv_spill"] = 2 * B * L * H * (dn + dr + dv) * w
+    else:
+        raise ValueError(scheme)
+
+    if include_io:
+        by["io"] = 2 * B * D * w
+    return Cost(sum(fl.values()), sum(by.values()), {**fl, **{f"B:{k}": v for k, v in by.items()}})
+
+
+def mla_prefill_cost(cfg: MLAConfig, *, seq_len: int, batch: int = 1,
+                     dtype_bytes: int = 2, rope: bool = False, causal: bool = True,
+                     include_io: bool = True) -> Cost:
+    D, H, Q, K, dn, dr, dv = _dims(cfg, rope)
+    B, L, w = batch, seq_len, dtype_bytes
+    att = 0.5 if causal else 1.0
+    fl = {
+        "q_down": 2 * B * L * D * Q,
+        "q_up": 2 * B * L * Q * H * (dn + dr),
+        "kv_down": 2 * B * L * D * (K + dr),
+        "k_up": 2 * B * L * K * H * dn,
+        "v_up": 2 * B * L * K * H * dv,
+        "attn_scores": 2 * B * H * L * L * (dn + dr) * att,
+        "attn_out": 2 * B * H * L * L * dv * att,
+        "o_proj": 2 * B * L * H * dv * D,
+    }
+    by = {
+        "weights": (D * Q + Q * H * (dn + dr) + D * (K + dr) + K * H * dn
+                    + K * H * dv + H * dv * D) * w,
+        "cache_write": B * L * (K + dr) * w,
+    }
+    if include_io:
+        by["io"] = 2 * B * L * D * w
+    return Cost(sum(fl.values()), sum(by.values()), {**fl, **{f"B:{k}": v for k, v in by.items()}})
+
+
+# ------------------------------------------------------------------ MHA ----
+
+
+def mha_decode_cost(cfg: MHAConfig, *, cache_len: int, batch: int = 1,
+                    dtype_bytes: int = 2, include_io: bool = False) -> Cost:
+    D, H, dq, dv = cfg.d_model, cfg.n_heads, cfg.qk_dim, cfg.v_dim
+    B, L, w = batch, cache_len, dtype_bytes
+    fl = {
+        "qkv_proj": 2 * B * D * H * (2 * dq + dv),
+        "attn_scores": 2 * B * H * L * dq,
+        "attn_out": 2 * B * H * L * dv,
+        "o_proj": 2 * B * H * dv * D,
+    }
+    by = {
+        "weights": (D * H * (2 * dq + dv) + H * dv * D) * w,
+        "cache_read": B * L * H * (dq + dv) * w,
+        "cache_write": B * H * (dq + dv) * w,
+    }
+    if include_io:
+        by["io"] = 2 * B * D * w
+    return Cost(sum(fl.values()), sum(by.values()), {**fl, **{f"B:{k}": v for k, v in by.items()}})
+
+
+def mha_prefill_cost(cfg: MHAConfig, *, seq_len: int, batch: int = 1,
+                     dtype_bytes: int = 2, causal: bool = True,
+                     include_io: bool = True) -> Cost:
+    D, H, dq, dv = cfg.d_model, cfg.n_heads, cfg.qk_dim, cfg.v_dim
+    B, L, w = batch, seq_len, dtype_bytes
+    att = 0.5 if causal else 1.0
+    fl = {
+        "qkv_proj": 2 * B * L * D * H * (2 * dq + dv),
+        "attn_scores": 2 * B * H * L * L * dq * att,
+        "attn_out": 2 * B * H * L * L * dv * att,
+        "o_proj": 2 * B * L * H * dv * D,
+    }
+    by = {
+        "weights": (D * H * (2 * dq + dv) + H * dv * D) * w,
+        "cache_write": B * L * H * (dq + dv) * w,
+    }
+    if include_io:
+        by["io"] = 2 * B * L * D * w
+    return Cost(sum(fl.values()), sum(by.values()), {**fl, **{f"B:{k}": v for k, v in by.items()}})
+
+
+# ------------------------------------------------- Fig 2: ordering study ----
+
+
+def score_chain_ops(cfg: MLAConfig, order: str, cache_len: int,
+                    batch: int = 1, rope: bool = False) -> float:
+    """FLOPs of  Q_l . W_up^Q . W_up^{K,T} . C^T  under a given product
+    order (Fig 2).  Orders: '123' left-to-right, '132' naive, '213' absorb-
+    recompute, 'ru' absorb-reuse (precomputed)."""
+    _, H, Q, K, dn, dr, _ = _dims(cfg, rope)
+    B, L = batch, cache_len
+    if order == "123":
+        return 2 * (B * Q * H * dn + B * H * dn * K + B * H * K * L)
+    if order == "132":
+        return 2 * (B * Q * H * dn + B * L * K * H * dn + B * H * dn * L)
+    if order == "213":
+        return 2 * (H * Q * dn * K + B * H * Q * K + B * H * K * L)
+    if order == "ru":
+        return 2 * (B * H * Q * K + B * H * K * L)
+    raise ValueError(order)
+
+
+def softmax_flops(n_heads: int, cache_len: int, batch: int = 1,
+                  ops_per_elem: int = 5) -> float:
+    """max, sub, exp, sum, div — ~5 vector ops per score element."""
+    return ops_per_elem * batch * n_heads * cache_len

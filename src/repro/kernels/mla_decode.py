@@ -1,0 +1,115 @@
+"""Pallas TPU kernel for absorbed-MLA decode attention (the paper's object
+of study): MQA-style flash-decoding over the *latent* KV cache.
+
+After weight absorption (any of the seq/rc/ru schemes), each head's query
+lives in the joint latent space  q_full = [q_latent(D_kvl) ; q_rope(D_r)]
+and K = V = the shared latent cache  [ckv ; k_rope]  — a single "KV head"
+shared by all n_h query heads.  This kernel fuses score, online softmax and
+value reduction so the cache streams HBM->VMEM exactly once and no
+(B, H, S) score tensor ever exists in HBM — the fused execution the paper
+assumes ("it is crucial that the resulting, larger weight matrix remains
+on-chip"; here the analogous requirement is that scores/softmax state stay
+in VMEM).
+
+TPU mapping:
+  grid (B, nk) — kv-blocks innermost (sequential), online-softmax state in
+  VMEM scratch.  Per-instance VMEM at H=128, D=576, block_k=512:
+  q 128x576x4 = 295 KB, cache block 512x576x4 = 1.2 MB, scores 128x512x4
+  = 262 KB, acc 128x512x4 = 262 KB  => ~2 MB.
+  The cache-length ``index`` is a runtime scalar (scalar-prefetch operand);
+  kv-blocks entirely beyond ``index`` skip their compute via pl.when.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0 ** 30
+
+
+def _kernel(idx_ref, q_ref, ckv_ref, krope_ref, o_ref, acc, m_sc, l_sc, *,
+            scale, v_dim, block_k, nk):
+    ik = pl.program_id(1)
+    index = idx_ref[0]
+
+    @pl.when(ik == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+
+    @pl.when(ik * block_k <= index)  # skip blocks fully beyond the cache end
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)            # (H, Dl+Dr)
+        ckv = ckv_ref[0].astype(jnp.float32)        # (Bk, Dl)
+        krope = krope_ref[0].astype(jnp.float32)    # (Bk, Dr)
+        # two-term scores on the split cache (no fused [ckv|krope] copy)
+        s = (jax.lax.dot_general(q[:, :v_dim], ckv, (((1,), (1,)), ((), ())))
+             + jax.lax.dot_general(q[:, v_dim:], krope,
+                                   (((1,), (1,)), ((), ())))) * scale
+        k_pos = ik * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        mask = k_pos <= index
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_sc[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_sc[...] = l_sc[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc[...] = acc[...] * corr + p @ ckv
+        m_sc[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _done():
+        l = l_sc[...]
+        l_safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc[...] / l_safe).astype(o_ref.dtype)
+
+
+def mla_decode_kernel(q_full, ckv, krope, index, *,
+                      softmax_scale: Optional[float] = None,
+                      block_k: int = 512, interpret: Optional[bool] = None):
+    """q_full: (B, H, Dl+Dr) = [q_latent ; q_rope]; ckv: (B, S, Dl);
+    krope: (B, S, Dr); index: scalar int32 (newest valid position).
+    Returns (B, H, Dl) — attention-weighted latent values."""
+    B, H, D = q_full.shape
+    S, v_dim = ckv.shape[1], ckv.shape[2]
+    scale = softmax_scale if softmax_scale is not None else D ** -0.5
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    bk = min(block_k, S)
+    pad = -S % bk
+    if pad:
+        ckv = jnp.pad(ckv, ((0, 0), (0, pad), (0, 0)))
+        krope = jnp.pad(krope, ((0, 0), (0, pad), (0, 0)))
+    nk = ckv.shape[1] // bk
+    dr = krope.shape[-1]
+    kernel = functools.partial(_kernel, scale=scale, v_dim=v_dim,
+                               block_k=bk, nk=nk)
+    index = jnp.asarray(index, jnp.int32).reshape((1,))
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(B, nk),
+            in_specs=[
+                pl.BlockSpec((1, H, D), lambda b, j, idx: (b, 0, 0)),
+                pl.BlockSpec((1, bk, v_dim), lambda b, j, idx: (b, j, 0)),
+                pl.BlockSpec((1, bk, dr), lambda b, j, idx: (b, j, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, H, v_dim), lambda b, j, idx: (b, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((H, v_dim), jnp.float32),
+                pltpu.VMEM((H, 1), jnp.float32),
+                pltpu.VMEM((H, 1), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, H, v_dim), q_full.dtype),
+        interpret=interpret,
+    )(index, q_full, ckv, krope)
+    return out

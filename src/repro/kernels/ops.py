@@ -1,0 +1,68 @@
+"""Public jit'd wrappers for the Pallas kernels + shard_map builders.
+
+Models call attention through these so the implementation is swappable:
+  impl='ref'    pure-jnp dense reference (GSPMD partitions it freely)
+  impl='kernel' Pallas kernel (interpret=True on CPU), wrapped in shard_map
+                when a mesh is active so each device runs the kernel on its
+                local shard (batch over DP axes, heads over 'model').
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as PS
+
+from . import ref
+from .flash_attention import flash_attention
+from .mla_decode import mla_decode_kernel
+
+
+def attention(q, k, v, *, impl: str = "ref", causal: bool = True,
+              window: Optional[int] = None, q_offset: int = 0,
+              softmax_scale: Optional[float] = None,
+              mesh: Optional[Mesh] = None, dp_axes=None):
+    """q: (B, H, Lq, Dqk); k, v: (B, Hkv, Lk, D). Returns (B, H, Lq, Dv)."""
+    if impl == "ref":
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                       q_offset=q_offset, softmax_scale=softmax_scale)
+    fn = functools.partial(flash_attention, causal=causal, window=window,
+                           q_offset=q_offset, softmax_scale=softmax_scale)
+    if mesh is None:
+        return fn(q, k, v)
+    dp = dp_axes if dp_axes is not None else tuple(
+        a for a in ("pod", "data") if a in mesh.axis_names)
+    qs = PS(dp, "model", None, None)
+    return jax.shard_map(fn, mesh=mesh, in_specs=(qs, qs, qs), out_specs=qs,
+                         check_vma=False)(q, k, v)
+
+
+def mla_decode_attention(q_full, ckv, krope, index, *, impl: str = "ref",
+                         softmax_scale: Optional[float] = None,
+                         mesh: Optional[Mesh] = None, dp_axes=None,
+                         block_k: int = 512):
+    """Absorbed-MLA decode: q_full (B,H,Dl+Dr), ckv (B,S,Dl), krope
+    (B,S,Dr) -> (B,H,Dl).
+
+    Under shard_map: batch over DP axes, heads over 'model'; the latent
+    cache is head-shared so it is REPLICATED over 'model' (the MQA
+    structure of absorbed MLA — each model shard re-reads the same cache,
+    which is the paper's bandwidth win: the cache is ~16x smaller than a
+    dense KV cache, so n_model re-reads still move less data)."""
+    if impl == "ref":
+        return ref.mla_decode_ref(q_full, ckv, krope, index,
+                                  softmax_scale=softmax_scale)
+    fn = functools.partial(mla_decode_kernel,
+                           softmax_scale=softmax_scale, block_k=block_k)
+    if mesh is None:
+        return fn(q_full, ckv, krope, index)
+    dp = dp_axes if dp_axes is not None else tuple(
+        a for a in ("pod", "data") if a in mesh.axis_names)
+    return jax.shard_map(
+        lambda q, c, r, i: fn(q, c, r, i), mesh=mesh,
+        in_specs=(PS(dp, "model", None), PS(dp, None, None),
+                  PS(dp, None, None), PS()),
+        out_specs=PS(dp, "model", None), check_vma=False,
+    )(q_full, ckv, krope, index)

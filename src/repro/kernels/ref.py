@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for the Pallas kernels (tests assert allclose vs these)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None, q_offset: int = 0,
+                        softmax_scale: Optional[float] = None):
+    """q: (B, H, Lq, Dqk); k, v: (B, Hkv, Lk, D*). Returns (B, H, Lq, Dv).
+
+    Dense reference with fp32 softmax. ``q_offset``: absolute position of
+    q[,:,0] (for chunked prefill); causal mask uses absolute positions.
+    """
+    B, H, Lq, Dqk = q.shape
+    Hkv, Lk = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = softmax_scale if softmax_scale is not None else Dqk ** -0.5
+    qg = q.reshape(B, Hkv, G, Lq, Dqk).astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k.astype(jnp.float32)) * scale
+    q_pos = q_offset + jnp.arange(Lq)
+    k_pos = jnp.arange(Lk)
+    mask = jnp.ones((Lq, Lk), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        mask &= k_pos[None, :] > (q_pos[:, None] - window)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, Lq, v.shape[-1]).astype(q.dtype)
+
+
+def mla_decode_ref(q_full, ckv, krope, index, *,
+                   softmax_scale: Optional[float] = None):
+    """Absorbed-MLA decode oracle (MQA-style attention in latent space).
+
+    q_full : (B, H, Dl+Dr)  = [q_latent ; q_rope]
+    ckv    : (B, S, Dl); krope: (B, S, Dr)  — split latent cache
+    index  : scalar — position of the newest token (attend to pos <= index)
+    Returns (B, H, Dl): attention-weighted latent values.
+    """
+    B, H, D = q_full.shape
+    S, Dl = ckv.shape[1], ckv.shape[2]
+    scale = softmax_scale if softmax_scale is not None else D ** -0.5
+    cache = jnp.concatenate([ckv, krope], axis=-1)
+    s = jnp.einsum("bhd,bsd->bhs", q_full.astype(jnp.float32),
+                   cache.astype(jnp.float32)) * scale
+    valid = jnp.arange(S) <= index
+    s = jnp.where(valid[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhs,bsk->bhk", p, ckv.astype(jnp.float32))
+    return o.astype(q_full.dtype)

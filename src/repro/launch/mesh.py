@@ -1,0 +1,26 @@
+"""Production mesh builders.
+
+Single-pod : (data=16, model=16)          = 256 chips (one v5e pod)
+Multi-pod  : (pod=2, data=16, model=16)   = 512 chips (2 pods over DCN/ICI)
+
+Functions (not module-level constants) so importing never touches jax
+device state — the dry-run sets XLA_FLAGS before any jax import instead.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh (tests use small ones, e.g. (2, 2))."""
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def chips(mesh) -> int:
+    return mesh.devices.size

@@ -1,0 +1,78 @@
+"""Abstract input/state specs for the dry-run: ShapeDtypeStruct stand-ins
+for every model input — weak-type-correct, shardable, zero allocation.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .. import models
+from ..configs.shapes import SHAPES, Shape
+from ..models.common import ModelConfig
+from ..nn import module as nnm
+from ..optim import AdamWConfig, adamw_init
+
+I32 = jnp.int32
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def param_specs(cfg: ModelConfig, param_dtype=jnp.bfloat16):
+    """Abstract param tree (no allocation)."""
+    return nnm.shapes(models.model_defs(cfg), param_dtype)
+
+
+def opt_specs(cfg: ModelConfig, opt_cfg: AdamWConfig, param_dtype=jnp.bfloat16):
+    """Abstract optimizer state via eval_shape over adamw_init."""
+    p = param_specs(cfg, param_dtype)
+    return jax.eval_shape(lambda q: adamw_init(q, opt_cfg), p)
+
+
+def _text_len(cfg: ModelConfig, seq_len: int) -> int:
+    """VLM shapes: 1024 patch embeddings + (seq-1024) text tokens."""
+    if cfg.family == "vlm":
+        return seq_len - cfg.n_patches
+    return seq_len
+
+
+def batch_specs(cfg: ModelConfig, shape: Shape,
+                compute_dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """Inputs of the step function lowered for this shape kind."""
+    B, L = shape.global_batch, shape.seq_len
+    Lt = _text_len(cfg, L)
+    if shape.kind == "train":
+        out = {"tokens": sds((B, Lt), I32), "labels": sds((B, Lt), I32)}
+        if cfg.family == "vlm":
+            out["embeds"] = sds((B, cfg.n_patches, cfg.d_model), compute_dtype)
+        if cfg.family == "encdec":
+            out = {"tokens": sds((B, L), I32), "labels": sds((B, L), I32),
+                   "embeds": sds((B, cfg.n_frames, cfg.d_model), compute_dtype)}
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": sds((B, Lt), I32)}
+        if cfg.family == "vlm":
+            out["embeds"] = sds((B, cfg.n_patches, cfg.d_model), compute_dtype)
+        if cfg.family == "encdec":
+            out = {"tokens": sds((B, L), I32),
+                   "embeds": sds((B, cfg.n_frames, cfg.d_model), compute_dtype)}
+        return out
+    if shape.kind == "decode":
+        cache = jax.eval_shape(
+            lambda: models.init_cache(cfg, B, shape.seq_len, compute_dtype))
+        return {"token": sds((B,), I32), "cache": cache,
+                "index": sds((), I32)}
+    raise ValueError(shape.kind)
+
+
+def input_specs(arch_or_cfg, shape_name: str, compute_dtype=jnp.bfloat16):
+    """input_specs('deepseek-v2-236b', 'decode_32k') — the dry-run entry."""
+    if isinstance(arch_or_cfg, ModelConfig):
+        cfg = arch_or_cfg
+    else:
+        from .. import configs
+        cfg = configs.full(arch_or_cfg)
+    return batch_specs(cfg, SHAPES[shape_name], compute_dtype)

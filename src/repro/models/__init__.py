@@ -1,0 +1,49 @@
+"""Unified model API: every architecture exposes the same five functions,
+dispatched on ``cfg.family`` ('encdec' -> whisper, everything else -> the
+generic decoder-only LM stack).
+
+    model_defs(cfg)                      param definitions (P tree)
+    forward(params, cfg, tokens, ...)    training logits + aux losses
+    prefill(params, cfg, tokens, ...)    last-token logits + filled cache
+    decode_step(params, cfg, tok, ...)   one-token serve step
+    init_cache(cfg, batch, capacity)     decode-state pytree
+"""
+from __future__ import annotations
+
+from . import lm, whisper
+from .common import ModelConfig, Sub
+
+
+def _mod(cfg: ModelConfig):
+    return whisper if cfg.family == "encdec" else lm
+
+
+def model_defs(cfg: ModelConfig):
+    return whisper.whisper_defs(cfg) if cfg.family == "encdec" else lm.lm_defs(cfg)
+
+
+def param_count(cfg: ModelConfig) -> int:
+    return nnm_count(cfg)
+
+
+def nnm_count(cfg: ModelConfig) -> int:
+    from ..nn import module as nnm
+    return nnm.count_params(model_defs(cfg))
+
+
+def forward(params, cfg: ModelConfig, tokens, **kw):
+    return _mod(cfg).forward(params, cfg, tokens, **kw)
+
+
+def prefill(params, cfg: ModelConfig, tokens, **kw):
+    return _mod(cfg).prefill(params, cfg, tokens, **kw)
+
+
+def decode_step(params, cfg: ModelConfig, token, cache, index, **kw):
+    return _mod(cfg).decode_step(params, cfg, token, cache, index, **kw)
+
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int, dtype=None):
+    import jax.numpy as jnp
+    dtype = dtype if dtype is not None else jnp.bfloat16
+    return _mod(cfg).init_cache(cfg, batch, capacity, dtype)

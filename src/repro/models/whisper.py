@@ -1,0 +1,281 @@
+"""Whisper-style encoder-decoder backbone (conv frontend STUBBED).
+
+Per the assignment, the modality frontend is a stub: ``input_specs`` /
+callers provide precomputed frame embeddings (B, n_frames, D) in place of
+the log-mel conv stack.  What we build faithfully is the transformer:
+
+  encoder : n_enc_layers x [LN -> bidirectional MHA -> LN -> GELU MLP]
+  decoder : n_layers     x [LN -> causal self-MHA (cached)
+                             -> LN -> cross-MHA over encoder states
+                             -> LN -> GELU MLP]
+
+Whisper fidelity notes: pre-LN LayerNorm (not RMSNorm), GELU MLP, biased
+projections, learned decoder position embeddings, sinusoidal encoder
+positions (added by the stub frontend upstream, so omitted here).
+
+Decode-time caches:
+  self-attn : standard per-layer KV cache over generated tokens
+  cross-attn: K/V of the encoder states, computed ONCE at prefill — the
+    extreme "reuse" point of the paper's recompute/reuse spectrum (zero
+    marginal FLOPs per step, pure streaming), called out in DESIGN.md §5.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import cache as cachelib
+from ..core.attention import gqa_attention, gqa_decode
+from ..core.chunked_attention import chunked_attention_pairs
+from ..nn import layers as nl
+from ..nn import module as nnm
+from ..nn.module import P
+from .common import ModelConfig
+
+
+# ------------------------------------------------------------------ defs ---
+
+
+def _attn_defs(cfg: ModelConfig) -> Dict:
+    D, H, dh = cfg.d_model, cfg.n_heads, cfg.resolved_head_dim
+    return {
+        "w_q": P((D, H, dh), ("embed", "heads", None)),
+        "b_q": P((H, dh), ("heads", None), init="zeros"),
+        "w_k": P((D, H, dh), ("embed", "heads", None)),
+        "w_v": P((D, H, dh), ("embed", "heads", None)),
+        "b_v": P((H, dh), ("heads", None), init="zeros"),
+        "w_o": P((H, dh, D), ("heads", None, "embed")),
+        "b_o": P((D,), (None,), init="zeros"),
+    }
+
+
+def _enc_layer_defs(cfg: ModelConfig) -> Dict:
+    return {
+        "ln1": nl.layernorm_defs(cfg.d_model),
+        "attn": _attn_defs(cfg),
+        "ln2": nl.layernorm_defs(cfg.d_model),
+        "mlp": nl.mlp_defs(cfg.d_model, cfg.d_ff, kind="gelu", bias=True),
+    }
+
+
+def _dec_layer_defs(cfg: ModelConfig) -> Dict:
+    return {
+        "ln1": nl.layernorm_defs(cfg.d_model),
+        "self_attn": _attn_defs(cfg),
+        "ln_x": nl.layernorm_defs(cfg.d_model),
+        "cross_attn": _attn_defs(cfg),
+        "ln2": nl.layernorm_defs(cfg.d_model),
+        "mlp": nl.mlp_defs(cfg.d_model, cfg.d_ff, kind="gelu", bias=True),
+    }
+
+
+def whisper_defs(cfg: ModelConfig) -> Dict:
+    d: Dict = {
+        "embed": nl.embed_defs(cfg.vocab, cfg.d_model),
+        "pos_dec": P((cfg.max_seq, cfg.d_model), (None, "embed"),
+                     init="normal", scale=0.02),
+        "ln_enc": nl.layernorm_defs(cfg.d_model),
+        "ln_dec": nl.layernorm_defs(cfg.d_model),
+    }
+    d["encoder"] = nnm.stack_defs(_enc_layer_defs(cfg), cfg.n_enc_layers, "layers")
+    d["decoder"] = nnm.stack_defs(_dec_layer_defs(cfg), cfg.n_layers, "layers")
+    return d
+
+
+def param_count(cfg: ModelConfig) -> int:
+    return nnm.count_params(whisper_defs(cfg))
+
+
+# ------------------------------------------------------------- attention ---
+
+
+def _proj_qkv(params, x, which=("q", "k", "v")):
+    outs = []
+    for n in which:
+        y = jnp.einsum("bld,dhk->blhk", x, params[f"w_{n}"].astype(x.dtype))
+        if f"b_{n}" in params:
+            y = y + params[f"b_{n}"].astype(x.dtype)
+        outs.append(y)
+    return outs
+
+
+def _out_proj(params, o, dtype):
+    return jnp.einsum("blhk,hkd->bld", o, params["w_o"].astype(dtype)) \
+        + params["b_o"].astype(dtype)
+
+
+def _mha(params, x, kv_src, *, causal: bool, impl: str = "ref") -> jax.Array:
+    """Full-sequence MHA; kv_src=x for self, encoder states for cross."""
+    q, = _proj_qkv(params, x, ("q",))
+    k, v = _proj_qkv(params, kv_src, ("k", "v"))
+    if impl == "chunked" and causal:   # long causal self-attn: bound memory
+        o = chunked_attention_pairs(q, k, v, True, None, 0, None)
+    else:
+        o = gqa_attention(q, k, v, causal=causal)
+    return _out_proj(params, o, x.dtype)
+
+
+# ----------------------------------------------------------------- model ---
+
+
+def encode(params, cfg: ModelConfig, frames) -> jax.Array:
+    """frames: (B, n_frames, D) precomputed stub embeddings -> enc states."""
+    x = frames
+
+    def layer(x, p):
+        h = nl.layernorm(p["ln1"], x)
+        x = x + _mha(p["attn"], h, h, causal=False)
+        h = nl.layernorm(p["ln2"], x)
+        x = x + nl.mlp(p["mlp"], h, kind="gelu")
+        return x, ()
+
+    body = layer
+    if cfg.remat:
+        body = jax.checkpoint(layer)
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return nl.layernorm(params["ln_enc"], x)
+
+
+def _dec_embed(params, cfg: ModelConfig, tokens, pos_start):
+    x = nl.embed(params["embed"], tokens, jnp.bfloat16)
+    L = tokens.shape[1]
+    pos = jax.lax.dynamic_slice_in_dim(params["pos_dec"], pos_start, L, 0)
+    return (x + pos.astype(x.dtype)[None]).astype(x.dtype)
+
+
+def decoder_forward(params, cfg: ModelConfig, tokens, enc_states,
+                    *, compute_dtype=jnp.bfloat16, impl: str = "ref",
+                    return_hidden: bool = False) -> jax.Array:
+    """Teacher-forced decoder pass. tokens: (B, L) -> logits (B, L, V)."""
+    x = _dec_embed(params, cfg, tokens, 0).astype(compute_dtype)
+    enc = enc_states.astype(compute_dtype)
+
+    def layer(x, p):
+        h = nl.layernorm(p["ln1"], x)
+        x = x + _mha(p["self_attn"], h, h, causal=True, impl=impl)
+        h = nl.layernorm(p["ln_x"], x)
+        x = x + _mha(p["cross_attn"], h, enc, causal=False)
+        h = nl.layernorm(p["ln2"], x)
+        x = x + nl.mlp(p["mlp"], h, kind="gelu")
+        return x, ()
+
+    body = layer
+    if cfg.remat:
+        body = jax.checkpoint(layer)
+    x, _ = jax.lax.scan(body, x, params["decoder"])
+    x = nl.layernorm(params["ln_dec"], x)
+    if return_hidden:
+        return x
+    return nl.unembed(params["embed"], x)
+
+
+def forward(params, cfg: ModelConfig, tokens, *, embeds=None,
+            compute_dtype=jnp.bfloat16, impl: str = "ref",
+            return_hidden: bool = False, **_unused) -> Tuple[jax.Array, Dict]:
+    """Training forward: encoder on stub frames + teacher-forced decoder.
+    embeds: (B, n_frames, D) stub frame embeddings (required)."""
+    enc = encode(params, cfg, embeds.astype(compute_dtype))
+    logits = decoder_forward(params, cfg, tokens, enc,
+                             compute_dtype=compute_dtype, impl=impl,
+                             return_hidden=return_hidden)
+    aux = {"balance": jnp.float32(0), "z_loss": jnp.float32(0),
+           "dropped_frac": jnp.float32(0)}
+    return logits, aux
+
+
+# ---------------------------------------------------------------- serving --
+
+
+def _cross_kv(params_layer, enc):
+    """Precompute cross-attn K/V from encoder states (once per request)."""
+    k, v = _proj_qkv(params_layer["cross_attn"], enc, ("k", "v"))
+    return k, v
+
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int,
+               dtype=jnp.bfloat16) -> Dict:
+    H, dh, NL = cfg.n_heads, cfg.resolved_head_dim, cfg.n_layers
+    return {
+        "self": {
+            "k": jnp.zeros((NL, batch, capacity, H, dh), dtype),
+            "v": jnp.zeros((NL, batch, capacity, H, dh), dtype),
+        },
+        "cross": {
+            "k": jnp.zeros((NL, batch, cfg.n_frames, H, dh), dtype),
+            "v": jnp.zeros((NL, batch, cfg.n_frames, H, dh), dtype),
+        },
+    }
+
+
+def prefill(params, cfg: ModelConfig, tokens, *, embeds=None, capacity: int = 0,
+            compute_dtype=jnp.bfloat16, impl: str = "ref",
+            **_unused) -> Tuple[jax.Array, Dict]:
+    """Encode stub frames, precompute cross K/V, run the decoder prompt.
+    Returns (last-token logits, cache)."""
+    B, L = tokens.shape
+    cap = capacity or L
+    enc = encode(params, cfg, embeds.astype(compute_dtype))
+    x = _dec_embed(params, cfg, tokens, 0).astype(compute_dtype)
+
+    def layer(x, p):
+        ck, cv = _cross_kv(p, enc)
+        h = nl.layernorm(p["ln1"], x)
+        q, = _proj_qkv(p["self_attn"], h, ("q",))
+        k, v = _proj_qkv(p["self_attn"], h, ("k", "v"))
+        if impl == "chunked":
+            o = chunked_attention_pairs(q, k, v, True, None, 0, None)
+        else:
+            o = gqa_attention(q, k, v, causal=True)
+        x = x + _out_proj(p["self_attn"], o, x.dtype)
+        h = nl.layernorm(p["ln_x"], x)
+        q, = _proj_qkv(p["cross_attn"], h, ("q",))
+        o = gqa_attention(q, ck, cv, causal=False)
+        x = x + _out_proj(p["cross_attn"], o, x.dtype)
+        h = nl.layernorm(p["ln2"], x)
+        x = x + nl.mlp(p["mlp"], h, kind="gelu")
+        pad = lambda a: jnp.pad(a, ((0, 0), (0, cap - L), (0, 0), (0, 0)))
+        return x, (pad(k), pad(v), ck, cv)
+
+    x, (ks, vs, cks, cvs) = jax.lax.scan(layer, x, params["decoder"])
+    x = nl.layernorm(params["ln_dec"], x)
+    logits = nl.unembed(params["embed"], x[:, -1])
+    cache = {"self": {"k": ks, "v": vs}, "cross": {"k": cks, "v": cvs}}
+    return logits, cache
+
+
+def decode_step(params, cfg: ModelConfig, token, cache, index, *,
+                compute_dtype=jnp.bfloat16, **_unused) -> Tuple[jax.Array, Dict]:
+    """One decoder token. token: (B,), index: current cache length."""
+    x = _dec_embed(params, cfg, token[:, None], index)[:, 0].astype(compute_dtype)
+
+    def layer(x, slices):
+        p, ks, vs, ck, cv = slices
+        h = nl.layernorm(p["ln1"], x[:, None])[:, 0]
+        q = jnp.einsum("bd,dhk->bhk", h, p["self_attn"]["w_q"].astype(x.dtype)) \
+            + p["self_attn"]["b_q"].astype(x.dtype)
+        k = jnp.einsum("bd,dhk->bhk", h, p["self_attn"]["w_k"].astype(x.dtype))
+        v = jnp.einsum("bd,dhk->bhk", h, p["self_attn"]["w_v"].astype(x.dtype)) \
+            + p["self_attn"]["b_v"].astype(x.dtype)
+        new = cachelib.update_kv({"k": ks, "v": vs}, k[:, None], v[:, None], index)
+        o = gqa_decode(q, new["k"], new["v"], index)
+        x = x + (jnp.einsum("bhk,hkd->bd", o, p["self_attn"]["w_o"].astype(x.dtype))
+                 + p["self_attn"]["b_o"].astype(x.dtype))
+        h = nl.layernorm(p["ln_x"], x[:, None])[:, 0]
+        q = jnp.einsum("bd,dhk->bhk", h, p["cross_attn"]["w_q"].astype(x.dtype)) \
+            + p["cross_attn"]["b_q"].astype(x.dtype)
+        o = gqa_decode(q, ck, cv, ck.shape[1] - 1)   # all frames valid
+        x = x + (jnp.einsum("bhk,hkd->bd", o, p["cross_attn"]["w_o"].astype(x.dtype))
+                 + p["cross_attn"]["b_o"].astype(x.dtype))
+        h = nl.layernorm(p["ln2"], x[:, None])[:, 0]
+        x = x + nl.mlp(p["mlp"], h, kind="gelu")
+        return x, (new["k"], new["v"])
+
+    x, (ks, vs) = jax.lax.scan(
+        layer, x, (params["decoder"], cache["self"]["k"], cache["self"]["v"],
+                   cache["cross"]["k"], cache["cross"]["v"]))
+    x = nl.layernorm(params["ln_dec"], x[:, None])[:, 0]
+    logits = nl.unembed(params["embed"], x)
+    return logits, {"self": {"k": ks, "v": vs}, "cross": cache["cross"]}

@@ -1,0 +1,197 @@
+"""xLSTM mixers: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, strictly sequential scan).
+
+TPU adaptation (DESIGN.md §3): the mLSTM recurrence
+    C_t = f_t C_{t-1} + i_t v_t k_t^T ,  y_t = (q_t C_t) / max(|q_t n_t|, 1)
+is evaluated in *chunkwise-parallel* form (GLA-style): within a chunk the
+decay-weighted attention matrix P[t,s] = exp(F_t - F_s) i_s (q_t.k_s) is
+computed densely (F = cumulative log-decay, monotone decreasing => the
+exponent is <= 0, numerically stable), and the matrix state C / normalizer
+n carry across chunks via a small sequential scan.  This is the TPU-native
+equivalent of the fused CUDA kernel in the xLSTM reference.
+
+Simplifications vs the paper (noted per DESIGN.md): sigmoid input gate
+(instead of exponential-with-stabilizer) for mLSTM; sLSTM keeps the
+exponential gating with the m-stabilizer but uses full (non-block-diagonal)
+recurrent weights.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..nn.module import P
+from .common import ModelConfig
+
+CHUNK = 128
+
+
+# ------------------------------------------------------------- mLSTM -------
+
+
+def mlstm_defs(cfg: ModelConfig) -> Dict:
+    D, dI, H = cfg.d_model, cfg.d_inner, cfg.n_heads
+    dh = dI // H
+    return {
+        "up": P((D, 2, dI), ("embed", None, "mlp")),
+        "qkv": P((dI, H, 3, dh), ("mlp", None, None, None)),
+        "gates": P((dI, H, 2), ("mlp", None, None), init="normal", scale=0.02),
+        "gate_bias": P((H, 2), (None, None), init="zeros"),
+        "out": P((dI, D), ("mlp", "embed")),
+    }
+
+
+def _mlstm_qkvif(params, cfg, x_m):
+    """x_m: (..., dI) -> q,k,v (...,H,dh) f32; log_f, i (...,H) f32."""
+    dh = cfg.d_inner // cfg.n_heads
+    qkv = jnp.einsum("...i,ihcj->...hcj", x_m, params["qkv"].astype(x_m.dtype))
+    q, k, v = (qkv[..., 0, :].astype(jnp.float32),
+               qkv[..., 1, :].astype(jnp.float32) * dh ** -0.5,
+               qkv[..., 2, :].astype(jnp.float32))
+    g = jnp.einsum("...i,ihc->...hc", x_m, params["gates"].astype(x_m.dtype)
+                   ).astype(jnp.float32) + params["gate_bias"].astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(g[..., 0])      # forget gate in log space
+    i_g = jax.nn.sigmoid(g[..., 1])            # input gate (stable sigmoid)
+    return q, k, v, log_f, i_g
+
+
+def mlstm_forward(params, cfg: ModelConfig, x, *, return_state: bool = False):
+    B, L, D = x.shape
+    H = cfg.n_heads
+    dh = cfg.d_inner // H
+    up = jnp.einsum("bld,dcj->blcj", x, params["up"].astype(x.dtype))
+    x_m, z = up[:, :, 0], up[:, :, 1]
+    q, k, v, log_f, i_g = _mlstm_qkvif(params, cfg, x_m)
+
+    n_chunks = max(1, L // CHUNK)
+    c = L // n_chunks
+    rs = lambda a: a.reshape((B, n_chunks, c) + a.shape[2:]).swapaxes(0, 1)
+    qc, kc, vc, lfc, igc = map(rs, (q, k, v, log_f, i_g))
+
+    def chunk(carry, inp):
+        C0, n0 = carry                       # (B,H,dh,dh), (B,H,dh)
+        q_, k_, v_, lf, ig = inp             # (B,c,H,dh)... (B,c,H)
+        F = jnp.cumsum(lf, axis=1)           # (B,c,H) cumulative log decay
+        # cross-chunk: y_t += exp(F_t) q_t C0 ; denom += exp(F_t) q_t n0
+        qF = q_ * jnp.exp(F)[..., None]
+        cross = jnp.einsum("bchd,bhde->bche", qF, C0)
+        cross_n = jnp.einsum("bchd,bhd->bch", qF, n0)
+        # intra-chunk: P[t,s] = exp(F_t - F_s) i_s (q_t . k_s), s <= t
+        logdiff = F[:, :, None] - F[:, None]           # (B,c,c,H) t,s
+        mask = jnp.tril(jnp.ones((c, c), bool))
+        w = jnp.where(mask[None, :, :, None], jnp.exp(logdiff), 0.0)
+        s = jnp.einsum("bthd,bshd->btsh", q_, k_)
+        Pm = s * w * ig[:, None]                        # i_s -> broadcast s
+        y = cross + jnp.einsum("btsh,bshd->bthd", Pm, v_)
+        denom = cross_n + jnp.sum(Pm, axis=2)           # (B,c,H)
+        y = y / jnp.maximum(jnp.abs(denom), 1.0)[..., None]
+        # state to end of chunk
+        decay_tail = jnp.exp(F[:, -1:] - F)             # exp(F_c - F_s)
+        kw = k_ * (decay_tail * ig)[..., None]
+        C1 = C0 * jnp.exp(F[:, -1])[..., None, None] + jnp.einsum(
+            "bshd,bshe->bhde", kw, v_)
+        n1 = n0 * jnp.exp(F[:, -1])[..., None] + jnp.sum(kw, axis=1)
+        return (C1, n1), y
+
+    C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, H, dh), jnp.float32)
+    (C1, n1), ys = jax.lax.scan(chunk, (C0, n0), (qc, kc, vc, lfc, igc))
+    y = ys.swapaxes(0, 1).reshape(B, L, H * dh)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = y @ params["out"].astype(x.dtype)
+    state = {"C": C1, "n": n1} if return_state else None
+    return out, state
+
+
+def mlstm_step(params, cfg: ModelConfig, x_t, state):
+    """x_t: (B, D); state {'C': (B,H,dh,dh), 'n': (B,H,dh)} (f32)."""
+    H = cfg.n_heads
+    dh = cfg.d_inner // H
+    up = jnp.einsum("bd,dcj->bcj", x_t, params["up"].astype(x_t.dtype))
+    x_m, z = up[:, 0], up[:, 1]
+    q, k, v, log_f, i_g = _mlstm_qkvif(params, cfg, x_m)
+    f = jnp.exp(log_f)                                   # (B,H)
+    C = state["C"] * f[..., None, None] + i_g[..., None, None] * (
+        k[..., :, None] * v[..., None, :])
+    n = state["n"] * f[..., None] + i_g[..., None] * k
+    y = jnp.einsum("bhd,bhde->bhe", q, C)
+    denom = jnp.einsum("bhd,bhd->bh", q, n)
+    y = y / jnp.maximum(jnp.abs(denom), 1.0)[..., None]
+    y = y.reshape(y.shape[0], -1)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x_t.dtype)
+    return y @ params["out"].astype(x_t.dtype), {"C": C, "n": n}
+
+
+def mlstm_state_init(cfg: ModelConfig, batch: int) -> Dict:
+    H, dh = cfg.n_heads, cfg.d_inner // cfg.n_heads
+    return {"C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, H, dh), jnp.float32)}
+
+
+# ------------------------------------------------------------- sLSTM -------
+
+
+def slstm_defs(cfg: ModelConfig) -> Dict:
+    D = cfg.d_model
+    return {
+        "wx": P((D, 4, D), ("embed", None, "mlp")),
+        "rh": P((D, 4, D), ("mlp", None, None), init="normal", scale=0.02),
+        "bias": P((4, D), (None, "mlp"), init="zeros"),
+        "out": P((D, D), ("mlp", "embed")),
+    }
+
+
+def _slstm_cell(params, x_row, h, c, n, m):
+    """One step; all f32 (B, D)."""
+    g = (x_row + jnp.einsum("bd,dcj->bcj", h, params["rh"].astype(jnp.float32))
+         + params["bias"].astype(jnp.float32))
+    log_i = g[:, 0]                      # input gate (log space)
+    log_f = jax.nn.log_sigmoid(g[:, 1])  # forget gate
+    z = jnp.tanh(g[:, 2])
+    o = jax.nn.sigmoid(g[:, 3])
+    m_new = jnp.maximum(log_f + m, log_i)
+    i_p = jnp.exp(log_i - m_new)
+    f_p = jnp.exp(log_f + m - m_new)
+    c_new = f_p * c + i_p * z
+    n_new = f_p * n + i_p
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return h_new, c_new, n_new, m_new
+
+
+def slstm_forward(params, cfg: ModelConfig, x, *, return_state: bool = False):
+    B, L, D = x.shape
+    xw = jnp.einsum("bld,dcj->blcj", x, params["wx"].astype(x.dtype)
+                    ).astype(jnp.float32)
+
+    def step(carry, x_row):
+        h, c, n, m = carry
+        h, c, n, m = _slstm_cell(params, x_row, h, c, n, m)
+        return (h, c, n, m), h
+
+    init = tuple(jnp.zeros((B, D), jnp.float32) for _ in range(3)) + (
+        jnp.full((B, D), -1e30, jnp.float32),)
+    carry, hs = jax.lax.scan(step, init, xw.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).astype(x.dtype)
+    out = y @ params["out"].astype(x.dtype)
+    if not return_state:
+        return out, None
+    h, c, n, m = carry
+    return out, {"h": h, "c": c, "n": n, "m": m}
+
+
+def slstm_step(params, cfg: ModelConfig, x_t, state):
+    xw = jnp.einsum("bd,dcj->bcj", x_t, params["wx"].astype(x_t.dtype)
+                    ).astype(jnp.float32)
+    h, c, n, m = _slstm_cell(params, xw, state["h"], state["c"],
+                             state["n"], state["m"])
+    out = h.astype(x_t.dtype) @ params["out"].astype(x_t.dtype)
+    return out, {"h": h, "c": c, "n": n, "m": m}
+
+
+def slstm_state_init(cfg: ModelConfig, batch: int) -> Dict:
+    D = cfg.d_model
+    z = lambda: jnp.zeros((batch, D), jnp.float32)
+    return {"h": z(), "c": z(), "n": z(),
+            "m": jnp.full((batch, D), -1e30, jnp.float32)}

@@ -1,0 +1,7 @@
+from . import layers, module, sharding
+from .module import P, init_params, logical_axes, count_params, shapes, stack_defs
+
+__all__ = [
+    "layers", "module", "sharding", "P",
+    "init_params", "logical_axes", "count_params", "shapes", "stack_defs",
+]

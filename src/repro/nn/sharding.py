@@ -1,0 +1,161 @@
+"""Logical-axis -> mesh-axis rules (MaxText-style), and spec utilities.
+
+Mesh axes:
+  single-pod : ('data', 'model')                    16 x 16 = 256 chips
+  multi-pod  : ('pod', 'data', 'model')             2 x 16 x 16 = 512 chips
+
+Logical axes used by the model zoo:
+
+  'batch'    activation batch                -> DP over ('pod','data')
+  'embed'    d_model dim of weights          -> FSDP over ('pod','data') [train]
+  'vocab'    embedding-table / logits vocab  -> 'model'
+  'heads'    attention heads                 -> 'model'
+  'kv_heads' kv heads (GQA)                  -> 'model' when divisible else None
+  'mlp'      ffn hidden                      -> 'model'
+  'experts'  MoE expert dim                  -> 'model'  (expert parallelism)
+  'q_lora'/'kv_lora'  MLA latent dims        -> None (small, replicated)
+  'layers'   scan dim of stacked weights     -> None
+  'seq'      sequence dim of activations     -> None ('data' for long-decode
+                                                distributed flash-decode)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from . import module as nnm
+
+Rules = Dict[str, Any]
+
+
+def make_rules(mesh: Mesh, *, mode: str = "train", cfg=None) -> Rules:
+    """Sharding policy.
+
+    mode='train'      FSDP (weights' embed dim over DP axes, ZeRO-3) + TP
+                      over 'model' — the throughput-optimal policy when
+                      every step touches all weights with large batches.
+    mode='serve'      same layout (baseline; weights are re-gathered every
+                      step — the measured collective bottleneck of the
+                      baseline decode cells, EXPERIMENTS.md §Perf A0).
+    mode='serve_2dtp' beyond-paper serving policy: NO data-axis dim on any
+                      weight's contracting-with-x dim; instead weights are
+                      2D-sharded over ('model' x 'data') on head/expert/ffn
+                      and lora dims, so they stay RESIDENT and per-step
+                      collectives are activation-sized (decode activations
+                      are tiny).  See EXPERIMENTS.md §Perf A1.
+    mode='dp'         pure data-parallel: small models (xlstm-350m) pay
+                      more for FSDP/TP collectives than the weights are
+                      worth; replicate weights, shard batch only.
+                      See EXPERIMENTS.md §Perf C1.
+
+    ``cfg`` (a ModelConfig) enables divisibility adjustment: any logical
+    axis whose dimension does not divide by its mesh axis size falls back
+    to replication (e.g. gemma3's 4 heads or granite's MQA kv=1 cannot
+    shard over a 16-way 'model' axis)."""
+    axes = mesh.axis_names
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp_axes = tuple(a for a in ("pod", "data") if a in axes)
+    dp: Any = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+    dp_size = 1
+    for a in dp_axes:
+        dp_size *= sizes[a]
+    model_size = sizes.get("model", 1)
+    rules: Rules = {
+        "batch": dp,
+        "embed": dp,  # ZeRO-3 / FSDP weight sharding
+        "vocab": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "mlp": "model",
+        "experts": "model",
+        "q_lora": None,
+        "kv_lora": None,
+        "layers": None,
+        "seq": None,
+        "act_embed": None,   # activation d_model dim
+        "act_heads": "model",
+        "cache_seq": None,   # 'model' for serve_2dtp distributed decode
+        "expert_mlp": None,
+    }
+    if mode == "dp":
+        rules.update({"embed": None, "vocab": None, "heads": None,
+                      "kv_heads": None, "mlp": None, "experts": None,
+                      "act_heads": None})
+        return rules
+    if mode == "tp":
+        # TP without FSDP: small models whose weights fit replicated-over-
+        # data; keeps model-axis compute sharding, drops the per-layer
+        # weight re-gathers (EXPERIMENTS.md §Perf C3).
+        rules["embed"] = None
+    if mode == "serve_2dtp":
+        data_ax = "data" if "data" in axes else None
+        rules.update({
+            "embed": None,                 # weights resident, not FSDP
+            "q_lora": data_ax,             # MLA q path 2D: lora x heads
+            "expert_mlp": data_ax,         # MoE experts 2D: E x F
+            "mlp": (("model",) + ((data_ax,) if data_ax else ()))
+            if cfg is None or not cfg.n_experts else "model",
+            "cache_seq": "model",          # distributed flash-decode
+        })
+    if cfg is not None:
+        def rule_size(axis):
+            r = rules[axis]
+            names = r if isinstance(r, tuple) else (r,) if r else ()
+            n = 1
+            for a in names:
+                n *= sizes.get(a, 1)
+            return n
+
+        def fallback(axis, dim, downgrade=None):
+            if rules[axis] and dim % rule_size(axis) != 0:
+                rules[axis] = downgrade
+
+        fallback("embed", cfg.d_model)
+        fallback("vocab", cfg.vocab)
+        fallback("heads", cfg.n_heads)
+        fallback("kv_heads", cfg.n_kv_heads)
+        if rules["heads"] is None:
+            rules["act_heads"] = None
+        mlp_dims = [d for d in (cfg.d_ff, cfg.d_inner if cfg.family in
+                                ("hybrid", "ssm") else 0,
+                                cfg.first_dense_d_ff,
+                                cfg.n_shared_experts * cfg.moe_d_ff) if d]
+        for d in mlp_dims:
+            fallback("mlp", d, "model" if isinstance(rules["mlp"], tuple)
+                     and d % model_size == 0 else None)
+        if cfg.n_experts:
+            fallback("experts", cfg.n_experts)
+        if cfg.q_lora_rank:
+            fallback("q_lora", cfg.q_lora_rank)
+        if cfg.moe_d_ff:
+            fallback("expert_mlp", cfg.moe_d_ff)
+    return rules
+
+
+def spec(axes: Tuple[Optional[str], ...], rules: Rules) -> PartitionSpec:
+    return PartitionSpec(*[rules.get(a) if a is not None else None for a in axes])
+
+
+def param_specs(defs, rules: Rules):
+    """PartitionSpec tree for a P-def tree."""
+    return nnm.map_defs(lambda _, p: spec(p.axes, rules), defs)
+
+
+def param_shardings(defs, mesh: Mesh, rules: Rules):
+    return nnm.map_defs(
+        lambda _, p: NamedSharding(mesh, spec(p.axes, rules)), defs
+    )
+
+
+def logical_sharding(mesh: Mesh, rules: Rules, *axes: Optional[str]) -> NamedSharding:
+    return NamedSharding(mesh, spec(tuple(axes), rules))
+
+
+def with_constraint(x, rules: Rules, *axes: Optional[str]):
+    """Sharding constraint by logical axes (no-op outside jit/mesh)."""
+    try:
+        return jax.lax.with_sharding_constraint(x, spec(tuple(axes), rules))
+    except (ValueError, RuntimeError):
+        return x

@@ -1,0 +1,4 @@
+from .adamw import AdamWConfig, init as adamw_init, update as adamw_update, \
+    clip_by_global_norm, global_norm
+from .schedules import constant, cosine, linear_warmup
+from .compression import TopKConfig, compress, compression_ratio, init_error

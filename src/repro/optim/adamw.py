@@ -1,0 +1,79 @@
+"""AdamW optimizer as pure pytree functions (no optax dependency).
+
+State is a dict {step, mu, nu}; ``mu``/``nu`` mirror the param tree so the
+whole optimizer state inherits the params' PartitionSpecs (FSDP-sharded
+optimizer state = ZeRO).  fp32 master moments regardless of param dtype.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: Callable[[jax.Array], jax.Array] | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    # Moment dtype. bf16 moments halve optimizer HBM (398B-scale models do
+    # not fit fp32 moments on a 16 GB v5e even 512-way sharded — DESIGN §7);
+    # update math still runs in fp32.
+    moment_dtype: Any = jnp.float32
+
+
+def init(params, cfg: Optional["AdamWConfig"] = None) -> dict:
+    md = cfg.moment_dtype if cfg is not None else jnp.float32
+    zeros = lambda p: jnp.zeros(p.shape, md)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def update(cfg: AdamWConfig, params, grads, state):
+    """Returns (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state["step"] + 1
+    lr = cfg.lr(step) if callable(cfg.lr) else jnp.float32(cfg.lr)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32)
+        md = mu.dtype
+        mu = (b1 * mu.astype(jnp.float32) + (1 - b1) * g)
+        nu = (b2 * nu.astype(jnp.float32) + (1 - b2) * g * g)
+        mhat = mu / bc1
+        vhat = nu / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:  # decay matrices only (norms/bias exempt)
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * delta).astype(p.dtype),
+                mu.astype(md), nu.astype(md))
+
+    out = jax.tree.map(upd, params, grads, state["mu"], state["nu"])
+    # unzip the 3-tuples
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_state = {"step": step, "mu": new_mu, "nu": new_nu}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

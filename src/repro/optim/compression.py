@@ -1,0 +1,67 @@
+"""Error-feedback top-k gradient compression (distributed-optimization trick
+for slow inter-pod links; DESIGN.md §7).
+
+Standard EF-SGD/EF21 shape: each step, add the carried error to the fresh
+gradient, transmit only the top-k fraction of entries (by magnitude), and
+carry the residual.  On a real multi-pod deployment the sparse tensor is
+what crosses the slow pod-to-pod links (the dense all-reduce still runs
+over fast intra-pod ICI); here the compression operator itself is exact and
+unit-tested, and the transport saving is accounted analytically
+(``compression_ratio`` bytes) in the roofline report.
+
+The operator is applied per-leaf with a *per-leaf* k, keeps the mask dense
+(TPU-friendly: top-k via threshold on |g|, no scatter), and is fully
+deterministic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class TopKConfig:
+    fraction: float = 0.01          # keep top 1% of entries per leaf
+    min_elems: int = 1024           # leaves smaller than this pass through
+
+
+def init_error(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _compress_leaf(g, err, fraction: float, min_elems: int):
+    g = g.astype(jnp.float32) + err
+    n = g.size
+    if n < min_elems:
+        return g, jnp.zeros_like(g)
+    k = max(1, int(n * fraction))
+    flat = jnp.abs(g.reshape(-1))
+    # threshold = k-th largest magnitude; jax.lax.top_k on |g| (exact)
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    mask = (jnp.abs(g) >= thresh).astype(jnp.float32)
+    sent = g * mask
+    return sent, g - sent
+
+
+def compress(cfg: TopKConfig, grads, error):
+    """Returns (sparse_grads, new_error). sparse + error == grads + error_in."""
+    out = jax.tree.map(
+        lambda g, e: _compress_leaf(g, e, cfg.fraction, cfg.min_elems),
+        grads, error)
+    sent = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    err = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    return sent, err
+
+
+def compression_ratio(cfg: TopKConfig, params) -> float:
+    """Effective bytes ratio of the compressed all-reduce: top-k as
+    (value+index) pairs = k * 8 bytes vs n * 4 bytes dense."""
+    total_n, total_sent = 0, 0.0
+    for p in jax.tree.leaves(params):
+        n = p.size
+        total_n += n
+        total_sent += n if n < cfg.min_elems else max(1, int(n * cfg.fraction)) * 2
+    return total_sent / max(total_n, 1)

@@ -1,0 +1,3 @@
+from .steps import (TrainStepConfig, lm_loss, make_prefill_step,
+                    make_serve_step, make_train_step, cache_pspecs)
+from .loop import LoopConfig, SimulatedFailure, TrainLoop

@@ -1,0 +1,303 @@
+"""Jitted step builders: train_step / prefill_step / serve_step.
+
+These are the three entry points the dry-run lowers for every (arch x
+shape) cell.  All builders are mesh-aware: given (mesh, rules) they attach
+NamedShardings for params, optimizer state, inputs and decode caches, and
+jit with donation so cache/opt-state updates are in-place on device.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
+
+from .. import models
+from ..models.common import ModelConfig
+from ..nn import module as nnm
+from ..nn import sharding as shd
+from ..optim import AdamWConfig, adamw_update
+
+
+# ------------------------------------------------------------------ loss ---
+
+
+def _ce_terms(logits, labels):
+    """Σ masked CE and Σ mask over a (B, L, V) block (f32)."""
+    logits = logits.astype(jnp.float32)
+    mask = (labels >= 0).astype(jnp.float32)
+    labels_safe = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels_safe[..., None], axis=-1)[..., 0]
+    return jnp.sum((logz - gold) * mask), jnp.sum(mask)
+
+
+def lm_loss(params, cfg: ModelConfig, tokens, labels, *, embeds=None,
+            compute_dtype=jnp.bfloat16, impl: str = "ref", mesh=None,
+            scheme: str = "seq", loss_chunk: int = 0) -> Tuple[jax.Array, Dict]:
+    """Causal-LM cross entropy (+ MoE aux losses). labels = next tokens,
+    -100 entries are masked.  With a modality prefix (embeds: (B,P,D)),
+    only the text positions are scored.
+
+    ``loss_chunk > 0``: vocab-chunked CE — the (B, L, V) logits tensor is
+    never materialized; the final hidden states are unembedded and scored
+    ``loss_chunk`` positions at a time under a rematerialized scan (peak
+    live logits = B x loss_chunk x V).  Required at gemma3 scale
+    (V=262144) and a net memory win for every 4k+ train shape."""
+    if loss_chunk:
+        x, aux = models.forward(params, cfg, tokens, embeds=embeds,
+                                compute_dtype=compute_dtype, impl=impl,
+                                mesh=mesh, scheme=scheme, return_hidden=True)
+        P = x.shape[1] - labels.shape[1]
+        if P > 0:
+            x = x[:, P:]
+        B, L, D = x.shape
+        c = min(loss_chunk, L)
+        pad = -L % c
+        if pad:
+            x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+            labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-100)
+        n = x.shape[1] // c
+        xs = x.reshape(B, n, c, D).swapaxes(0, 1)
+        ls = labels.reshape(B, n, c).swapaxes(0, 1)
+
+        def body(carry, inp):
+            xc, lc = inp
+            from ..nn import layers as nl
+            logits_c = nl.unembed(params_embed, xc)
+            s, m = _ce_terms(logits_c, lc)
+            return (carry[0] + s, carry[1] + m), ()
+
+        params_embed = params["embed"]
+        body = jax.checkpoint(body)
+        (ce_sum, n_tok), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)),
+                                          (xs, ls))
+        ce = ce_sum / jnp.maximum(n_tok, 1.0)
+    else:
+        logits, aux = models.forward(params, cfg, tokens, embeds=embeds,
+                                     compute_dtype=compute_dtype, impl=impl,
+                                     mesh=mesh, scheme=scheme)
+        P = logits.shape[1] - labels.shape[1]
+        if P > 0:
+            logits = logits[:, P:]
+        ce_sum, n_tok = _ce_terms(logits, labels)
+        ce = ce_sum / jnp.maximum(n_tok, 1.0)
+    loss = ce
+    if cfg.n_experts:
+        loss = loss + cfg.router_aux_coef * aux["balance"] + 1e-3 * aux["z_loss"]
+    metrics = {"loss": loss, "ce": ce, **{k: jnp.asarray(v) for k, v in aux.items()}}
+    return loss, metrics
+
+
+# ------------------------------------------------------------ train step ---
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainStepConfig:
+    microbatches: int = 1           # grad accumulation
+    compute_dtype: Any = jnp.bfloat16
+    impl: str = "ref"
+    scheme: str = "seq"
+    loss_chunk: int = 0             # vocab-chunked CE (0 = dense logits)
+    remat_policy: str = "default"
+
+
+def make_train_step(cfg: ModelConfig, mesh: Optional[Mesh], opt_cfg: AdamWConfig,
+                    ts: TrainStepConfig = TrainStepConfig(),
+                    policy: str = "train"):
+    """Returns (step_fn, shardings) — step_fn(params, opt_state, batch) ->
+    (params, opt_state, metrics).  batch: {tokens, labels[, embeds]}.
+    policy='dp' replicates weights (small models; see nn.sharding)."""
+    rules = shd.make_rules(mesh, mode=policy, cfg=cfg) if mesh is not None else None
+    defs = models.model_defs(cfg)
+
+    def grads_of(params, batch):
+        fn = functools.partial(lm_loss, cfg=cfg,
+                               compute_dtype=ts.compute_dtype, impl=ts.impl,
+                               mesh=mesh, scheme=ts.scheme,
+                               loss_chunk=ts.loss_chunk)
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: fn(p, tokens=batch["tokens"], labels=batch["labels"],
+                         embeds=batch.get("embeds")), has_aux=True)(params)
+        return grads, metrics
+
+    def step(params, opt_state, batch):
+        if ts.microbatches > 1:
+            mb = ts.microbatches
+            split = jax.tree.map(
+                lambda x: x.reshape((mb, x.shape[0] // mb) + x.shape[1:]), batch)
+
+            def accum(carry, mbatch):
+                g_sum, m_sum = carry
+                g, m = grads_of(params, mbatch)
+                return (jax.tree.map(jnp.add, g_sum, g),
+                        jax.tree.map(jnp.add, m_sum, m)), ()
+
+            zeros_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            zeros_m = {"loss": 0.0, "ce": 0.0, "balance": 0.0, "z_loss": 0.0,
+                       "dropped_frac": 0.0}
+            zeros_m = jax.tree.map(jnp.float32, zeros_m)
+            (g, m), _ = jax.lax.scan(accum, (zeros_g, zeros_m), split)
+            grads = jax.tree.map(lambda x: x / mb, g)
+            metrics = jax.tree.map(lambda x: x / mb, m)
+        else:
+            grads, metrics = grads_of(params, batch)
+        params, opt_state, opt_metrics = adamw_update(opt_cfg, params, grads, opt_state)
+        return params, opt_state, {**metrics, **opt_metrics}
+
+    if mesh is None:
+        return jax.jit(step, donate_argnums=(0, 1)), None
+
+    pspecs = shd.param_specs(defs, rules)
+    p_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+    opt_shard = {"step": NamedSharding(mesh, PS()), "mu": p_shard, "nu": p_shard}
+    dp = rules["batch"]
+    batch_shard = {
+        "tokens": NamedSharding(mesh, PS(dp, None)),
+        "labels": NamedSharding(mesh, PS(dp, None)),
+    }
+    if cfg.family in ("vlm", "encdec"):    # stub modality prefix
+        batch_shard["embeds"] = NamedSharding(mesh, PS(dp, None, None))
+    metrics_shard = NamedSharding(mesh, PS())
+    step_fn = jax.jit(
+        step,
+        in_shardings=(p_shard, opt_shard, batch_shard),
+        out_shardings=(p_shard, opt_shard, None),
+        donate_argnums=(0, 1),
+    )
+    return step_fn, {"params": p_shard, "opt": opt_shard, "batch": batch_shard}
+
+
+# ------------------------------------------------------- serve/prefill -----
+
+
+def cache_pspecs(cache_tree, rules, *, family: str = "dense",
+                 batch_spec=None, seq_spec=None, seq_len: int = 0):
+    """PartitionSpec tree for a decode cache.
+
+    Path-aware: leaves named 'kv'/'k'/'v' carry a sequence dim right after
+    the batch dim; SSM/conv/xLSTM states do not.  Stacked (scan) caches
+    ('period' subtree; all of whisper's) have a leading layer dim.
+
+    batch_spec — mesh axes for the batch dim (None to replicate, e.g.
+                 batch=1 long-decode).
+    seq_spec   — mesh axis for the cache SEQ dim (distributed flash-decode:
+                 each shard scores its cache span; GSPMD combines the
+                 partial softmax with small all-reduces).  Applied only to
+                 leaves whose seq dim equals ``seq_len`` (whisper's cross
+                 cache keeps its n_frames dim whole).
+    """
+    from jax.tree_util import DictKey, tree_map_with_path
+    seq_leaves = {"kv", "k", "v", "ckv", "krope"}
+
+    def spec_of(path, a):
+        keys = [p.key for p in path if isinstance(p, DictKey)]
+        stacked = (keys and keys[0] in ("period", "self", "cross")) \
+            or family == "encdec"
+        b_ax = 1 if stacked else 0
+        nd = a.ndim
+        axes = [None] * nd
+        if nd > b_ax:
+            axes[b_ax] = batch_spec
+        if seq_spec and keys and keys[-1] in seq_leaves and nd > b_ax + 1 \
+                and (not seq_len or a.shape[b_ax + 1] == seq_len):
+            axes[b_ax + 1] = seq_spec
+        return PS(*axes)
+
+    return tree_map_with_path(spec_of, cache_tree)
+
+
+def _dp_size(mesh: Mesh) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = 1
+    for a in ("pod", "data"):
+        n *= sizes.get(a, 1)
+    return n
+
+
+def _batch_spec(mesh: Mesh, rules, batch: int):
+    """DP spec for the batch dim, or None when not divisible (batch=1)."""
+    return rules["batch"] if batch % _dp_size(mesh) == 0 else None
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Optional[Mesh],
+                      *, batch: int, capacity: int, compute_dtype=jnp.bfloat16,
+                      impl: str = "ref", scheme: str = "seq",
+                      policy: str = "serve"):
+    """Returns jitted fn(params, tokens[, embeds]) -> (last_logits, cache)."""
+    rules = shd.make_rules(mesh, mode=policy, cfg=cfg) if mesh is not None else None
+
+    def run(params, tokens, embeds=None):
+        return models.prefill(params, cfg, tokens, embeds=embeds,
+                              capacity=capacity, compute_dtype=compute_dtype,
+                              impl=impl, mesh=mesh, scheme=scheme,
+                              shard_mode=policy)
+
+    if mesh is None:
+        return jax.jit(run)
+    defs = models.model_defs(cfg)
+    p_shard = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                           shd.param_specs(defs, rules))
+    dp = _batch_spec(mesh, rules, batch)
+    in_sh = [p_shard, NamedSharding(mesh, PS(dp, None))]
+    if cfg.family in ("vlm", "encdec"):
+        in_sh.append(NamedSharding(mesh, PS(dp, None, None)))
+    # cache out_shardings must match what make_serve_step expects, so the
+    # prefill->decode handoff needs no resharding copy.
+    cache_t = jax.eval_shape(
+        lambda: models.init_cache(cfg, batch, capacity, compute_dtype))
+    cspecs = cache_pspecs(cache_t, rules, family=cfg.family, batch_spec=dp,
+                          seq_spec=rules.get("cache_seq"), seq_len=capacity)
+    c_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), cspecs)
+    return jax.jit(run, in_shardings=tuple(in_sh),
+                   out_shardings=(None, c_shard))
+
+
+def make_serve_step(cfg: ModelConfig, mesh: Optional[Mesh],
+                    *, compute_dtype=jnp.bfloat16, impl: str = "ref",
+                    scheme: str = "seq", shard_cache_seq: bool = False,
+                    policy: str = "serve"):
+    """One-token decode step:  fn(params, token, cache, index) ->
+    (logits, cache).  Cache is donated (updated in place on device).
+
+    With a mesh this returns ``jit_with_cache(cache_template, batch) ->
+    step_fn`` (the cache pytree's shardings depend on its structure).
+
+    policy='serve_2dtp' additionally shards the cache SEQ dim over 'model'
+    (rules['cache_seq']) — distributed flash-decode; 'shard_cache_seq'
+    forces seq sharding over 'data' for batch=1 long decode."""
+    rules = shd.make_rules(mesh, mode=policy, cfg=cfg) if mesh is not None else None
+
+    def run(params, token, cache, index):
+        return models.decode_step(params, cfg, token, cache, index,
+                                  compute_dtype=compute_dtype, impl=impl,
+                                  mesh=mesh, scheme=scheme, shard_mode=policy)
+
+    if mesh is None:
+        return jax.jit(run, donate_argnums=(2,))
+
+    defs = models.model_defs(cfg)
+    p_shard = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                           shd.param_specs(defs, rules))
+
+    def jit_with_cache(cache_template, batch: int, seq_len: int = 0):
+        dp = _batch_spec(mesh, rules, batch)
+        seq_spec = rules.get("cache_seq")
+        if shard_cache_seq and dp is None and seq_spec is None:
+            seq_spec = "data"
+        cspecs = cache_pspecs(cache_template, rules, family=cfg.family,
+                              batch_spec=dp, seq_spec=seq_spec,
+                              seq_len=seq_len)
+        c_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), cspecs)
+        return jax.jit(
+            run,
+            in_shardings=(p_shard, NamedSharding(mesh, PS(dp)), c_shard,
+                          NamedSharding(mesh, PS())),
+            out_shardings=(None, c_shard),
+            donate_argnums=(2,),
+        )
+
+    return jit_with_cache

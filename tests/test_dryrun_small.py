@@ -1,0 +1,80 @@
+"""Dry-run machinery on a small (2,2) mesh in a SUBPROCESS (the forced
+device count must be set before jax initializes, and the main pytest
+process must keep seeing 1 device)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import json, jax, jax.numpy as jnp
+from repro.launch.mesh import make_mesh
+from repro.launch import specs as S
+from repro.launch.dryrun import analyze_compiled
+from repro.runtime.steps import make_train_step, make_serve_step, TrainStepConfig
+from repro.optim import AdamWConfig
+from repro import configs, models
+
+mesh = make_mesh((2, 2), ("data", "model"))
+cfg = configs.smoke("deepseek-v2-236b")
+
+# train cell
+sf, _ = make_train_step(cfg, mesh, AdamWConfig(),
+                        TrainStepConfig(impl="chunked", loss_chunk=8))
+batch = {"tokens": S.sds((4, 32), jnp.int32), "labels": S.sds((4, 32), jnp.int32)}
+low = sf.lower(S.param_specs(cfg), S.opt_specs(cfg, AdamWConfig()), batch)
+comp = low.compile()
+train = analyze_compiled(low, comp, 4)
+
+# decode cell
+cache = jax.eval_shape(lambda: models.init_cache(cfg, 4, 64, jnp.bfloat16))
+fn = make_serve_step(cfg, mesh, scheme="rc")(cache, 4)
+low2 = fn.lower(S.param_specs(cfg), S.sds((4,), jnp.int32), cache,
+                S.sds((), jnp.int32))
+comp2 = low2.compile()
+dec = analyze_compiled(low2, comp2, 4)
+print(json.dumps({"train": train, "decode": dec}))
+"""
+
+
+@pytest.fixture(scope="module")
+def results():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
+                         text=True, env=env, cwd=ROOT, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def test_train_cell_compiles_and_counts(results):
+    t = results["train"]
+    assert t["hlo_flops_per_chip"] > 1e6
+    assert t["hlo_bytes_per_chip"] > 1e6
+    assert t["bound"] in ("compute", "memory", "collective")
+    assert t["t_compute"] > 0 and t["t_memory"] > 0
+
+
+def test_train_has_collectives(results):
+    """FSDP + TP sharding must produce collective traffic."""
+    assert results["train"]["collective_bytes_per_chip"] > 0
+    assert results["train"]["collective_by_kind"]
+
+
+def test_decode_cell_compiles(results):
+    d = results["decode"]
+    assert d["hlo_flops_per_chip"] > 0
+    assert d["mem_argument_size_in_bytes"] > 0
+
+
+def test_roofline_terms_consistent(results):
+    from repro.hwmodel.platforms import TPU_V5E_PEAK_FLOPS
+    t = results["train"]
+    assert t["t_compute"] == pytest.approx(
+        t["hlo_flops_per_chip"] / TPU_V5E_PEAK_FLOPS, rel=1e-6)

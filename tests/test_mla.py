@@ -1,0 +1,102 @@
+"""MLA core: execution-scheme equivalence (the paper's central claim that
+rc/ru/naive/seq "implement the same algorithm with identical weights"),
+prefill/decode consistency, and weight absorption — including a hypothesis
+property sweep over dimensions.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cache as cachelib
+from repro.core import mla as M
+from repro.nn import module as nnm
+
+CFG = M.MLAConfig(d_model=96, n_heads=4, q_lora_rank=32, kv_lora_rank=24,
+                  qk_nope_dim=12, qk_rope_dim=8, v_head_dim=12)
+
+
+def setup(cfg=CFG, seed=0, B=2, L=9):
+    params = nnm.init_params(jax.random.PRNGKey(seed), M.mla_defs(cfg),
+                             jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1),
+                          (B, L, cfg.d_model)) * 0.3
+    pos = jnp.broadcast_to(jnp.arange(L), (B, L))
+    return params, x, pos
+
+
+def decode_all(params, cfg, x, scheme, capacity=None):
+    B, L, _ = x.shape
+    cap = capacity or L
+    params = M.prepare_serving(params, cfg, scheme)
+    cache = cachelib.latent_cache(B, cap, cfg.kv_lora_rank, cfg.qk_rope_dim,
+                                  jnp.float32)
+    outs = []
+    for t in range(L):
+        y, cache = M.mla_decode(params, cfg, x[:, t], cache, t, scheme=scheme)
+        outs.append(y)
+    return jnp.stack(outs, axis=1)
+
+
+@pytest.mark.parametrize("scheme", M.SCHEMES)
+def test_decode_matches_prefill(scheme):
+    params, x, pos = setup()
+    want, _ = M.mla_prefill(params, CFG, x, pos)
+    got = decode_all(params, CFG, x, scheme)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_all_schemes_agree_pairwise():
+    params, x, _ = setup(seed=7)
+    outs = {s: decode_all(params, CFG, x, s) for s in M.SCHEMES}
+    for s in ("seq", "rc", "ru"):
+        np.testing.assert_allclose(np.asarray(outs[s]),
+                                   np.asarray(outs["naive"]), atol=2e-5)
+
+
+def test_capacity_larger_than_len():
+    """Cache capacity > sequence length must not change results."""
+    params, x, pos = setup()
+    want, _ = M.mla_prefill(params, CFG, x, pos)
+    got = decode_all(params, CFG, x, "rc", capacity=x.shape[1] + 13)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_absorb_is_product():
+    params, _, _ = setup()
+    w = M.absorb_qk(params, CFG)
+    want = jnp.einsum("qhn,khn->hqk",
+                      params["w_uq"][:, :, :CFG.qk_nope_dim], params["w_uk"])
+    np.testing.assert_allclose(np.asarray(w), np.asarray(want), atol=1e-6)
+    assert w.shape == (CFG.n_heads, CFG.q_lora_rank, CFG.kv_lora_rank)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n_heads=st.sampled_from([1, 2, 4]),
+    q_lora=st.sampled_from([8, 16, 40]),
+    kv_lora=st.sampled_from([8, 24]),
+    dn=st.sampled_from([4, 16]),
+    dr=st.sampled_from([2, 8]),
+    L=st.integers(min_value=1, max_value=7),
+    seed=st.integers(min_value=0, max_value=2 ** 16),
+)
+def test_scheme_equivalence_property(n_heads, q_lora, kv_lora, dn, dr, L, seed):
+    """Property: for ANY dims, all four schemes compute the same function."""
+    cfg = M.MLAConfig(d_model=32, n_heads=n_heads, q_lora_rank=q_lora,
+                      kv_lora_rank=kv_lora, qk_nope_dim=dn, qk_rope_dim=dr,
+                      v_head_dim=dn)
+    params, x, pos = setup(cfg, seed=seed % 100, B=1, L=L)
+    want, _ = M.mla_prefill(params, cfg, x, pos)
+    for scheme in ("seq", "rc", "ru"):
+        got = decode_all(params, cfg, x, scheme)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=5e-5)
+
+
+def test_param_count_closed_form_matches_defs():
+    # closed form counts projection weights only; the defs additionally
+    # carry the two rmsnorm scales (q_lora_rank + kv_lora_rank entries).
+    diff = nnm.count_params(M.mla_defs(CFG)) - M.param_count(CFG, rope=True)
+    assert diff == CFG.q_lora_rank + CFG.kv_lora_rank

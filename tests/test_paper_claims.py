@@ -1,0 +1,114 @@
+"""Validation of the reproduction against the paper's own numbers/claims.
+
+Table 1 (exact):   MLA 174M, MHA_l 470M, MHA_s 172M params / attention layer
+Fig 2 (ordering):  1->3->2 (naive) worst at long L; absorbed orders converge
+Fig 3 (ops/bytes): MLA_rc trades extra ops for fewer bytes vs MLA_ru
+Fig 4 (OI):        MHA flat-low; MLA_ru cache-dependent; MLA_rc high/stable
+Fig 5 (dispatch):  rc wins on compute-rich platforms, ru when compute-poor
+"""
+import pytest
+
+from repro.core import mla as M
+from repro.core.schemes import PlatformPoint, auto_dispatch
+from repro.hwmodel import attention_costs as ac
+from repro.hwmodel import roofline as R
+
+
+def test_table1_param_counts_exact():
+    assert round(M.param_count(ac.DSV3_MLA, rope=False) / 1e6) == 174
+    assert round(ac.MHA_L.param_count() / 1e6) == 470
+    assert round(ac.MHA_S.param_count() / 1e6) == 172
+
+
+def test_fig2_naive_order_worst_at_long_cache():
+    for L in (4096, 32768, 131072):
+        costs = {o: ac.score_chain_ops(ac.DSV3_MLA, o, L)
+                 for o in ("123", "132", "213", "ru")}
+        assert costs["132"] == max(costs.values())
+    # absorbed orders converge to the same asymptote (attention-dominated)
+    big = 4_000_000
+    c = {o: ac.score_chain_ops(ac.DSV3_MLA, o, big) for o in ("123", "213")}
+    assert abs(c["123"] - c["213"]) / c["123"] < 0.05
+
+
+def test_fig2_seq_order_never_more_ops_than_rc():
+    """Our op accounting: the factored 1->2->3 never exceeds 2->1->3 at
+    batch=1.  (The paper's Fig-2 'rc is best' conclusion emerges on the
+    two-term roofline where rc's identical BYTES but on-chip absorb matter
+    — documented discrepancy, EXPERIMENTS.md §Fig2.)"""
+    for L in (128, 4096, 131072):
+        assert ac.score_chain_ops(ac.DSV3_MLA, "123", L) <= \
+            ac.score_chain_ops(ac.DSV3_MLA, "213", L)
+
+
+def test_fig3_rc_trades_ops_for_bytes_vs_ru():
+    for L in (1024, 16384, 131072):
+        rc = ac.mla_decode_cost(ac.DSV3_MLA, scheme="rc", cache_len=L)
+        ru = ac.mla_decode_cost(ac.DSV3_MLA, scheme="ru", cache_len=L)
+        assert rc.flops > ru.flops      # rc recomputes the absorbed matrix
+        assert rc.bytes < ru.bytes      # ru streams it from DRAM
+
+
+def test_fig3_mla_bytes_scale_better_than_mha():
+    """Cache bytes/token: latent (D_kvl + D_r) << 2 * n_h * D_qk (MHA)."""
+    small = R.decode_cost("mla_rc", cache_len=1024)
+    big = R.decode_cost("mla_rc", cache_len=131072)
+    small_m = R.decode_cost("mha_l", cache_len=1024)
+    big_m = R.decode_cost("mha_l", cache_len=131072)
+    assert (big.bytes - small.bytes) < (big_m.bytes - small_m.bytes) / 20
+
+
+def test_fig4_oi_trends():
+    L = (1024, 16384, 131072)
+    mha = [R.decode_cost("mha_l", cache_len=l).oi for l in L]
+    mha_s = [R.decode_cost("mha_s", cache_len=l).oi for l in L]
+    ru = [R.decode_cost("mla_ru", cache_len=l).oi for l in L]
+    rc = [R.decode_cost("mla_rc", cache_len=l).oi for l in L]
+    # MHA: consistently low OI regardless of cache size (paper: "flat")
+    assert max(mha) < 2 and max(mha_s) < 2
+    assert max(mha) / min(mha) < 1.5
+    # MLA_ru: OI strongly cache-size dependent
+    assert ru[-1] / ru[0] > 10
+    # MLA_rc: significantly higher OI, mild sensitivity
+    assert min(rc) > 20 * max(mha)
+    assert rc[-1] / rc[0] < 2.5
+
+
+def test_fig4_prefill_oi_high_everywhere():
+    for m in ("mla_rc", "mha_l", "mha_s"):
+        assert R.prefill_cost(m, seq_len=4096).oi > 500
+
+
+def test_fig5_dispatch_crossover():
+    """rc on compute-rich platforms; ru only when compute is scarce
+    relative to bandwidth (the paper's 'uncommon case')."""
+    rich = PlatformPoint("rich", 200e12, 400e9)     # 500 FLOP/B ridge
+    poor = PlatformPoint("poor", 0.5e12, 400e9)     # 1.25 FLOP/B ridge
+    L = 8192
+    t = lambda s, p: max(
+        ac.mla_decode_cost(ac.DSV3_MLA, scheme=s, cache_len=L).flops / p.peak_flops,
+        ac.mla_decode_cost(ac.DSV3_MLA, scheme=s, cache_len=L).bytes / p.hbm_bw)
+    assert t("rc", rich) < t("ru", rich)
+    assert t("ru", poor) < t("rc", poor)
+    assert auto_dispatch(ac.DSV3_MLA, poor, L, candidates=("rc", "ru")) == "ru"
+    assert auto_dispatch(ac.DSV3_MLA, rich, L, candidates=("rc", "ru")) == "rc"
+
+
+def test_beyond_paper_seq_dominates_two_term():
+    """Our beyond-paper scheme: 'seq' has rc's bytes with fewer FLOPs, so it
+    weakly dominates rc at every design point (DESIGN.md §4)."""
+    for L in (1024, 32768, 262144):
+        seq = ac.mla_decode_cost(ac.DSV3_MLA, scheme="seq", cache_len=L)
+        rc = ac.mla_decode_cost(ac.DSV3_MLA, scheme="rc", cache_len=L)
+        assert seq.bytes == rc.bytes
+        assert seq.flops <= rc.flops
+
+
+def test_mla_cache_bytes_per_token():
+    from repro.core.cache import bytes_per_token_dense, bytes_per_token_latent
+    # DeepSeek-V2/V3: 576 latent dims * 2 B = 1152 B/token/layer vs
+    # MHA 128 heads * 128 * 2 * 2 B = 65536 B — a 56.9x reduction.
+    lat = bytes_per_token_latent(512, 64)
+    dense = bytes_per_token_dense(128, 128)
+    assert lat == 1152 and dense == 65536
+    assert dense / lat > 50

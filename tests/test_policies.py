@@ -1,0 +1,120 @@
+"""Sharding-policy equivalence on a tiny multi-device mesh (subprocess:
+the forced device count must precede jax init).
+
+Covers the §Perf hillclimb features:
+  * serve_2dtp (resident-weight 2D serving TP + seq-sharded latent cache)
+    computes the same prefill/decode function as the unsharded reference;
+  * GQA head padding preserves the train step exactly (loss + updated
+    params) for head counts that do not divide the TP axis;
+  * policy='dp' trains identically to unsharded.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+import json, jax, jax.numpy as jnp
+from repro.launch.mesh import make_mesh
+from repro import configs, models
+from repro.nn import module as nnm, sharding as shd
+from repro.optim import AdamWConfig, adamw_init
+from repro.runtime.steps import (make_prefill_step, make_serve_step,
+                                 make_train_step, TrainStepConfig)
+
+mesh = make_mesh((4, 4), ("data", "model"))
+out = {}
+
+# ---- serve_2dtp functional equivalence (MLA + MoE arch) -------------------
+cfg = configs.smoke("deepseek-v2-236b")
+params = nnm.init_params(jax.random.PRNGKey(0), models.model_defs(cfg),
+                         jnp.float32)
+B, L, cap = 4, 12, 24
+toks = jax.random.randint(jax.random.PRNGKey(1), (B, L), 0, cfg.vocab)
+pre0 = make_prefill_step(cfg, None, batch=B, capacity=cap,
+                         compute_dtype=jnp.float32, scheme="rc")
+st0 = make_serve_step(cfg, None, compute_dtype=jnp.float32, scheme="rc")
+lg0, c0 = pre0(params, toks)
+nxt = jnp.argmax(lg0, -1).astype(jnp.int32)
+out0, _ = st0(params, nxt, c0, L)
+rules = shd.make_rules(mesh, mode="serve_2dtp", cfg=cfg)
+p = jax.tree.map(jax.device_put, params,
+                 shd.param_shardings(models.model_defs(cfg), mesh, rules))
+pre = make_prefill_step(cfg, mesh, batch=B, capacity=cap,
+                        compute_dtype=jnp.float32, scheme="rc",
+                        policy="serve_2dtp")
+lg, c = pre(p, toks)
+step = make_serve_step(cfg, mesh, compute_dtype=jnp.float32, scheme="rc",
+                       policy="serve_2dtp")(
+    jax.eval_shape(lambda: models.init_cache(cfg, B, cap, jnp.float32)),
+    B, cap)
+o2, _ = step(p, nxt, c, L)
+out["2dtp_prefill_err"] = float(jnp.max(jnp.abs(lg - lg0)))
+out["2dtp_decode_err"] = float(jnp.max(jnp.abs(o2 - out0)))
+out["2dtp_tokens_match"] = bool(
+    (jnp.argmax(lg, -1) == jnp.argmax(lg0, -1)).all()
+    and (jnp.argmax(o2, -1) == jnp.argmax(out0, -1)).all())
+
+# ---- head padding + dp policy train equivalence ---------------------------
+for arch, policy in (("starcoder2-7b", "train"), ("gemma3-1b", "train"),
+                     ("xlstm-350m", "dp")):
+    cfg = configs.smoke(arch)
+    opt_cfg = AdamWConfig(lr=1e-3)
+    def fresh():
+        pp = nnm.init_params(jax.random.PRNGKey(0), models.model_defs(cfg),
+                             jnp.float32)
+        return pp, adamw_init(pp, opt_cfg)
+    b = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (8, 24), 0,
+                                      cfg.vocab),
+         "labels": jax.random.randint(jax.random.PRNGKey(2), (8, 24), 0,
+                                      cfg.vocab)}
+    s0, _ = make_train_step(cfg, None, opt_cfg,
+                            TrainStepConfig(compute_dtype=jnp.float32,
+                                            impl="chunked"))
+    p0, o0 = fresh()
+    p0n, _, m0 = s0(p0, o0, b)
+    s1, _ = make_train_step(cfg, mesh, opt_cfg,
+                            TrainStepConfig(compute_dtype=jnp.float32,
+                                            impl="chunked"), policy=policy)
+    p1, o1 = fresh()
+    rules = shd.make_rules(mesh, mode=policy, cfg=cfg)
+    sh = shd.param_shardings(models.model_defs(cfg), mesh, rules)
+    p1 = jax.tree.map(jax.device_put, p1, sh)
+    o1 = {"step": o1["step"], "mu": jax.tree.map(jax.device_put, o1["mu"], sh),
+          "nu": jax.tree.map(jax.device_put, o1["nu"], sh)}
+    p1n, _, m1 = s1(p1, o1, b)
+    err = max(float(jnp.max(jnp.abs(jnp.asarray(a) - jnp.asarray(c))))
+              for a, c in zip(jax.tree.leaves(p0n), jax.tree.leaves(p1n)))
+    out[f"{arch}_loss_delta"] = abs(float(m0["loss"]) - float(m1["loss"]))
+    out[f"{arch}_param_err"] = err
+
+print(json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module")
+def results():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
+                       text=True, env=env, cwd=ROOT, timeout=900)
+    assert r.returncode == 0, r.stderr[-3000:]
+    return json.loads(r.stdout.strip().splitlines()[-1])
+
+
+def test_serve_2dtp_equivalent(results):
+    assert results["2dtp_prefill_err"] < 2e-2
+    assert results["2dtp_decode_err"] < 2e-2
+    assert results["2dtp_tokens_match"]
+
+
+@pytest.mark.parametrize("arch", ["starcoder2-7b", "gemma3-1b", "xlstm-350m"])
+def test_policy_train_step_equivalent(results, arch):
+    assert results[f"{arch}_loss_delta"] < 1e-4
+    assert results[f"{arch}_param_err"] < 1e-3

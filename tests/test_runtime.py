@@ -1,0 +1,127 @@
+"""Runtime: fault-tolerant loop (auto-resume bitwise equality, straggler
+re-dispatch), loss-goes-down integration, serve path."""
+import shutil
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.models as models
+from repro.data import DataConfig, SyntheticLM
+from repro.models.common import ModelConfig
+from repro.nn import module as nnm
+from repro.optim import AdamWConfig, adamw_init
+from repro.runtime import (LoopConfig, SimulatedFailure, TrainLoop,
+                           TrainStepConfig, make_prefill_step,
+                           make_serve_step, make_train_step)
+
+CFG = ModelConfig(name="t", family="dense", n_layers=2, d_model=64, n_heads=4,
+                  n_kv_heads=2, d_ff=128, vocab=128, remat=False)
+OPT = AdamWConfig(lr=1e-3)
+
+
+def fresh():
+    p = nnm.init_params(jax.random.PRNGKey(0), models.model_defs(CFG),
+                        jnp.float32)
+    return p, adamw_init(p, OPT)
+
+
+def data():
+    return SyntheticLM(DataConfig(vocab=128, seq_len=32, global_batch=8))
+
+
+@pytest.fixture
+def step_fn():
+    return make_train_step(CFG, None, OPT,
+                           TrainStepConfig(compute_dtype=jnp.float32))[0]
+
+
+def test_loss_decreases():
+    hot = make_train_step(CFG, None, AdamWConfig(lr=3e-3),
+                          TrainStepConfig(compute_dtype=jnp.float32))[0]
+    p, o = fresh()
+    d = data()
+    losses = []
+    for _ in range(25):
+        toks, labels = d.next_batch()
+        p, o, m = hot(p, o, {"tokens": jnp.asarray(toks),
+                             "labels": jnp.asarray(labels)})
+        losses.append(float(m["loss"]))
+    assert sum(losses[-5:]) / 5 < sum(losses[:5]) / 5 - 0.05
+
+
+def test_resume_after_failure_is_bitwise_identical(step_fn, tmp_path):
+    a_dir, b_dir = str(tmp_path / "a"), str(tmp_path / "b")
+    p, o = fresh()
+    la = TrainLoop(LoopConfig(total_steps=6, ckpt_every=2, ckpt_dir=a_dir,
+                              log_every=0, async_save=False),
+                   step_fn, p, o, data(), log=lambda *_: None)
+    la.run()
+    p, o = fresh()
+    lb = TrainLoop(LoopConfig(total_steps=6, ckpt_every=2, ckpt_dir=b_dir,
+                              log_every=0, async_save=False, fail_at_step=4),
+                   step_fn, p, o, data(), log=lambda *_: None)
+    with pytest.raises(SimulatedFailure):
+        lb.run()
+    p, o = fresh()   # relaunch from scratch: must auto-resume at step 4
+    lb2 = TrainLoop(LoopConfig(total_steps=6, ckpt_every=2, ckpt_dir=b_dir,
+                               log_every=0, async_save=False),
+                    step_fn, p, o, data(), log=lambda *_: None)
+    assert lb2.step == 4
+    lb2.run()
+    for x, y in zip(jax.tree.leaves(la.params), jax.tree.leaves(lb2.params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_straggler_redispatch(tmp_path):
+    """A step exceeding deadline_factor x median is re-dispatched once."""
+    calls = {"n": 0}
+
+    def slow_step(params, opt, batch):
+        calls["n"] += 1
+        if calls["n"] == 12:      # one straggler after warmup
+            time.sleep(0.3)
+        return params, opt, {"loss": jnp.float32(1.0)}
+
+    p, o = fresh()
+    loop = TrainLoop(LoopConfig(total_steps=14, ckpt_every=100,
+                                ckpt_dir=str(tmp_path), log_every=0,
+                                straggler_factor=5.0, straggler_warmup=8),
+                     slow_step, p, o, data(), log=lambda *_: None)
+    loop.run()
+    assert len(loop.straggler_events) >= 1
+    assert calls["n"] == 14 + len(loop.straggler_events)
+
+
+def test_serve_prefill_decode_roundtrip():
+    p, _ = fresh()
+    prefill = make_prefill_step(CFG, None, batch=2, capacity=20,
+                                compute_dtype=jnp.float32)
+    step = make_serve_step(CFG, None, compute_dtype=jnp.float32)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 8), 0, CFG.vocab)
+    logits, cache = prefill(p, toks)
+    assert logits.shape == (2, CFG.vocab)
+    for i in range(4):
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        logits, cache = step(p, tok, cache, 8 + i)
+    assert not bool(jnp.isnan(logits).any())
+
+
+def test_microbatched_train_matches_full_batch():
+    """Grad accumulation over 2 microbatches == single big batch (mean)."""
+    p, o = fresh()
+    full, _ = make_train_step(CFG, None, OPT,
+                              TrainStepConfig(compute_dtype=jnp.float32))
+    micro, _ = make_train_step(CFG, None, OPT,
+                               TrainStepConfig(compute_dtype=jnp.float32,
+                                               microbatches=2))
+    toks = jax.random.randint(jax.random.PRNGKey(3), (8, 16), 0, CFG.vocab)
+    lbls = jax.random.randint(jax.random.PRNGKey(4), (8, 16), 0, CFG.vocab)
+    b = {"tokens": toks, "labels": lbls}
+    p1, _, m1 = full(p, o, b)
+    p2, _, m2 = micro(*fresh(), b)
+    assert float(m1["ce"]) == pytest.approx(float(m2["ce"]), rel=1e-5)
+    for a, c in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c), atol=1e-5)
