@@ -1,0 +1,16 @@
+# Tier-1 verification (ROADMAP.md).  -x fails fast; pytest exits non-zero
+# on collection errors, so import-time breakage cannot hide behind a
+# passing subset.
+PY ?= python
+
+.PHONY: test test-fast bench-serving
+
+test:
+	PYTHONPATH=src $(PY) -m pytest -x -q
+
+# Skip the slow dry-run compile cells during inner-loop development.
+test-fast:
+	PYTHONPATH=src $(PY) -m pytest -x -q --ignore=tests/test_dryrun_small.py
+
+bench-serving:
+	PYTHONPATH=src $(PY) benchmarks/bench_serving.py --requests 12 --steps 96

@@ -1,0 +1,172 @@
+"""Serving benchmark: paged continuous batching vs the contiguous
+static-batch baseline, same request set.
+
+The contiguous baseline is what `launch/serve.py` did before this PR:
+requests are grouped into fixed batches, every slot gets the GLOBAL
+worst-case capacity (max prompt + max gen), and no request joins until the
+whole batch drains.  The paged runtime admits mid-generation and allocates
+block-granular capacity, so the same pool serves more live tokens —
+``cache utilization`` (valid tokens / reserved token slots, time-averaged)
+is the headline metric; tokens/s on CPU is directional only.
+
+    PYTHONPATH=src python benchmarks/bench_serving.py --requests 12
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import common
+import repro.configs as configs
+import repro.models as models
+from repro.hwmodel.platforms import PLATFORMS
+from repro.launch.serve import _prepare_mla
+from repro.nn import module as nnm
+from repro.runtime import (PagedMLAEngine, Request, blocks_for,
+                           make_prefill_step, make_serve_step)
+
+
+def make_requests(n, vocab, rng):
+    """Mixed prompt/gen lengths, Poisson arrivals (quantized prompts)."""
+    arrivals = np.floor(np.cumsum(rng.exponential(2.5, n))).astype(int)
+    reqs = []
+    for i in range(n):
+        reqs.append(Request(
+            rid=i,
+            prompt=rng.integers(0, vocab,
+                                (int(rng.choice([8, 16, 24, 32])),)
+                                ).astype(np.int32),
+            max_new=int(rng.integers(4, 20)),
+            arrival=int(arrivals[i])))
+    return reqs
+
+
+def run_contiguous(cfg, params, reqs, max_batch):
+    """Static batching: fixed batches, global worst-case capacity, no
+    admission until the running batch fully drains."""
+    plen_max = max(r.plen for r in reqs)
+    gen_max = max(r.max_new for r in reqs)
+    capacity = plen_max + gen_max + 1
+    params = _prepare_mla(params, cfg, "seq")
+    prefill = make_prefill_step(cfg, None, batch=max_batch,
+                                capacity=capacity,
+                                compute_dtype=jnp.float32, scheme="seq")
+    step = make_serve_step(cfg, None, compute_dtype=jnp.float32,
+                           scheme="seq")
+    util_sum, util_n, decode_tokens, steps = 0.0, 0, 0, 0
+    outputs = {}
+    t0 = time.perf_counter()
+    for lo in range(0, len(reqs), max_batch):
+        batch = reqs[lo:lo + max_batch]
+        B = len(batch)
+        toks = np.zeros((max_batch, plen_max), np.int32)
+        for b, r in enumerate(batch):   # right-align ragged prompts? no:
+            toks[b, :r.plen] = r.prompt  # left-aligned, padded to plen_max
+        logits, cache = prefill(params, jnp.asarray(toks))
+        # NOTE: padded prompts make short requests see pad tokens — the
+        # baseline's accuracy compromise; tokens are NOT compared against
+        # the paged path here, only throughput/utilization are measured.
+        pending = np.asarray(jnp.argmax(logits, -1))
+        done_at = [r.max_new for r in batch]
+        outs = [[int(pending[b])] for b in range(B)]
+        n_steps = max(done_at)
+        for i in range(n_steps - 1):
+            logits, cache = step(params, jnp.asarray(pending), cache,
+                                 plen_max + i)
+            pending = np.asarray(jnp.argmax(logits, -1))
+            live = 0
+            for b in range(B):
+                if len(outs[b]) < done_at[b]:
+                    outs[b].append(int(pending[b]))
+                    live += 1
+            decode_tokens += live
+            steps += 1
+            # every slot reserves `capacity` tokens for the whole drain
+            valid = sum(min(batch[b].plen + len(outs[b]), capacity)
+                        for b in range(B))
+            util_sum += valid / (max_batch * capacity)
+            util_n += 1
+        for b, r in enumerate(batch):
+            outputs[r.rid] = outs[b]
+    wall = time.perf_counter() - t0
+    return {
+        "steps": steps, "decode_tokens": decode_tokens,
+        "tokens_per_s": decode_tokens / wall if wall else 0.0,
+        "cache_utilization": util_sum / max(util_n, 1),
+        "capacity_per_slot": capacity,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--block-size", type=int, default=8)
+    ap.add_argument("--steps", type=int, default=400,
+                    help="paged-engine step budget")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = configs.smoke("deepseek-v2-236b")
+    params = nnm.init_params(jax.random.PRNGKey(args.seed),
+                             models.model_defs(cfg), jnp.float32)
+    rng = np.random.default_rng(args.seed + 1)
+    reqs = make_requests(args.requests, cfg.vocab, rng)
+
+    print("== contiguous static batching (baseline) ==")
+    base = run_contiguous(cfg, params,
+                          [Request(rid=r.rid, prompt=r.prompt.copy(),
+                                   max_new=r.max_new) for r in reqs],
+                          args.max_batch)
+    print(f"  {base['decode_tokens']} decode tokens, "
+          f"{base['tokens_per_s']:.1f} tok/s, utilization "
+          f"{base['cache_utilization']:.3f} "
+          f"(every slot reserves {base['capacity_per_slot']} tokens)")
+
+    print("== paged continuous batching ==")
+    bs = args.block_size
+    num_blocks = 1 + sum(blocks_for(r.plen + r.max_new + 1, bs)
+                         for r in reqs) // 2   # force block reuse
+    per_req = max(blocks_for(r.plen + r.max_new + 1, bs) for r in reqs)
+    eng = PagedMLAEngine(cfg, params, num_blocks=num_blocks, block_size=bs,
+                         max_batch=args.max_batch, max_blocks_per_req=per_req,
+                         compute_dtype=jnp.float32, scheme="auto",
+                         platform=PLATFORMS["tpu_v5e"])
+    paged = eng.run([Request(rid=r.rid, prompt=r.prompt.copy(),
+                             max_new=r.max_new, arrival=r.arrival)
+                     for r in reqs], max_steps=args.steps)
+    print(f"  {paged['decode_tokens']:.0f} decode tokens, "
+          f"{paged['tokens_per_s']:.1f} tok/s, utilization "
+          f"{paged['cache_utilization']:.3f}, "
+          f"{paged['mid_gen_admissions']:.0f} mid-gen admissions, "
+          f"pool {num_blocks - 1} x {bs}")
+
+    gain = paged["cache_utilization"] / max(base["cache_utilization"], 1e-9)
+    rows = [
+        ["contiguous", base["decode_tokens"], f"{base['tokens_per_s']:.1f}",
+         f"{base['cache_utilization']:.3f}", "-"],
+        ["paged", int(paged["decode_tokens"]), f"{paged['tokens_per_s']:.1f}",
+         f"{paged['cache_utilization']:.3f}", f"{gain:.2f}x"],
+    ]
+    md = common.table(
+        ["runtime", "decode tokens", "tok/s", "cache util", "util gain"],
+        rows)
+    print("\n" + md)
+    common.check("paged utilization beats contiguous",
+                 paged["cache_utilization"] > base["cache_utilization"],
+                 f"{paged['cache_utilization']:.3f} vs "
+                 f"{base['cache_utilization']:.3f}")
+    common.check("mid-generation admission happened",
+                 paged["mid_gen_admissions"] > 0)
+    common.save("bench_serving.json", {"contiguous": base, "paged": paged,
+                                       "util_gain": gain})
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Version-compat shims for JAX API drift.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` to ``jax.shard_map``
+and renamed its replication-check kwarg ``check_rep`` -> ``check_vma`` along
+the way.  Callers in this repo use the NEW spelling (``jax.shard_map``-style,
+``check_vma=``); this module resolves it against whatever the installed JAX
+provides so the same source runs on both sides of the migration.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+if hasattr(jax, "shard_map"):                      # jax >= 0.6: new API
+    shard_map = jax.shard_map
+else:                                              # older jax: experimental
+    from jax.experimental.shard_map import shard_map as _legacy_shard_map
+
+    @functools.wraps(_legacy_shard_map)
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True, **kw):
+        # the legacy kwarg is ``check_rep``; same meaning.
+        kw.setdefault("check_rep", check_vma)
+        return _legacy_shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, **kw)
+
+
+def cost_analysis(compiled) -> dict:
+    """Normalize ``Compiled.cost_analysis()`` across JAX versions.
+
+    Older jaxlibs return a one-element list of dicts (one per executable
+    module); newer ones return the dict directly.  Either way, hand back a
+    plain dict ({} when the backend reports nothing).
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}

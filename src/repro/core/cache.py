@@ -11,6 +11,9 @@ Shapes (S = capacity):
                  2*Hkv*Dh for dense KV.
   MambaState   : conv (B,W-1,C)  ssm (B,C,N)
   XLSTMState   : mLSTM matrix memory + normalizer, sLSTM registers
+  PagedLatent  : ckv (N,bs,D_kvl)  krope (N,bs,D_rope) — a global block
+                 pool addressed via per-request block tables (continuous
+                 batching; see the "paged" section below).
 """
 from __future__ import annotations
 
@@ -70,6 +73,92 @@ def update_latent(cache: Dict[str, Any], ckv_new, krope_new, index) -> Dict[str,
             cache["krope"], krope_new.astype(cache["krope"].dtype), index,
             axis=1),
     }
+
+
+# ---------------------------------------------------------------- paged ----
+#
+# vLLM-style paged layout for the latent cache: a global pool of fixed-size
+# token blocks shared by all requests, addressed through per-request block
+# tables.  The {ckv | krope} split is preserved (two pools, same block
+# geometry) so the PV contraction still reads ``ckv`` directly — no
+# [ckv|krope] slice, same no-copy property as the contiguous layout.
+#
+# Conventions (shared by kernels/, core/mla.py and runtime/scheduler.py):
+#   * pool shapes: ckv (N_blocks, bs, D_kvl), krope (N_blocks, bs, D_rope)
+#   * block 0 is the reserved NULL block — the allocator never hands it
+#     out and unassigned block-table entries point at it, so every gather
+#     and block-table-driven DMA stays in-bounds.
+#   * ``block_table`` (B, max_blocks) int32 maps request-local block j to
+#     a pool block; ``lengths`` (B,) int32 counts tokens already cached
+#     (the next decode token is written at position lengths[b]).
+
+
+def paged_latent_cache(num_blocks: int, block_size: int, kv_lora: int,
+                       rope_dim: int, dtype=jnp.bfloat16,
+                       layers: Optional[int] = None) -> Dict[str, Any]:
+    """Paged split-layout latent pool (block 0 = null block)."""
+    lead = (layers,) if layers else ()
+    return {
+        "ckv": jnp.zeros(lead + (num_blocks, block_size, kv_lora), dtype),
+        "krope": jnp.zeros(lead + (num_blocks, block_size, rope_dim), dtype),
+    }
+
+
+def update_latent_paged(pool: Dict[str, Any], block_table, lengths,
+                        ckv_new, krope_new) -> Dict[str, Any]:
+    """Scatter one new token per request into the pool.
+
+    ckv_new (B, D_kvl), krope_new (B, D_rope) land at position lengths[b]:
+    pool block ``block_table[b, lengths[b] // bs]``, slot ``lengths[b] % bs``.
+    The caller (runtime.scheduler) guarantees that block is allocated AND
+    that ``lengths[b] < block_table.shape[1] * bs``: a full table is NOT
+    detected here — JAX clamps the out-of-range page index, which would
+    silently overwrite the request's last block.
+    """
+    bs = pool["ckv"].shape[-2]
+    lengths = jnp.asarray(lengths, jnp.int32)
+    page = jnp.take_along_axis(jnp.asarray(block_table, jnp.int32),
+                               (lengths // bs)[:, None], axis=1)[:, 0]
+    slot = lengths % bs
+    return {
+        "ckv": pool["ckv"].at[page, slot].set(
+            ckv_new.astype(pool["ckv"].dtype)),
+        "krope": pool["krope"].at[page, slot].set(
+            krope_new.astype(pool["krope"].dtype)),
+    }
+
+
+def gather_latent_paged(pool: Dict[str, Any], block_table):
+    """Materialize the contiguous (B, max_blocks*bs, D) view of each
+    request's cache — the reference/naive path (the kernel path reads the
+    pool in place via the block table and never builds this)."""
+    bt = jnp.asarray(block_table, jnp.int32)
+    B, nb = bt.shape
+    bs = pool["ckv"].shape[-2]
+    ckv = pool["ckv"][bt].reshape(B, nb * bs, pool["ckv"].shape[-1])
+    krope = pool["krope"][bt].reshape(B, nb * bs, pool["krope"].shape[-1])
+    return ckv, krope
+
+
+def write_blocks_paged(pool_leaf, pages, values):
+    """Bulk-write whole blocks (prefill -> paged handoff).
+
+    pool_leaf: (N, bs, D) or stacked (layers, N, bs, D);
+    pages: (n_pg,) int32 pool-block ids (null-block entries absorb the
+    padding garbage — it is masked at attention time);
+    values: (n_pg, bs, D) or (layers, n_pg, bs, D).
+    """
+    pages = jnp.asarray(pages, jnp.int32)
+    if pool_leaf.ndim == 4:   # stacked (scan) layers
+        return pool_leaf.at[:, pages].set(values.astype(pool_leaf.dtype))
+    return pool_leaf.at[pages].set(values.astype(pool_leaf.dtype))
+
+
+def paged_valid_mask(capacity: int, lengths):
+    """(B, capacity) bool mask over the gathered view: request b may attend
+    positions <= lengths[b] (its new token was already written there)."""
+    j = jnp.arange(capacity)
+    return j[None, :] <= jnp.asarray(lengths)[:, None]
 
 
 def valid_mask(capacity: int, index, n_new: int = 1):

@@ -108,6 +108,28 @@ def prepare_serving(params: Dict[str, Any], cfg: MLAConfig, scheme: str) -> Dict
     return params
 
 
+def attach_absorbed_tree(params, cfg: MLAConfig):
+    """Walk a full model param tree and attach precomputed W_absorb on
+    every MLA sublayer (stacked scan layers get a vmapped absorb).  'ru'
+    streams the extra leaf; other schemes ignore it, so one prepared tree
+    serves every runtime-dispatched scheme."""
+    def visit(node):
+        if isinstance(node, dict):
+            if "w_uq" in node and "w_uk" in node:
+                w_uq = node["w_uq"]
+                if w_uq.ndim == 4:       # stacked (layers, Q, H, d)
+                    absorb = jax.vmap(
+                        lambda q, k: absorb_qk({"w_uq": q, "w_uk": k},
+                                               cfg))(w_uq, node["w_uk"])
+                else:
+                    absorb = absorb_qk(node, cfg)
+                return {**node, "w_absorb": absorb.astype(w_uq.dtype)}
+            return {k: visit(v) for k, v in node.items()}
+        return node
+
+    return visit(params)
+
+
 # ------------------------------------------------------------- projections -
 
 
@@ -244,3 +266,77 @@ def mla_decode(params, cfg: MLAConfig, x_t, cache: Dict[str, Any], index,
 
     out = jnp.einsum("bhv,hvd->bd", o, params["w_o"].astype(x_t.dtype))
     return out, cache
+
+
+def mla_decode_paged(params, cfg: MLAConfig, x_t, pool: Dict[str, Any],
+                     block_table, lengths, *, scheme: str = "seq",
+                     decode_kernel=None):
+    """One continuous-batching decode step over the PAGED latent cache.
+
+    x_t: (B, D) — one token per batch slot; pool: paged latent pool
+    ({ckv (N,bs,Dl), krope (N,bs,Dr)}, block 0 = null); block_table:
+    (B, nb) int32; lengths: (B,) int32 — tokens already cached per slot
+    (ragged!).  The new token is written at position lengths[b], then each
+    request attends its own 0..lengths[b] prefix.  Inactive slots (length
+    0 pointing at the null block) produce garbage that the runtime
+    discards.
+
+    Returns (out (B, D), new_pool).  Same function as :func:`mla_decode`
+    per request — tests/test_paged.py asserts allclose against per-request
+    contiguous decode for every scheme.
+    """
+    B = x_t.shape[0]
+    lengths = jnp.asarray(lengths, jnp.int32)
+    pos = lengths[:, None]                        # per-request positions
+    x = x_t[:, None, :]
+    q_l, q_nope, q_rope = _q_proj(params, cfg, x, pos)
+    q_l, q_nope, q_rope = q_l[:, 0], q_nope[:, 0], q_rope[:, 0]
+    ckv_new, krope_new = _kv_latent(params, cfg, x, pos)
+    pool = cachelib.update_latent_paged(pool, block_table, lengths,
+                                        ckv_new[:, 0], krope_new[:, 0])
+    scale = cfg.qk_dim ** -0.5
+
+    if scheme != "naive" and decode_kernel is not None:
+        # the deployment path: the kernel walks the block table in place —
+        # no contiguous gather is ever materialized.
+        q_eff = _q_latent(params, cfg, q_l, q_nope, scheme)
+        q_full = jnp.concatenate([q_eff, q_rope], axis=-1)
+        o_lat = decode_kernel(q_full, pool["ckv"], pool["krope"],
+                              block_table, lengths, softmax_scale=scale)
+        o = jnp.einsum("bhk,khv->bhv", o_lat, params["w_uv"].astype(x_t.dtype))
+        out = jnp.einsum("bhv,hvd->bd", o, params["w_o"].astype(x_t.dtype))
+        return out, pool
+
+    # reference/naive paths: gather each request's pages into a contiguous
+    # view (numerics oracle — same math as mla_decode with a ragged mask).
+    ckv_c, krope_c = cachelib.gather_latent_paged(pool, block_table)
+    S = ckv_c.shape[1]
+    valid = cachelib.paged_valid_mask(S, lengths)[:, None]   # (B, 1, S)
+    if scheme == "naive":
+        k_nope = jnp.einsum("bsk,khn->bshn", ckv_c, params["w_uk"].astype(ckv_c.dtype))
+        v_full = jnp.einsum("bsk,khv->bshv", ckv_c, params["w_uv"].astype(ckv_c.dtype))
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(krope_c[:, :, None, :].astype(k_nope.dtype),
+                                      k_nope.shape[:3] + (cfg.qk_rope_dim,))], axis=-1)
+        scores = jnp.einsum("bhd,bshd->bhs", q.astype(k.dtype), k,
+                            preferred_element_type=jnp.float32) * scale
+        scores = jnp.where(valid, scores, NEG_INF)
+        p = jax.nn.softmax(scores, axis=-1)
+        o = jnp.einsum("bhs,bshv->bhv", p.astype(v_full.dtype), v_full,
+                       preferred_element_type=jnp.float32).astype(x_t.dtype)
+    else:
+        q_eff = _q_latent(params, cfg, q_l, q_nope, scheme)
+        scores = (jnp.einsum("bhk,bsk->bhs", q_eff.astype(ckv_c.dtype),
+                             ckv_c, preferred_element_type=jnp.float32)
+                  + jnp.einsum("bhr,bsr->bhs", q_rope.astype(krope_c.dtype),
+                               krope_c, preferred_element_type=jnp.float32)
+                  ) * scale
+        scores = jnp.where(valid, scores, NEG_INF)
+        p = jax.nn.softmax(scores, axis=-1)
+        o_lat = jnp.einsum("bhs,bsk->bhk", p.astype(ckv_c.dtype), ckv_c,
+                           preferred_element_type=jnp.float32).astype(x_t.dtype)
+        o = jnp.einsum("bhk,khv->bhv", o_lat, params["w_uv"].astype(x_t.dtype))
+
+    out = jnp.einsum("bhv,hvd->bd", o, params["w_o"].astype(x_t.dtype))
+    return out, pool

@@ -27,14 +27,26 @@ class PlatformPoint:
 
 
 def step_time(scheme: str, cfg: MLAConfig, platform: PlatformPoint,
-              cache_len: int, batch: int = 1) -> float:
+              cache_len: int, batch: int = 1,
+              paged_block: int = 0) -> float:
+    """``paged_block > 0``: cost the paged latent cache (whole-block reads
+    + block-table traffic; see hwmodel.attention_costs)."""
     from ..hwmodel import attention_costs as ac  # local import: no cycle
     c = ac.mla_decode_cost(cfg, scheme=scheme, cache_len=cache_len,
-                           batch=batch, dtype_bytes=platform.dtype_bytes)
+                           batch=batch, dtype_bytes=platform.dtype_bytes,
+                           paged_block=paged_block)
     return max(c.flops / platform.peak_flops, c.bytes / platform.hbm_bw)
 
 
 def auto_dispatch(cfg: MLAConfig, platform: PlatformPoint, cache_len: int,
-                  batch: int = 1, candidates=("seq", "rc", "ru")) -> str:
-    """Return the fastest scheme for this (platform, cache, batch) point."""
-    return min(candidates, key=lambda s: step_time(s, cfg, platform, cache_len, batch))
+                  batch: int = 1, candidates=("seq", "rc", "ru"),
+                  paged_block: int = 0) -> str:
+    """Return the fastest scheme for this (platform, cache, batch) point.
+
+    The continuous-batching runtime calls this EVERY step on the live
+    (batch, max cache_len) point, so the rc/ru/seq choice adapts as the
+    batch composition changes (the paper: "the choice between them can be
+    made dynamically")."""
+    return min(candidates, key=lambda s: step_time(s, cfg, platform,
+                                                   cache_len, batch,
+                                                   paged_block=paged_block))

@@ -64,8 +64,15 @@ def _dims(cfg: MLAConfig, rope: bool):
 
 def mla_decode_cost(cfg: MLAConfig, *, scheme: str, cache_len: int,
                     batch: int = 1, dtype_bytes: int = 2, rope: bool = False,
-                    include_io: bool = False) -> Cost:
-    """One decode step of one MLA layer. ``cache_len`` = L (incl. new token)."""
+                    include_io: bool = False, paged_block: int = 0,
+                    table_entry_bytes: int = 4) -> Cost:
+    """One decode step of one MLA layer. ``cache_len`` = L (incl. new token).
+
+    ``paged_block > 0`` models the paged latent cache: reads happen in
+    whole blocks (internal fragmentation rounds L up to a block multiple)
+    and each step additionally streams the per-request block tables
+    (ceil(L/bs) int32 entries per request).  Keeps the roofline honest for
+    the continuous-batching runtime (runtime.engine)."""
     D, H, Q, K, dn, dr, dv = _dims(cfg, rope)
     B, L, w = batch, cache_len, dtype_bytes
     fl: Dict[str, float] = {}
@@ -81,6 +88,10 @@ def mla_decode_cost(cfg: MLAConfig, *, scheme: str, cache_len: int,
     by["w_common"] = (D * Q + D * (K + dr) + K * H * dv + H * dv * D) * w
     by["cache_read"] = B * L * (K + dr) * w
     by["cache_write"] = B * (K + dr) * w
+    if paged_block:
+        n_blk = -(-L // paged_block)
+        by["cache_read"] = B * n_blk * paged_block * (K + dr) * w
+        by["block_table"] = B * n_blk * table_entry_bytes
 
     # ---- scheme-specific nope-query transform --------------------------
     if scheme == "seq":                       # 1->2->3, factored

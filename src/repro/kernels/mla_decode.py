@@ -18,6 +18,14 @@ TPU mapping:
   = 262 KB, acc 128x512x4 = 262 KB  => ~2 MB.
   The cache-length ``index`` is a runtime scalar (scalar-prefetch operand);
   kv-blocks entirely beyond ``index`` skip their compute via pl.when.
+
+Two variants share the kernel structure:
+  * ``mla_decode_kernel``       — contiguous (B, S, .) cache, one shared
+    scalar ``index``.
+  * ``mla_decode_paged_kernel`` — paged block pool + per-request block
+    tables and ragged ``indices`` (continuous batching); the block table
+    rides the scalar-prefetch operand so the BlockSpec index_map gathers
+    pool blocks directly (vLLM-style paged attention).
 """
 from __future__ import annotations
 
@@ -69,6 +77,98 @@ def _kernel(idx_ref, q_ref, ckv_ref, krope_ref, o_ref, acc, m_sc, l_sc, *,
         l = l_sc[...]
         l_safe = jnp.where(l == 0.0, 1.0, l)
         o_ref[0] = (acc[...] / l_safe).astype(o_ref.dtype)
+
+
+def _paged_kernel(bt_ref, idx_ref, q_ref, ckv_ref, krope_ref, o_ref,
+                  acc, m_sc, l_sc, *, scale, v_dim, bs, nb):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+    index = idx_ref[b]                      # newest valid position, or -1
+
+    @pl.when(j == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+
+    @pl.when(j * bs <= index)   # skip request-local blocks beyond the end
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)          # (H, Dl+Dr)
+        ckv = ckv_ref[0].astype(jnp.float32)      # (bs, Dl) — pool block
+        krope = krope_ref[0].astype(jnp.float32)  # (bs, Dr)
+        s = (jax.lax.dot_general(q[:, :v_dim], ckv, (((1,), (1,)), ((), ())))
+             + jax.lax.dot_general(q[:, v_dim:], krope,
+                                   (((1,), (1,)), ((), ())))) * scale
+        k_pos = j * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = k_pos <= index
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_sc[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_sc[...] = l_sc[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc[...] = acc[...] * corr + p @ ckv
+        m_sc[...] = m_new
+
+    @pl.when(j == nb - 1)
+    def _done():
+        l = l_sc[...]
+        l_safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc[...] / l_safe).astype(o_ref.dtype)
+
+
+def mla_decode_paged_kernel(q_full, ckv_pages, krope_pages, block_tables,
+                            indices, *, softmax_scale: Optional[float] = None,
+                            interpret: Optional[bool] = None):
+    """Paged flash-decode over the latent block pool.
+
+    q_full (B, H, Dl+Dr); ckv_pages (N, bs, Dl); krope_pages (N, bs, Dr);
+    block_tables (B, nb) int32; indices (B,) int32 — newest valid position
+    per request (ragged; -1 = inactive slot -> zero output).
+    Returns (B, H, Dl).
+
+    Both the block table and the per-request indices ride the scalar-
+    prefetch operand: the BlockSpec index_map dereferences
+    ``block_tables[b, j]`` so each grid step DMAs exactly one pool block
+    HBM->VMEM — the single-stream property of the contiguous kernel is
+    preserved under paging, and blocks past ``indices[b]`` skip their
+    compute (the DMA'd null/stale block is never read by the math).
+    """
+    B, H, D = q_full.shape
+    v_dim, dr = ckv_pages.shape[-1], krope_pages.shape[-1]
+    bs = ckv_pages.shape[1]
+    nb = block_tables.shape[1]
+    scale = softmax_scale if softmax_scale is not None else D ** -0.5
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    kernel = functools.partial(_paged_kernel, scale=scale, v_dim=v_dim,
+                               bs=bs, nb=nb)
+    block_tables = jnp.asarray(block_tables, jnp.int32)
+    indices = jnp.asarray(indices, jnp.int32)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, nb),
+            in_specs=[
+                pl.BlockSpec((1, H, D), lambda b, j, bt, idx: (b, 0, 0)),
+                pl.BlockSpec((1, bs, v_dim),
+                             lambda b, j, bt, idx: (bt[b, j], 0, 0)),
+                pl.BlockSpec((1, bs, dr),
+                             lambda b, j, bt, idx: (bt[b, j], 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, H, v_dim),
+                                   lambda b, j, bt, idx: (b, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((H, v_dim), jnp.float32),
+                pltpu.VMEM((H, 1), jnp.float32),
+                pltpu.VMEM((H, 1), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, H, v_dim), q_full.dtype),
+        interpret=interpret,
+    )(block_tables, indices, q_full, ckv_pages, krope_pages)
+    return out
 
 
 def mla_decode_kernel(q_full, ckv, krope, index, *,

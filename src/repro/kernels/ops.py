@@ -15,9 +15,10 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as PS
 
+from .. import compat
 from . import ref
 from .flash_attention import flash_attention
-from .mla_decode import mla_decode_kernel
+from .mla_decode import mla_decode_kernel, mla_decode_paged_kernel
 
 
 def attention(q, k, v, *, impl: str = "ref", causal: bool = True,
@@ -35,8 +36,8 @@ def attention(q, k, v, *, impl: str = "ref", causal: bool = True,
     dp = dp_axes if dp_axes is not None else tuple(
         a for a in ("pod", "data") if a in mesh.axis_names)
     qs = PS(dp, "model", None, None)
-    return jax.shard_map(fn, mesh=mesh, in_specs=(qs, qs, qs), out_specs=qs,
-                         check_vma=False)(q, k, v)
+    return compat.shard_map(fn, mesh=mesh, in_specs=(qs, qs, qs),
+                            out_specs=qs, check_vma=False)(q, k, v)
 
 
 def mla_decode_attention(q_full, ckv, krope, index, *, impl: str = "ref",
@@ -60,9 +61,40 @@ def mla_decode_attention(q_full, ckv, krope, index, *, impl: str = "ref",
         return fn(q_full, ckv, krope, index)
     dp = dp_axes if dp_axes is not None else tuple(
         a for a in ("pod", "data") if a in mesh.axis_names)
-    return jax.shard_map(
+    return compat.shard_map(
         lambda q, c, r, i: fn(q, c, r, i), mesh=mesh,
         in_specs=(PS(dp, "model", None), PS(dp, None, None),
                   PS(dp, None, None), PS()),
         out_specs=PS(dp, "model", None), check_vma=False,
     )(q_full, ckv, krope, index)
+
+
+def mla_decode_paged_attention(q_full, ckv_pages, krope_pages, block_tables,
+                               indices, *, impl: str = "ref",
+                               softmax_scale: Optional[float] = None,
+                               mesh: Optional[Mesh] = None, dp_axes=None):
+    """Paged absorbed-MLA decode: q_full (B,H,Dl+Dr), pool pages
+    (N,bs,Dl)/(N,bs,Dr), block_tables (B,nb), per-request ``indices``
+    (B,) -> (B,H,Dl).
+
+    Under shard_map the batch (and with it the block tables / indices)
+    shards over the DP axes and heads over 'model'; the block POOL is
+    replicated over 'model' exactly like the contiguous latent cache (the
+    MQA structure of absorbed MLA: head shards re-read the same compact
+    pool)."""
+    if impl == "ref":
+        return ref.mla_decode_paged_ref(q_full, ckv_pages, krope_pages,
+                                        block_tables, indices,
+                                        softmax_scale=softmax_scale)
+    fn = functools.partial(mla_decode_paged_kernel,
+                           softmax_scale=softmax_scale)
+    if mesh is None:
+        return fn(q_full, ckv_pages, krope_pages, block_tables, indices)
+    dp = dp_axes if dp_axes is not None else tuple(
+        a for a in ("pod", "data") if a in mesh.axis_names)
+    return compat.shard_map(
+        lambda q, c, r, t, i: fn(q, c, r, t, i), mesh=mesh,
+        in_specs=(PS(dp, "model", None), PS(None, None, None),
+                  PS(None, None, None), PS(dp, None), PS(dp)),
+        out_specs=PS(dp, "model", None), check_vma=False,
+    )(q_full, ckv_pages, krope_pages, block_tables, indices)

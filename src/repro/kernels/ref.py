@@ -56,3 +56,36 @@ def mla_decode_ref(q_full, ckv, krope, index, *,
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhs,bsk->bhk", p, ckv.astype(jnp.float32))
     return o.astype(q_full.dtype)
+
+
+def mla_decode_paged_ref(q_full, ckv_pages, krope_pages, block_tables,
+                         indices, *, softmax_scale: Optional[float] = None):
+    """Paged absorbed-MLA decode oracle.
+
+    q_full      : (B, H, Dl+Dr)
+    ckv_pages   : (N, bs, Dl); krope_pages: (N, bs, Dr) — global block pool
+    block_tables: (B, nb) int32 — request-local block j -> pool block
+    indices     : (B,) int32 — newest valid position per request (attend to
+                  pos <= indices[b]; a negative index yields a zero row).
+    Returns (B, H, Dl).
+
+    Gathers each request's pages into a contiguous view and reduces exactly
+    like :func:`mla_decode_ref` with a per-request mask.  The Pallas kernel
+    reads the pool in place instead (no gather) — this is the numerics
+    oracle, not the deployment path.
+    """
+    B, H, D = q_full.shape
+    bt = jnp.asarray(block_tables, jnp.int32)
+    nb, bs = bt.shape[1], ckv_pages.shape[1]
+    idx = jnp.asarray(indices, jnp.int32)
+    ckv = ckv_pages[bt].reshape(B, nb * bs, ckv_pages.shape[-1])
+    krope = krope_pages[bt].reshape(B, nb * bs, krope_pages.shape[-1])
+    scale = softmax_scale if softmax_scale is not None else D ** -0.5
+    cache = jnp.concatenate([ckv, krope], axis=-1)
+    s = jnp.einsum("bhd,bsd->bhs", q_full.astype(jnp.float32),
+                   cache.astype(jnp.float32)) * scale
+    valid = jnp.arange(nb * bs)[None, :] <= idx[:, None]
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+    p = jnp.where(valid[:, None, :], jax.nn.softmax(s, axis=-1), 0.0)
+    o = jnp.einsum("bhs,bsk->bhk", p, ckv.astype(jnp.float32))
+    return o.astype(q_full.dtype)

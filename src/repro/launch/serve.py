@@ -6,6 +6,11 @@
 ``--scheme auto`` runs the paper's co-design insight end-to-end: the MLA
 execution scheme (rc / ru / seq) is picked per deployment point from the
 platform's compute-to-bandwidth ratio (core.schemes.auto_dispatch).
+
+``--paged`` serves the same load through the continuous-batching runtime
+instead (paged latent-KV pool + per-request block tables + mid-generation
+admission; runtime.engine).  With ``--scheme auto`` the dispatch re-runs
+EVERY step on the live (batch, max cache_len) point.
 """
 from __future__ import annotations
 
@@ -36,12 +41,20 @@ def main():
     ap.add_argument("--platform", default="tpu_v5e")
     ap.add_argument("--impl", default="ref")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--paged", action="store_true",
+                    help="continuous batching over the paged latent pool")
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--num-blocks", type=int, default=0,
+                    help="pool blocks (0 = sized for the request load)")
     args = ap.parse_args()
 
     cfg = configs.smoke(args.arch) if args.smoke else configs.full(args.arch)
     dtype = jnp.float32
     params = nnm.init_params(jax.random.PRNGKey(args.seed),
                              models.model_defs(cfg), dtype)
+
+    if args.paged:
+        return _serve_paged(args, cfg, params, dtype)
 
     scheme = args.scheme
     if scheme == "auto":
@@ -93,27 +106,42 @@ def main():
     print("[serve] sample:", np.stack(out_tokens, 1)[0][:16])
 
 
+def _serve_paged(args, cfg, params, dtype):
+    """Continuous-batching path: the fixed (batch x prompt x gen) load
+    becomes a staggered request stream against the paged runtime."""
+    from repro.runtime import PagedMLAEngine, Request, blocks_for
+
+    bs = args.block_size
+    per_req = blocks_for(args.prompt_len + args.gen + 1, bs)
+    num_blocks = args.num_blocks or (1 + args.batch * per_req)
+    engine = PagedMLAEngine(
+        cfg, params, num_blocks=num_blocks, block_size=bs,
+        max_batch=args.batch, max_blocks_per_req=per_req,
+        compute_dtype=dtype, impl=args.impl, scheme=args.scheme,
+        platform=PLATFORMS[args.platform])
+    rng = np.random.default_rng(args.seed + 1)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab,
+                                        (args.prompt_len,)).astype(np.int32),
+                    max_new=args.gen, arrival=2 * i)
+            for i in range(args.batch)]
+    t0 = time.time()
+    summary = engine.run(reqs, log_every=8)
+    dt = time.time() - t0
+    print(f"[serve] paged: {summary['decode_tokens']:.0f} decode tokens in "
+          f"{dt:.2f}s ({summary['tokens_per_s']:.1f} tok/s), "
+          f"{summary['mid_gen_admissions']:.0f} mid-generation admissions, "
+          f"cache utilization {summary['cache_utilization']:.2f}, "
+          f"schemes {summary['schemes_used']}")
+    first = min(engine.sched.finished, key=lambda r: r.rid)
+    print("[serve] sample:", np.asarray(first.output[:16]))
+
+
 def _prepare_mla(params, cfg, scheme):
     """Attach absorbed weights on every MLA sublayer (stacked or not)."""
     if scheme != "ru":
         return params
-
-    def visit(node):
-        if isinstance(node, dict):
-            if "w_uq" in node and "w_uk" in node:
-                w_uq = node["w_uq"]
-                mcfg = cfg.mla_config()
-                if w_uq.ndim == 4:   # stacked (layers, Q, H, d)
-                    absorb = jax.vmap(
-                        lambda q, k: mlalib.absorb_qk({"w_uq": q, "w_uk": k},
-                                                      mcfg))(w_uq, node["w_uk"])
-                else:
-                    absorb = mlalib.absorb_qk(node, mcfg)
-                return {**node, "w_absorb": absorb.astype(w_uq.dtype)}
-            return {k: visit(v) for k, v in node.items()}
-        return node
-
-    return visit(params)
+    return mlalib.attach_absorbed_tree(params, cfg.mla_config())
 
 
 if __name__ == "__main__":

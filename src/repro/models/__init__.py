@@ -47,3 +47,14 @@ def init_cache(cfg: ModelConfig, batch: int, capacity: int, dtype=None):
     import jax.numpy as jnp
     dtype = dtype if dtype is not None else jnp.bfloat16
     return _mod(cfg).init_cache(cfg, batch, capacity, dtype)
+
+
+def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
+                     dtype=None):
+    """Paged latent-KV block pool tree for continuous-batching decode
+    (MLA architectures only; see models.lm.init_paged_cache)."""
+    import jax.numpy as jnp
+    if cfg.family == "encdec":
+        raise NotImplementedError("paged serving targets decoder-only MLA")
+    dtype = dtype if dtype is not None else jnp.bfloat16
+    return lm.init_paged_cache(cfg, num_blocks, block_size, dtype)

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import compat
 from ..core import cache as cachelib
 from ..core import mla as mlalib
 from ..core.attention import gqa_attention, gqa_decode
@@ -42,6 +43,10 @@ class Ctx:
     scheme: str = "seq"             # MLA execution scheme
     capacity: int = 0               # cache capacity for prefill
     shard_mode: str = "train"       # sharding policy (see nn.sharding)
+    # Paged continuous-batching decode (MLA only): when ``lengths`` is set
+    # the cache slice is a paged pool and ``index`` is unused.
+    block_tables: Any = None        # (B, max_blocks) int32
+    lengths: Any = None             # (B,) int32 — ragged per-request
 
 
 # ------------------------------------------------------------------ defs ---
@@ -96,6 +101,20 @@ def sub_cache(cfg: ModelConfig, desc: Sub, batch: int, capacity: int,
     if desc.mixer == "slstm":
         return xlstmlib.slstm_state_init(cfg, batch)
     return {}
+
+
+def sub_paged_cache(cfg: ModelConfig, desc: Sub, num_blocks: int,
+                    block_size: int, dtype=jnp.bfloat16) -> Dict:
+    """Paged decode-state for one sublayer.  Only MLA latent caches page
+    (the paper's compact cache is what makes a shared block pool pay off);
+    other mixers raise — serve those models through the contiguous path."""
+    if desc.mixer == "attn" and cfg.attn_kind == "mla":
+        return cachelib.paged_latent_cache(num_blocks, block_size,
+                                           cfg.kv_lora_rank,
+                                           cfg.qk_rope_dim, dtype)
+    raise NotImplementedError(
+        f"paged serving requires MLA attention sublayers, got "
+        f"mixer={desc.mixer!r} attn_kind={cfg.attn_kind!r}")
 
 
 # ------------------------------------------------------------- attention ---
@@ -228,6 +247,17 @@ def _mla_seq(params, cfg: ModelConfig, desc: Sub, x, ctx: Ctx):
 
 def _mla_step(params, cfg: ModelConfig, desc: Sub, x_t, ctx: Ctx):
     mcfg = cfg.mla_config()
+    if ctx.lengths is not None:     # paged continuous-batching decode
+        decode_kernel = None
+        if ctx.impl == "kernel":
+            def decode_kernel(q_full, ckv, krope, tables, idx, softmax_scale):
+                return kops.mla_decode_paged_attention(
+                    q_full, ckv, krope, tables, idx, impl="kernel",
+                    softmax_scale=softmax_scale, mesh=ctx.mesh)
+        return mlalib.mla_decode_paged(params, mcfg, x_t, ctx.cache,
+                                       ctx.block_tables, ctx.lengths,
+                                       scheme=ctx.scheme,
+                                       decode_kernel=decode_kernel)
     decode_kernel = None
     if ctx.impl == "kernel":
         def decode_kernel(q_full, ckv, krope, index, softmax_scale):
@@ -272,7 +302,7 @@ def _slstm_sharded(params, cfg: ModelConfig, x, ctx: Ctx):
     pspecs = jax.tree.map(lambda _: PS(), params)
     state_specs = {k: PS(dp, None) for k in ("h", "c", "n", "m")} \
         if return_state else {}
-    out, state = jax.shard_map(
+    out, state = compat.shard_map(
         local, mesh=ctx.mesh,
         in_specs=(pspecs, PS(dp, None, None)),
         out_specs=(PS(dp, None, None), state_specs),

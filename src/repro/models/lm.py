@@ -156,13 +156,18 @@ def prefill(params, cfg: ModelConfig, tokens, *, embeds=None, capacity: int = 0,
 
 def decode_step(params, cfg: ModelConfig, token, cache, index, *,
                 compute_dtype=jnp.bfloat16, impl: str = "ref", mesh=None,
-                scheme: str = "seq", shard_mode: str = "train"
-                ) -> Tuple[jax.Array, Dict]:
+                scheme: str = "seq", shard_mode: str = "train",
+                block_tables=None, lengths=None) -> Tuple[jax.Array, Dict]:
     """token: (B,) int32; index: scalar (current cache length).
-    Returns (logits (B, V), updated cache)."""
+    Returns (logits (B, V), updated cache).
+
+    Paged continuous-batching decode: pass ``lengths`` (B,) int32 ragged
+    per-request cache lengths and ``block_tables`` (B, max_blocks) with a
+    paged ``cache`` tree (see init_paged_cache); ``index`` is ignored."""
     x = _embed(params, cfg, token[:, None], None, compute_dtype)[:, 0]
     ctx = Ctx(mode="decode", positions=None, index=index, impl=impl,
-              mesh=mesh, scheme=scheme, shard_mode=shard_mode)
+              mesh=mesh, scheme=scheme, shard_mode=shard_mode,
+              block_tables=block_tables, lengths=lengths)
     x, caches, _ = _run_stack(params, cfg, x, ctx, cache)
     return _logits(params, cfg, x), caches
 
@@ -178,6 +183,28 @@ def init_cache(cfg: ModelConfig, batch: int, capacity: int,
     }
     if n_periods:
         one = {f"s{i}": sub_cache(cfg, d, batch, capacity, dtype)
+               for i, d in enumerate(period)}
+        out["period"] = jax.tree.map(
+            lambda a: jnp.tile(a[None], (n_periods,) + (1,) * a.ndim), one)
+    return out
+
+
+def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
+                     dtype=jnp.bfloat16) -> Dict:
+    """Paged decode-state tree: same layer structure as init_cache but every
+    MLA latent cache is a (num_blocks, block_size, .) block pool shared by
+    all requests.  Block tables / lengths live OUTSIDE this tree (one table
+    per request, shared across layers) and are passed to decode_step."""
+    from .blocks import sub_paged_cache
+    prefix, period, n_periods, suffix = cfg.layer_plan()
+    out: Dict = {
+        "prefix": {f"l{i}": sub_paged_cache(cfg, d, num_blocks, block_size, dtype)
+                   for i, d in enumerate(prefix)},
+        "suffix": {f"l{i}": sub_paged_cache(cfg, d, num_blocks, block_size, dtype)
+                   for i, d in enumerate(suffix)},
+    }
+    if n_periods:
+        one = {f"s{i}": sub_paged_cache(cfg, d, num_blocks, block_size, dtype)
                for i, d in enumerate(period)}
         out["period"] = jax.tree.map(
             lambda a: jnp.tile(a[None], (n_periods,) + (1,) * a.ndim), one)

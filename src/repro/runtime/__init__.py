@@ -1,3 +1,7 @@
-from .steps import (TrainStepConfig, lm_loss, make_prefill_step,
-                    make_serve_step, make_train_step, cache_pspecs)
+from .steps import (TrainStepConfig, lm_loss, make_paged_serve_step,
+                    make_prefill_step, make_serve_step, make_train_step,
+                    cache_pspecs, scatter_prefill_to_paged)
 from .loop import LoopConfig, SimulatedFailure, TrainLoop
+from .scheduler import (BlockAllocator, ContinuousScheduler, Request,
+                        blocks_for)
+from .engine import EngineStats, PagedMLAEngine

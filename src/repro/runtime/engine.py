@@ -1,0 +1,227 @@
+"""Continuous-batching MLA serving engine over the paged latent-KV pool.
+
+Glues the host-side ``ContinuousScheduler`` (admission, block tables,
+eviction) to the jitted device steps:
+
+  * per-request prefill (bucketed capacities to bound recompiles) feeding
+    ``scatter_prefill_to_paged`` — the prefill->pool handoff;
+  * one paged decode step per scheduler tick over ALL slots (inactive
+    slots ride along pointing at the null block; their logits are
+    discarded);
+  * ``schemes.auto_dispatch`` re-run EVERY step on the live
+    (batch, max cache_len) point with the paged-bytes cost term, so the
+    rc/ru/seq choice tracks the batch composition — jitted steps are
+    cached per scheme and swapped freely because all schemes compute the
+    same function with identical weights (the paper's core claim).
+
+Used by examples/serve_mla.py, benchmarks/bench_serving.py and
+``python -m repro.launch.serve --paged``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from .. import models
+from ..core import mla as mlalib
+from ..core.schemes import PlatformPoint, auto_dispatch
+from ..models.common import ModelConfig
+from .scheduler import ContinuousScheduler, Request, blocks_for
+from .steps import (make_paged_serve_step, make_prefill_step,
+                    scatter_prefill_to_paged)
+
+
+@dataclasses.dataclass
+class EngineStats:
+    steps: int = 0
+    decode_tokens: int = 0
+    prefill_tokens: int = 0
+    admissions: int = 0
+    mid_gen_admissions: int = 0     # admitted while other slots were decoding
+    preemptions: int = 0
+    scheme_switches: int = 0
+    util_valid_sum: float = 0.0     # time-avg of valid/allocated
+    util_pool_sum: float = 0.0
+    util_samples: int = 0
+    wall: float = 0.0
+    schemes_used: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def summary(self) -> Dict[str, float]:
+        n = max(self.util_samples, 1)
+        return {
+            "steps": self.steps,
+            "decode_tokens": self.decode_tokens,
+            "prefill_tokens": self.prefill_tokens,
+            "admissions": self.admissions,
+            "mid_gen_admissions": self.mid_gen_admissions,
+            "preemptions": self.preemptions,
+            "scheme_switches": self.scheme_switches,
+            "tokens_per_s": (self.decode_tokens / self.wall)
+            if self.wall > 0 else 0.0,
+            "cache_utilization": self.util_valid_sum / n,
+            "pool_occupancy": self.util_pool_sum / n,
+            "schemes_used": dict(self.schemes_used),
+        }
+
+
+class PagedMLAEngine:
+    def __init__(self, cfg: ModelConfig, params, *, num_blocks: int,
+                 block_size: int, max_batch: int,
+                 max_blocks_per_req: Optional[int] = None,
+                 compute_dtype=jnp.float32, impl: str = "ref",
+                 scheme: str = "auto",
+                 platform: Optional[PlatformPoint] = None):
+        if cfg.attn_kind != "mla":
+            raise NotImplementedError("PagedMLAEngine requires an MLA model")
+        if scheme == "auto" and platform is None:
+            raise ValueError("scheme='auto' needs a PlatformPoint")
+        self.cfg = cfg
+        self.mla = cfg.mla_config()
+        # 'ru' streams the precomputed absorbed weights; attach them once
+        # so every scheme's jitted step sees the same param tree.  A fixed
+        # non-ru scheme never reads them — skip the compute and memory.
+        self.params = mlalib.attach_absorbed_tree(params, self.mla) \
+            if scheme in ("auto", "ru") else params
+        self.compute_dtype = compute_dtype
+        self.impl = impl
+        self.scheme = scheme
+        self.platform = platform
+        self.block_size = block_size
+        # max_blocks_per_req bounds the block-table WIDTH, i.e. the extent
+        # every decode step scans per request — size it to the workload's
+        # longest request, not the pool (nb = pool size would make each
+        # step's cost scale with total pool capacity).
+        self.sched = ContinuousScheduler(
+            num_blocks=num_blocks, block_size=block_size,
+            max_batch=max_batch, max_blocks_per_req=max_blocks_per_req)
+        self.pool = models.init_paged_cache(cfg, num_blocks, block_size,
+                                            compute_dtype)
+        self.pending = np.zeros((max_batch,), np.int32)   # next token to feed
+        self._decode_steps: Dict[str, object] = {}
+        self._prefills: Dict[int, object] = {}
+        self._last_scheme: Optional[str] = None
+        self.stats = EngineStats()
+
+    # ------------------------------------------------------------ build ---
+
+    def _decode_step(self, scheme: str):
+        if scheme not in self._decode_steps:
+            self._decode_steps[scheme] = make_paged_serve_step(
+                self.cfg, None, compute_dtype=self.compute_dtype,
+                impl=self.impl, scheme=scheme)
+        return self._decode_steps[scheme]
+
+    def _prefill(self, cap: int):
+        if cap not in self._prefills:
+            # prefill attention runs in "MHA mode"; the scheme only matters
+            # at decode, so one prefill serves every scheme.
+            self._prefills[cap] = make_prefill_step(
+                self.cfg, None, batch=1, capacity=cap,
+                compute_dtype=self.compute_dtype, impl=self.impl)
+        return self._prefills[cap]
+
+    def _pick_scheme(self) -> str:
+        if self.scheme != "auto":
+            self._last_scheme = self.scheme
+            return self.scheme
+        active = self.sched.active_slots
+        cache_len = int(self.sched.lengths[active].max()) + 1 if active else 1
+        s = auto_dispatch(self.mla, self.platform, cache_len=cache_len,
+                          batch=max(len(active), 1),
+                          paged_block=self.block_size)
+        if self._last_scheme is not None and s != self._last_scheme:
+            self.stats.scheme_switches += 1
+        self._last_scheme = s
+        return s
+
+    # ------------------------------------------------------------- run ----
+
+    def submit(self, req: Request) -> None:
+        self.sched.submit(req)
+
+    def step(self) -> None:
+        """One scheduler tick: admit + prefill, then one batched decode
+        step over all slots."""
+        t0 = time.perf_counter()
+        step_i = self.stats.steps
+        was_decoding = self.sched.n_active > 0
+
+        # grow running requests BEFORE admitting: otherwise a just-admitted
+        # request could take the last blocks, get preempted immediately,
+        # and throw away the prefill it just paid for.
+        self.stats.preemptions += len(self.sched.ensure_step_capacity())
+
+        for slot, req in self.sched.try_admit(step_i):
+            # cache capacity buckets to a block multiple; the token array
+            # stays unpadded so prefill's last-position logits are the
+            # real prompt end (jit retraces per distinct prompt length —
+            # drivers should quantize prompt lengths).
+            cap = blocks_for(req.plen, self.block_size) * self.block_size
+            logits, entries = self._prefill(cap)(
+                self.params, jnp.asarray(req.prompt, jnp.int32)[None])
+            pages = jnp.asarray(self.sched.block_table[slot], jnp.int32)
+            self.pool = scatter_prefill_to_paged(self.pool, entries, pages)
+            tok = int(jnp.argmax(logits[0]))
+            self.stats.admissions += 1
+            self.stats.prefill_tokens += req.plen
+            if was_decoding:
+                self.stats.mid_gen_admissions += 1
+            if self.sched.record_prefill_sample(slot, tok, step_i) is None:
+                self.pending[slot] = tok
+
+        active = self.sched.active_slots
+        if active:
+            scheme = self._pick_scheme()
+            self.stats.schemes_used[scheme] = \
+                self.stats.schemes_used.get(scheme, 0) + 1
+            step_fn = self._decode_step(scheme)
+            logits, self.pool = step_fn(
+                self.params, jnp.asarray(self.pending),
+                self.pool, jnp.asarray(self.sched.block_table),
+                jnp.asarray(self.sched.lengths))
+            sampled = np.asarray(jnp.argmax(logits, axis=-1))
+            picks = {s: int(sampled[s]) for s in active}
+            self.sched.advance(picks, step_i)
+            for s, t in picks.items():
+                self.pending[s] = t
+            self.stats.decode_tokens += len(active)
+
+        u = self.sched.utilization()
+        self.stats.util_valid_sum += u["valid_frac"]
+        self.stats.util_pool_sum += u["pool_frac"]
+        self.stats.util_samples += 1
+        self.stats.steps += 1
+        self.stats.wall += time.perf_counter() - t0
+
+    def run(self, requests: List[Request], *, max_steps: int = 100_000,
+            log_every: int = 0, log=print) -> Dict[str, float]:
+        """Drive a request stream to completion.  ``req.arrival`` is the
+        step index at which a request joins the waiting queue (Poisson
+        arrivals in the example driver)."""
+        todo = sorted(requests, key=lambda r: r.arrival)
+        i = 0
+        while not (i >= len(todo) and self.sched.all_done):
+            while i < len(todo) and todo[i].arrival <= self.stats.steps:
+                self.submit(todo[i])
+                i += 1
+            self.step()
+            if log_every and self.stats.steps % log_every == 0:
+                u = self.sched.utilization()
+                log(f"[engine] step {self.stats.steps}: "
+                    f"active={self.sched.n_active} "
+                    f"waiting={len(self.sched.waiting)} "
+                    f"done={len(self.sched.finished)} "
+                    f"util={u['valid_frac']:.2f} "
+                    f"pool={u['pool_frac']:.2f} "
+                    f"scheme={self._last_scheme}")
+            if self.stats.steps >= max_steps:
+                raise RuntimeError(f"did not drain in {max_steps} steps")
+        return self.stats.summary()
+
+
+
+

@@ -1,0 +1,287 @@
+"""Host-side continuous-batching scheduler over the paged latent-KV pool.
+
+The device side (core.cache paged layout, kernels.mla_decode paged kernel)
+is pure and shape-static; everything ragged and dynamic lives here, in
+numpy, between jitted steps:
+
+  * ``BlockAllocator`` — a free list over the global block pool.  Block 0
+    is the reserved NULL block: unassigned block-table entries point at it
+    so every block-table-driven gather/DMA stays in-bounds.
+  * ``ContinuousScheduler`` — fixed ``max_batch`` decode slots.  Requests
+    are admitted FCFS into free slots whenever the pool can cover their
+    prompt (+1 for the first generated token); each decode step lazily
+    allocates one more block for any request crossing a block boundary;
+    finished requests free their blocks immediately, so capacity flows to
+    the waiting queue mid-generation — the continuous-batching property.
+  * Out-of-blocks mid-decode preempts the youngest running request
+    (recompute-style: its prompt + generated tokens re-enter the waiting
+    queue as a longer prompt), so the oldest requests always make
+    progress.
+
+The scheduler is deliberately model-agnostic: it hands out numpy block
+tables / lengths; ``runtime.engine`` owns params, jitted steps and the
+prefill -> pool scatter.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+NULL_BLOCK = 0
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (plen,) int32
+    max_new: int                  # generation budget
+    arrival: int = 0              # driver step at which it becomes visible
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    slot: int = -1
+    admitted_step: int = -1
+    finished_step: int = -1
+    n_preempted: int = 0
+    orig_plen: int = -1           # preemption folds output into the prompt
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32)
+        if self.orig_plen < 0:
+            self.orig_plen = self.plen
+
+    @property
+    def plen(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def output(self) -> List[int]:
+        """All generated tokens, including any folded into the prompt by a
+        preemption."""
+        return list(self.prompt[self.orig_plen:]) + list(self.tokens)
+
+    @property
+    def done(self) -> bool:
+        return len(self.tokens) >= self.max_new
+
+
+class BlockAllocator:
+    """Free-list allocator over ``num_blocks`` fixed-size blocks; block 0
+    (NULL) is never handed out."""
+
+    def __init__(self, num_blocks: int):
+        if num_blocks < 2:
+            raise ValueError("need >= 2 blocks (block 0 is reserved)")
+        self.num_blocks = num_blocks
+        self._free: List[int] = list(range(num_blocks - 1, 0, -1))
+        self._free_set = set(self._free)    # O(1) double-free detection
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_allocated(self) -> int:
+        return (self.num_blocks - 1) - len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Pop ``n`` blocks, or None (and no change) if the pool is short."""
+        if n < 0:
+            raise ValueError(n)
+        if n > len(self._free):
+            return None
+        got = [self._free.pop() for _ in range(n)]
+        self._free_set.difference_update(got)
+        return got
+
+    def free(self, blocks: List[int]) -> None:
+        for b in blocks:
+            if not (0 < b < self.num_blocks):
+                raise ValueError(f"bad block id {b}")
+            if b in self._free_set:
+                raise ValueError(f"double free of block {b}")
+            self._free.append(b)
+            self._free_set.add(b)
+
+
+def blocks_for(n_tokens: int, block_size: int) -> int:
+    return -(-n_tokens // block_size)
+
+
+class ContinuousScheduler:
+    def __init__(self, *, num_blocks: int, block_size: int, max_batch: int,
+                 max_blocks_per_req: Optional[int] = None):
+        self.allocator = BlockAllocator(num_blocks)
+        self.block_size = block_size
+        self.max_batch = max_batch
+        self.max_blocks = max_blocks_per_req or (num_blocks - 1)
+        self.block_table = np.full((max_batch, self.max_blocks), NULL_BLOCK,
+                                   np.int32)
+        self.lengths = np.zeros((max_batch,), np.int32)
+        self.slots: List[Optional[Request]] = [None] * max_batch
+        self.blocks_of: Dict[int, List[int]] = {}
+        self.waiting: Deque[Request] = collections.deque()
+        self.finished: List[Request] = []
+        self._admit_order: List[int] = []   # slots, oldest admission first
+
+    # ------------------------------------------------------------ queue ---
+
+    def submit(self, req: Request) -> None:
+        self.waiting.append(req)
+
+    @property
+    def active_slots(self) -> List[int]:
+        return [s for s in range(self.max_batch) if self.slots[s] is not None]
+
+    @property
+    def n_active(self) -> int:
+        return len(self.active_slots)
+
+    @property
+    def all_done(self) -> bool:
+        return not self.waiting and not self.active_slots
+
+    # -------------------------------------------------------- admission ---
+
+    def try_admit(self, step: int = 0) -> List[Tuple[int, Request]]:
+        """FCFS admission into free slots.  A request needs blocks for its
+        whole prompt plus the first generated token; if the pool cannot
+        cover the queue head, admission stops (no head-of-line skipping —
+        keeps FCFS latency honest).  Returns [(slot, request)] admitted
+        now; the engine prefills them and scatters into the pool."""
+        admitted = []
+        for slot in range(self.max_batch):
+            if not self.waiting:
+                break
+            if self.slots[slot] is not None:
+                continue
+            req = self.waiting[0]
+            need = blocks_for(req.plen + 1, self.block_size)
+            if need > self.max_blocks:
+                raise ValueError(
+                    f"request {req.rid}: prompt {req.plen} needs {need} "
+                    f"blocks > max_blocks_per_req {self.max_blocks}")
+            if need > self.allocator.num_blocks - 1:
+                # can NEVER fit, even with an empty pool — fail fast
+                # instead of refusing admission forever
+                raise ValueError(
+                    f"request {req.rid}: prompt {req.plen} needs {need} "
+                    f"blocks > pool size {self.allocator.num_blocks - 1}")
+            blocks = self.allocator.alloc(need)
+            if blocks is None:          # out of blocks: admission refused
+                break
+            self.waiting.popleft()
+            req.slot, req.admitted_step = slot, step
+            self.slots[slot] = req
+            self.blocks_of[slot] = blocks
+            self.block_table[slot] = NULL_BLOCK
+            self.block_table[slot, :need] = blocks
+            self.lengths[slot] = req.plen
+            self._admit_order.append(slot)
+            admitted.append((slot, req))
+        return admitted
+
+    # ----------------------------------------------------- decode cycle ---
+
+    def ensure_step_capacity(self) -> List[Request]:
+        """Grow each active request's allocation so the next decode token
+        (written at position lengths[slot]) has a block.  Oldest admissions
+        grow first; on pool exhaustion the YOUNGEST running request is
+        preempted (recompute-style) so the oldest always make progress.
+        Returns the preempted requests."""
+        preempted: List[Request] = []
+        for slot in list(self._admit_order):          # oldest first
+            if self.slots[slot] is None:              # already preempted
+                continue
+            need = blocks_for(int(self.lengths[slot]) + 1, self.block_size)
+            if need > self.max_blocks:
+                raise ValueError(f"request in slot {slot} exceeds "
+                                 f"max_blocks_per_req {self.max_blocks}")
+            while need > len(self.blocks_of[slot]):
+                got = self.allocator.alloc(1)
+                if got is None:
+                    if self.n_active <= 1:
+                        raise RuntimeError(
+                            "pool exhausted with a single running request; "
+                            "increase num_blocks or max cache length")
+                    victim, vslot = self._preempt_youngest()
+                    preempted.append(victim)
+                    if vslot == slot:     # preempted ourselves: stop growing
+                        break
+                    continue
+                self.blocks_of[slot].extend(got)
+                self.block_table[slot, len(self.blocks_of[slot]) - 1] = got[0]
+        return preempted
+
+    def _preempt_youngest(self) -> Tuple[Request, int]:
+        slot = self._admit_order[-1]
+        req = self.slots[slot]
+        # recompute-style: prompt + generated so far re-enter the queue as
+        # a longer prompt (greedy decoding makes the replay identical)
+        req.prompt = np.concatenate(
+            [req.prompt, np.asarray(req.tokens, np.int32)])
+        req.max_new -= len(req.tokens)
+        req.tokens = []
+        req.n_preempted += 1
+        self._release_slot(slot)
+        self.waiting.appendleft(req)
+        return req, slot
+
+    def record_prefill_sample(self, slot: int, tok: int,
+                              step: int = 0) -> Optional[Request]:
+        """Account the token sampled from the PREFILL logits (generated
+        token #1 — sampled but not yet written to the cache).  Returns the
+        request if that already exhausts its budget (max_new == 1)."""
+        req = self.slots[slot]
+        req.tokens.append(int(tok))
+        if req.done:
+            req.finished_step = step
+            self._release_slot(slot)
+            self.finished.append(req)
+            return req
+        return None
+
+    def advance(self, sampled: Dict[int, int], step: int = 0) -> List[Request]:
+        """Account one decode step: ``sampled[slot]`` is the token the step
+        just produced for that slot; the token fed INTO the step is now in
+        the cache (lengths += 1).  Finished requests are evicted and their
+        blocks freed.  Returns the requests finished this step."""
+        done: List[Request] = []
+        for slot, tok in sampled.items():
+            req = self.slots[slot]
+            if req is None:
+                continue
+            self.lengths[slot] += 1
+            req.tokens.append(int(tok))
+            if req.done:
+                req.finished_step = step
+                self._release_slot(slot)
+                self.finished.append(req)
+                done.append(req)
+        return done
+
+    def _release_slot(self, slot: int) -> None:
+        self.allocator.free(self.blocks_of.pop(slot))
+        req = self.slots[slot]
+        req.slot = -1
+        self.slots[slot] = None
+        self.block_table[slot] = NULL_BLOCK
+        self.lengths[slot] = 0
+        self._admit_order.remove(slot)
+
+    # ------------------------------------------------------------- stats ---
+
+    def utilization(self) -> Dict[str, float]:
+        """valid_frac: valid tokens / allocated slots (internal
+        fragmentation); pool_frac: allocated blocks / pool size."""
+        alloc_blocks = sum(len(v) for v in self.blocks_of.values())
+        valid = int(self.lengths[self.active_slots].sum()) \
+            if self.active_slots else 0
+        return {
+            "valid_frac": valid / (alloc_blocks * self.block_size)
+            if alloc_blocks else 0.0,
+            "pool_frac": alloc_blocks / (self.allocator.num_blocks - 1),
+            "valid_tokens": float(valid),
+            "allocated_blocks": float(alloc_blocks),
+        }

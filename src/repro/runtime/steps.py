@@ -301,3 +301,73 @@ def make_serve_step(cfg: ModelConfig, mesh: Optional[Mesh],
         )
 
     return jit_with_cache
+
+
+# ------------------------------------------------------- paged serving -----
+
+
+def make_paged_serve_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
+                          *, compute_dtype=jnp.bfloat16, impl: str = "ref",
+                          scheme: str = "seq"):
+    """Continuous-batching decode step over the paged latent pool:
+
+        fn(params, token (B,), pool_tree, block_tables (B, nb),
+           lengths (B,)) -> (logits (B, V), pool_tree)
+
+    ``lengths`` is ragged per request; inactive slots carry length 0 and a
+    null block table (their logits are garbage the scheduler discards).
+    The pool is donated — in-place scatter of the B new latent entries.
+
+    Multi-host sharding of the pool is a ROADMAP follow-up; mesh must be
+    None for now (the per-request block tables make the batch dim trivially
+    shardable once cache_pspecs learns the pool layout).
+    """
+    if mesh is not None:
+        raise NotImplementedError("paged serving is single-host for now "
+                                  "(ROADMAP: multi-host sharded paged cache)")
+    if cfg.attn_kind != "mla":
+        raise NotImplementedError("paged serving requires attn_kind='mla'")
+
+    def run(params, token, pool, block_tables, lengths):
+        return models.decode_step(params, cfg, token, pool, None,
+                                  compute_dtype=compute_dtype, impl=impl,
+                                  scheme=scheme, block_tables=block_tables,
+                                  lengths=lengths)
+
+    return jax.jit(run, donate_argnums=(2,))
+
+
+def _scatter_entries(pool_leaf, contig_leaf, pages, block_size: int):
+    """One cache leaf of the prefill->paged handoff.  contig_leaf:
+    (1, cap, D) or stacked (layers, 1, cap, D); pages: (n_pg,) pool block
+    ids (null-padded — garbage written to block 0 is never read)."""
+    from ..core import cache as cachelib
+    cap = contig_leaf.shape[-2]
+    n_pg = -(-cap // block_size)
+    pad = n_pg * block_size - cap
+    squeezed = contig_leaf[:, 0] if contig_leaf.ndim == 4 else contig_leaf[0]
+    if pad:
+        width = [(0, 0)] * squeezed.ndim
+        width[-2] = (0, pad)
+        squeezed = jnp.pad(squeezed, width)
+    D = squeezed.shape[-1]
+    if squeezed.ndim == 3:      # stacked (layers, cap_pad, D)
+        vals = squeezed.reshape(squeezed.shape[0], n_pg, block_size, D)
+    else:
+        vals = squeezed.reshape(n_pg, block_size, D)
+    return cachelib.write_blocks_paged(pool_leaf, pages[:n_pg], vals)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def scatter_prefill_to_paged(pool_tree, entries_tree, pages):
+    """Scatter one request's contiguous prefill cache (batch dim 1) into
+    the paged pool at its allocated ``pages`` ((max_blocks,) int32, padded
+    with the null block).  Whole blocks are written; the tail garbage
+    inside the last block is masked at attention time."""
+    pages = jnp.asarray(pages, jnp.int32)
+
+    def leaf(pool_leaf, contig_leaf):
+        bs = pool_leaf.shape[-2]
+        return _scatter_entries(pool_leaf, contig_leaf, pages, bs)
+
+    return jax.tree.map(leaf, pool_tree, entries_tree)

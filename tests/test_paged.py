@@ -1,0 +1,357 @@
+"""Paged latent-KV cache + continuous batching: kernel/oracle agreement,
+paged-vs-contiguous allclose equivalence across all four execution schemes
+at ragged per-request lengths, scheduler unit tests, and end-to-end engine
+equivalence (greedy tokens match per-request contiguous decode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as configs
+import repro.models as models
+from repro.core import cache as cachelib
+from repro.core import mla as mlalib
+from repro.hwmodel import attention_costs as ac
+from repro.hwmodel.platforms import PLATFORMS
+from repro.kernels import ops as kops
+from repro.kernels import ref
+from repro.kernels.mla_decode import mla_decode_paged_kernel
+from repro.nn import module as nnm
+from repro.runtime import (BlockAllocator, ContinuousScheduler,
+                           PagedMLAEngine, Request, blocks_for,
+                           make_prefill_step, make_serve_step)
+from repro.runtime.scheduler import NULL_BLOCK
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+MCFG = mlalib.MLAConfig(d_model=64, n_heads=4, q_lora_rank=48,
+                        kv_lora_rank=32, qk_nope_dim=16, qk_rope_dim=8,
+                        v_head_dim=16)
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+# ----------------------------------------------------------- kernel level --
+
+
+@pytest.mark.parametrize("B,H,Dl,Dr,bs,nb,N,idx", [
+    (1, 4, 32, 8, 16, 2, 4, [0]),             # single block, first token
+    (3, 4, 32, 8, 16, 4, 16, [37, 0, -1]),    # ragged + inactive slot
+    (2, 8, 64, 16, 32, 3, 8, [95, 17]),       # full + partial
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_kernel_vs_oracle(B, H, Dl, Dr, bs, nb, N, idx, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = rand(ks[0], (B, H, Dl + Dr), dtype)
+    ckv = rand(ks[1], (N, bs, Dl), dtype)
+    krope = rand(ks[2], (N, bs, Dr), dtype)
+    rng = np.random.default_rng(1)
+    bt = jnp.asarray(rng.integers(0, N, (B, nb)), jnp.int32)
+    idx = jnp.asarray(idx, jnp.int32)
+    out = mla_decode_paged_kernel(q, ckv, krope, bt, idx, interpret=True)
+    want = ref.mla_decode_paged_ref(q, ckv, krope, bt, idx)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+def test_paged_kernel_matches_contiguous():
+    """With an identity-style block table, paged == contiguous kernel."""
+    B, H, Dl, Dr, bs, nb = 2, 4, 32, 8, 16, 4
+    N = B * nb + 1
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = rand(ks[0], (B, H, Dl + Dr))
+    ckv_p = rand(ks[1], (N, bs, Dl))
+    krope_p = rand(ks[2], (N, bs, Dr))
+    bt = (1 + jnp.arange(B * nb, dtype=jnp.int32)).reshape(B, nb)
+    ckv_c = ckv_p[bt].reshape(B, nb * bs, Dl)
+    krope_c = krope_p[bt].reshape(B, nb * bs, Dr)
+    for index in (0, 13, nb * bs - 1):
+        got = mla_decode_paged_kernel(
+            q, ckv_p, krope_p, bt, jnp.full((B,), index, jnp.int32),
+            interpret=True)
+        want = ref.mla_decode_ref(q, ckv_c, krope_c, index)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-5, rtol=2e-5)
+
+
+def test_paged_kernel_ignores_unreferenced_pages():
+    """Poisoning pool blocks outside the table must not change results."""
+    B, H, Dl, Dr, bs, nb, N = 1, 4, 32, 8, 8, 2, 6
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = rand(ks[0], (B, H, Dl + Dr))
+    ckv = rand(ks[1], (N, bs, Dl))
+    krope = rand(ks[2], (N, bs, Dr))
+    bt = jnp.asarray([[2, 4]], jnp.int32)
+    idx = jnp.asarray([11], jnp.int32)
+    out = mla_decode_paged_kernel(q, ckv, krope, bt, idx, interpret=True)
+    poisoned = [i for i in range(N) if i not in (2, 4)]
+    out_p = mla_decode_paged_kernel(
+        q, ckv.at[jnp.asarray(poisoned)].set(1e4),
+        krope.at[jnp.asarray(poisoned)].set(1e4), bt, idx, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_p), atol=1e-6)
+
+
+# ------------------------------------------------------------- core level --
+
+
+def _filled_caches(params, lengths, S, bs, nb, N, seed=0):
+    """Build per-request contiguous caches AND an equivalent paged pool
+    with a scrambled block table from the same token history."""
+    rng = np.random.default_rng(seed)
+    B = len(lengths)
+    hist = jnp.asarray(rng.standard_normal((B, S, MCFG.d_model)) * 0.1,
+                       jnp.float32)
+    pool = cachelib.paged_latent_cache(N, bs, MCFG.kv_lora_rank,
+                                       MCFG.qk_rope_dim, jnp.float32)
+    bt = jnp.asarray(rng.permutation(np.arange(1, N))[:B * nb].reshape(B, nb),
+                     jnp.int32)
+    caches = []
+    for b in range(B):
+        c = cachelib.latent_cache(1, S, MCFG.kv_lora_rank, MCFG.qk_rope_dim,
+                                  jnp.float32)
+        L = int(lengths[b])
+        if L:
+            pos = jnp.arange(L)[None]
+            ckv, krope = mlalib._kv_latent(params, MCFG, hist[b:b + 1, :L],
+                                           pos)
+            c = cachelib.update_latent(c, ckv, krope, 0)
+            for t in range(L):
+                pool = cachelib.update_latent_paged(
+                    pool, bt[b:b + 1], jnp.asarray([t], jnp.int32),
+                    ckv[:, t], krope[:, t])
+        caches.append(c)
+    return caches, pool, bt
+
+
+@pytest.mark.parametrize("scheme", mlalib.SCHEMES)
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_mla_decode_paged_equals_contiguous(scheme, use_kernel):
+    """The acceptance criterion: paged decode allclose-equal to the
+    contiguous path for naive/seq/rc/ru at ragged per-request lengths."""
+    if scheme == "naive" and use_kernel:
+        pytest.skip("naive has no kernel path (paper's strawman)")
+    bs, nb, N = 8, 4, 20
+    S = bs * nb
+    lengths = np.asarray([5, 17, 0, S - 1], np.int32)
+    B = len(lengths)
+    params = nnm.init_params(jax.random.PRNGKey(0), mlalib.mla_defs(MCFG),
+                             jnp.float32)
+    params = mlalib.prepare_serving(params, MCFG, "ru")
+    caches, pool, bt = _filled_caches(params, lengths, S, bs, nb, N)
+    x_t = rand(jax.random.PRNGKey(7), (B, MCFG.d_model)) * 0.1
+
+    want, caches_after = [], []
+    for b in range(B):
+        o, c2 = mlalib.mla_decode(params, MCFG, x_t[b:b + 1],
+                                  dict(caches[b]), int(lengths[b]),
+                                  scheme=scheme)
+        want.append(np.asarray(o[0]))
+        caches_after.append(c2)
+
+    decode_kernel = None
+    if use_kernel:
+        def decode_kernel(q_full, ckv, krope, tables, idx, softmax_scale):
+            return kops.mla_decode_paged_attention(
+                q_full, ckv, krope, tables, idx, impl="kernel",
+                softmax_scale=softmax_scale)
+    got, pool2 = mlalib.mla_decode_paged(params, MCFG, x_t, pool, bt,
+                                         lengths, scheme=scheme,
+                                         decode_kernel=decode_kernel)
+    np.testing.assert_allclose(np.asarray(got), np.stack(want),
+                               atol=2e-5, rtol=2e-5)
+    # and the new token landed at the right (page, slot), matching the
+    # contiguous cache write
+    for b in range(B):
+        L = int(lengths[b])
+        page = int(bt[b, L // bs])
+        np.testing.assert_allclose(
+            np.asarray(pool2["ckv"][page, L % bs]),
+            np.asarray(caches_after[b]["ckv"][0, L]), atol=2e-6)
+        np.testing.assert_allclose(
+            np.asarray(pool2["krope"][page, L % bs]),
+            np.asarray(caches_after[b]["krope"][0, L]), atol=2e-6)
+
+
+def test_gather_scatter_roundtrip():
+    pool = cachelib.paged_latent_cache(8, 4, 16, 8, jnp.float32)
+    bt = jnp.asarray([[3, 1], [5, 2]], jnp.int32)
+    for t in range(6):
+        pool = cachelib.update_latent_paged(
+            pool, bt, jnp.asarray([t, t], jnp.int32),
+            jnp.full((2, 16), float(t)), jnp.full((2, 8), float(-t)))
+    ckv, krope = cachelib.gather_latent_paged(pool, bt)
+    for t in range(6):
+        np.testing.assert_allclose(np.asarray(ckv[:, t]), float(t))
+        np.testing.assert_allclose(np.asarray(krope[:, t]), float(-t))
+
+
+# -------------------------------------------------------------- scheduler --
+
+
+def test_allocator_reserves_null_and_refuses_overdraw():
+    a = BlockAllocator(5)
+    got = a.alloc(4)
+    assert sorted(got) == [1, 2, 3, 4]       # block 0 never handed out
+    assert NULL_BLOCK not in got
+    assert a.alloc(1) is None                # overdraw refused, no change
+    a.free([2, 3])
+    assert a.num_free == 2
+    with pytest.raises(ValueError):
+        a.free([2])                          # double free detected
+    with pytest.raises(ValueError):
+        a.free([0])                          # null block is unfreeable
+
+
+def test_scheduler_admission_refusal_and_reuse():
+    # pool: 4 usable blocks of 4 tokens; each request needs 2 blocks
+    s = ContinuousScheduler(num_blocks=5, block_size=4, max_batch=3)
+    reqs = [Request(rid=i, prompt=np.arange(5, dtype=np.int32), max_new=3)
+            for i in range(3)]
+    for r in reqs:
+        s.submit(r)
+    admitted = s.try_admit()
+    # 5-token prompt + 1 => 2 blocks each => only 2 of 3 fit
+    assert [r.rid for _, r in admitted] == [0, 1]
+    assert s.allocator.num_free == 0
+    assert len(s.waiting) == 1               # head refused, stays queued
+    # finishing request 0 frees its blocks; request 2 reuses them
+    slot0 = admitted[0][0]
+    blocks0 = set(s.blocks_of[slot0])
+    s.slots[slot0].tokens = [1, 2]
+    s.advance({slot0: 9})                    # third token -> done
+    assert s.slots[slot0] is None
+    assert (s.block_table[slot0] == NULL_BLOCK).all()
+    assert s.lengths[slot0] == 0
+    admitted2 = s.try_admit()
+    assert [r.rid for _, r in admitted2] == [2]
+    assert set(s.blocks_of[slot0]) == blocks0      # block reuse
+    assert not s.waiting
+
+
+def test_scheduler_grows_blocks_and_preempts():
+    s = ContinuousScheduler(num_blocks=4, block_size=2, max_batch=2)
+    a = Request(rid=0, prompt=np.zeros(1, np.int32), max_new=8)
+    b = Request(rid=1, prompt=np.zeros(1, np.int32), max_new=8)
+    s.submit(a), s.submit(b)
+    assert len(s.try_admit()) == 2           # 1 block each, 1 spare
+    s.record_prefill_sample(0, 5)
+    s.record_prefill_sample(1, 5)
+    s.advance({0: 5})                        # only a crosses the boundary
+    assert int(s.lengths[0]) == 2 and int(s.lengths[1]) == 1
+    pre = s.ensure_step_capacity()
+    assert pre == [] and len(s.blocks_of[0]) == 2   # grew from the spare
+    # now b crosses too; the pool is dry -> youngest (b) is preempted
+    s.advance({0: 5, 1: 5})
+    pre = s.ensure_step_capacity()
+    assert [r.rid for r in pre] == [1]
+    assert s.slots[1] is None and len(s.waiting) == 1
+    w = s.waiting[0]
+    assert w.n_preempted == 1 and w.tokens == []
+    assert w.plen == 3                       # 1 prompt + 2 generated folded
+    assert w.max_new == 8 - 2
+    # the oldest request kept its blocks and keeps making progress
+    assert len(s.blocks_of[0]) == 2 and s.slots[0] is a
+
+
+def test_scheduler_prefill_sample_finishes_max_new_1():
+    s = ContinuousScheduler(num_blocks=4, block_size=4, max_batch=1)
+    s.submit(Request(rid=0, prompt=np.zeros(2, np.int32), max_new=1))
+    (slot, req), = s.try_admit()
+    done = s.record_prefill_sample(slot, 7)
+    assert done is req and req.output == [7]
+    assert s.all_done and s.allocator.num_free == 3
+
+
+# ----------------------------------------------------- model/engine level --
+
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    cfg = configs.smoke("deepseek-v2-236b")
+    params = nnm.init_params(jax.random.PRNGKey(0), models.model_defs(cfg),
+                             jnp.float32)
+    return cfg, params
+
+
+def _contiguous_greedy(cfg, params, prompt, max_new):
+    """Per-request contiguous prefill+decode (the pre-PR serving path)."""
+    from repro.launch.serve import _prepare_mla
+    params = _prepare_mla(params, cfg, "seq")
+    capacity = len(prompt) + max_new + 1
+    prefill = make_prefill_step(cfg, None, batch=1, capacity=capacity,
+                                compute_dtype=jnp.float32, scheme="seq")
+    step = make_serve_step(cfg, None, compute_dtype=jnp.float32,
+                           scheme="seq")
+    logits, cache = prefill(params, jnp.asarray(prompt, jnp.int32)[None])
+    out = [int(jnp.argmax(logits[0]))]
+    for i in range(max_new - 1):
+        logits, cache = step(params, jnp.asarray(out[-1:], jnp.int32),
+                             cache, len(prompt) + i)
+        out.append(int(jnp.argmax(logits[0])))
+    return out
+
+
+def test_engine_tokens_match_contiguous(smoke_model):
+    """End-to-end: ragged requests admitted mid-generation through the
+    paged engine produce exactly the greedy tokens of the per-request
+    contiguous path."""
+    cfg, params = smoke_model
+    rng = np.random.default_rng(3)
+    specs = [(8, 5, 0), (12, 3, 1), (4, 7, 4)]    # (plen, gen, arrival)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab, (p,)).astype(np.int32),
+                    max_new=g, arrival=a)
+            for i, (p, g, a) in enumerate(specs)]
+    eng = PagedMLAEngine(cfg, params, num_blocks=20, block_size=8,
+                         max_batch=2, compute_dtype=jnp.float32,
+                         scheme="seq")
+    summary = eng.run([Request(rid=r.rid, prompt=r.prompt.copy(),
+                               max_new=r.max_new, arrival=r.arrival)
+                       for r in reqs])
+    assert len(eng.sched.finished) == len(reqs)
+    assert summary["mid_gen_admissions"] >= 1     # continuous batching
+    by_rid = {r.rid: r for r in eng.sched.finished}
+    for r in reqs:
+        want = _contiguous_greedy(cfg, params, r.prompt, r.max_new)
+        assert by_rid[r.rid].output == want, f"request {r.rid}"
+
+
+def test_engine_auto_dispatch_runs(smoke_model):
+    cfg, params = smoke_model
+    rng = np.random.default_rng(5)
+    eng = PagedMLAEngine(cfg, params, num_blocks=16, block_size=8,
+                         max_batch=2, compute_dtype=jnp.float32,
+                         scheme="auto", platform=PLATFORMS["tpu_v5e"])
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab, (8,)).astype(np.int32),
+                    max_new=3, arrival=0) for i in range(2)]
+    summary = eng.run(reqs)
+    used = sum(summary["schemes_used"].values())
+    assert 0 < used <= summary["steps"]
+    assert set(summary["schemes_used"]) <= {"seq", "rc", "ru"}
+
+
+# ---------------------------------------------------------------- hwmodel --
+
+
+def test_paged_cost_terms():
+    base = ac.mla_decode_cost(ac.DSV3_MLA, scheme="seq", cache_len=1000,
+                              batch=4)
+    paged = ac.mla_decode_cost(ac.DSV3_MLA, scheme="seq", cache_len=1000,
+                               batch=4, paged_block=128)
+    assert "B:block_table" in paged.breakdown
+    # whole-block reads: 1000 rounds up to 8 blocks x 128 = 1024 tokens
+    ratio = paged.breakdown["B:cache_read"] / base.breakdown["B:cache_read"]
+    assert ratio == pytest.approx(1024 / 1000)
+    assert paged.bytes > base.bytes
+    assert paged.flops == base.flops          # paging is a bytes-only term
+
+
+def test_auto_dispatch_accepts_paged_block():
+    from repro.core.schemes import auto_dispatch
+    s = auto_dispatch(ac.DSV3_MLA, PLATFORMS["tpu_v5e"], cache_len=4096,
+                      batch=8, paged_block=64)
+    assert s in ("seq", "rc", "ru")
