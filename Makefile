@@ -3,7 +3,7 @@
 # passing subset.
 PY ?= python
 
-.PHONY: test test-fast bench-serving
+.PHONY: test test-fast bench-serving bench-smoke
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -13,4 +13,12 @@ test-fast:
 	PYTHONPATH=src $(PY) -m pytest -x -q --ignore=tests/test_dryrun_small.py
 
 bench-serving:
-	PYTHONPATH=src $(PY) benchmarks/bench_serving.py --requests 12 --steps 96
+	PYTHONPATH=src $(PY) benchmarks/bench_serving.py --requests 12 --steps 200
+
+# Tiny CPU config wired into CI (exits non-zero if any serving check
+# regresses: prefix hit rate, prefill-token/block savings, bounded
+# prefill compiles, utilization vs the contiguous baseline).
+bench-smoke:
+	PYTHONPATH=src $(PY) benchmarks/bench_serving.py --requests 6 \
+		--max-batch 2 --block-size 8 --prefill-chunk 8 \
+		--shared-prefix-len 16 --steps 300

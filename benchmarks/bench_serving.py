@@ -1,15 +1,31 @@
-"""Serving benchmark: paged continuous batching vs the contiguous
+"""Serving benchmark: paged continuous batching (with and without the
+radix prefix cache + chunked batched prefill) vs the contiguous
 static-batch baseline, same request set.
 
-The contiguous baseline is what `launch/serve.py` did before this PR:
-requests are grouped into fixed batches, every slot gets the GLOBAL
-worst-case capacity (max prompt + max gen), and no request joins until the
-whole batch drains.  The paged runtime admits mid-generation and allocates
-block-granular capacity, so the same pool serves more live tokens —
-``cache utilization`` (valid tokens / reserved token slots, time-averaged)
-is the headline metric; tokens/s on CPU is directional only.
+Three runtimes over one shared-prefix request stream (every prompt opens
+with the same system preamble, like production chat traffic):
+
+  * contiguous  — what `launch/serve.py` did before PR 1: fixed batches,
+    every slot gets the GLOBAL worst-case capacity, no request joins
+    until the whole batch drains.
+  * paged (PR-1) — continuous batching over the block pool, but every
+    prompt is prefilled from scratch per-request (one jit retrace per
+    prompt-length bucket) and no blocks are shared.
+  * paged+prefix — this PR: radix prefix cache with copy-on-write block
+    sharing (shared preamble blocks are ref-count-forked, not
+    recomputed) and chunked batched prefill straight into the pool (one
+    compiled prefill shape per chunk size, admitted requests prefill
+    together).
+
+Headline metrics: prefix hit rate, prefilled tokens (strictly fewer with
+sharing), cumulative pool blocks allocated, prefill compiles (bounded by
+chunk sizes, not prompt lengths), cache utilization; tokens/s on CPU is
+directional only.  The modeled TTFT effect of the measured hit rate comes
+from the closed-form prefix-hit term (hwmodel.attention_costs
+.prefix_hit_savings / core.schemes.prefill_time).
 
     PYTHONPATH=src python benchmarks/bench_serving.py --requests 12
+    PYTHONPATH=src python benchmarks/bench_serving.py --shared-prefix-len 0
 """
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -25,6 +41,8 @@ import numpy as np
 import common
 import repro.configs as configs
 import repro.models as models
+from repro.core.schemes import prefill_time
+from repro.hwmodel.attention_costs import prefix_hit_savings
 from repro.hwmodel.platforms import PLATFORMS
 from repro.launch.serve import _prepare_mla
 from repro.nn import module as nnm
@@ -32,16 +50,19 @@ from repro.runtime import (PagedMLAEngine, Request, blocks_for,
                            make_prefill_step, make_serve_step)
 
 
-def make_requests(n, vocab, rng):
-    """Mixed prompt/gen lengths, Poisson arrivals (quantized prompts)."""
+def make_requests(n, vocab, rng, shared_prefix_len=16):
+    """Mixed prompt/gen lengths, Poisson arrivals; every prompt opens with
+    the same ``shared_prefix_len``-token system preamble (0 disables)."""
     arrivals = np.floor(np.cumsum(rng.exponential(2.5, n))).astype(int)
+    preamble = rng.integers(0, vocab, (shared_prefix_len,)).astype(np.int32)
     reqs = []
     for i in range(n):
+        tail = rng.integers(0, vocab,
+                            (int(rng.choice([8, 16, 24, 32])),)
+                            ).astype(np.int32)
         reqs.append(Request(
             rid=i,
-            prompt=rng.integers(0, vocab,
-                                (int(rng.choice([8, 16, 24, 32])),)
-                                ).astype(np.int32),
+            prompt=np.concatenate([preamble, tail]),
             max_new=int(rng.integers(4, 20)),
             arrival=int(arrivals[i])))
     return reqs
@@ -60,6 +81,7 @@ def run_contiguous(cfg, params, reqs, max_batch):
     step = make_serve_step(cfg, None, compute_dtype=jnp.float32,
                            scheme="seq")
     util_sum, util_n, decode_tokens, steps = 0.0, 0, 0, 0
+    prefill_tokens = 0
     outputs = {}
     t0 = time.perf_counter()
     for lo in range(0, len(reqs), max_batch):
@@ -69,6 +91,7 @@ def run_contiguous(cfg, params, reqs, max_batch):
         for b, r in enumerate(batch):   # right-align ragged prompts? no:
             toks[b, :r.plen] = r.prompt  # left-aligned, padded to plen_max
         logits, cache = prefill(params, jnp.asarray(toks))
+        prefill_tokens += max_batch * plen_max   # padded slots pay too
         # NOTE: padded prompts make short requests see pad tokens — the
         # baseline's accuracy compromise; tokens are NOT compared against
         # the paged path here, only throughput/utilization are measured.
@@ -97,10 +120,34 @@ def run_contiguous(cfg, params, reqs, max_batch):
     wall = time.perf_counter() - t0
     return {
         "steps": steps, "decode_tokens": decode_tokens,
+        "prefill_tokens": prefill_tokens,
         "tokens_per_s": decode_tokens / wall if wall else 0.0,
         "cache_utilization": util_sum / max(util_n, 1),
         "capacity_per_slot": capacity,
     }
+
+
+def run_paged(cfg, params, reqs, args, *, prefix: bool):
+    """Paged runtime; ``prefix=False`` reproduces PR-1 (per-request
+    prefill, no block sharing)."""
+    bs = args.block_size
+    num_blocks = 1 + sum(blocks_for(r.plen + r.max_new + 1, bs)
+                         for r in reqs) // 2   # force block reuse
+    per_req = max(blocks_for(r.plen + r.max_new + 1, bs) for r in reqs)
+    eng = PagedMLAEngine(
+        cfg, params, num_blocks=num_blocks, block_size=bs,
+        max_batch=args.max_batch, max_blocks_per_req=per_req,
+        compute_dtype=jnp.float32, scheme="auto",
+        platform=PLATFORMS["tpu_v5e"],
+        enable_prefix_cache=prefix,
+        prefill_mode="chunked" if prefix else "per_request",
+        prefill_chunk=args.prefill_chunk)
+    out = eng.run([Request(rid=r.rid, prompt=r.prompt.copy(),
+                           max_new=r.max_new, arrival=r.arrival)
+                   for r in reqs], max_steps=args.steps)
+    out["num_blocks"] = num_blocks
+    out["outputs"] = {r.rid: r.output for r in eng.sched.finished}
+    return out
 
 
 def main():
@@ -108,6 +155,9 @@ def main():
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--block-size", type=int, default=8)
+    ap.add_argument("--prefill-chunk", type=int, default=16)
+    ap.add_argument("--shared-prefix-len", type=int, default=16,
+                    help="tokens of common system preamble (0 disables)")
     ap.add_argument("--steps", type=int, default=400,
                     help="paged-engine step budget")
     ap.add_argument("--seed", type=int, default=0)
@@ -117,7 +167,8 @@ def main():
     params = nnm.init_params(jax.random.PRNGKey(args.seed),
                              models.model_defs(cfg), jnp.float32)
     rng = np.random.default_rng(args.seed + 1)
-    reqs = make_requests(args.requests, cfg.vocab, rng)
+    reqs = make_requests(args.requests, cfg.vocab, rng,
+                         args.shared_prefix_len)
 
     print("== contiguous static batching (baseline) ==")
     base = run_contiguous(cfg, params,
@@ -129,43 +180,89 @@ def main():
           f"{base['cache_utilization']:.3f} "
           f"(every slot reserves {base['capacity_per_slot']} tokens)")
 
-    print("== paged continuous batching ==")
-    bs = args.block_size
-    num_blocks = 1 + sum(blocks_for(r.plen + r.max_new + 1, bs)
-                         for r in reqs) // 2   # force block reuse
-    per_req = max(blocks_for(r.plen + r.max_new + 1, bs) for r in reqs)
-    eng = PagedMLAEngine(cfg, params, num_blocks=num_blocks, block_size=bs,
-                         max_batch=args.max_batch, max_blocks_per_req=per_req,
-                         compute_dtype=jnp.float32, scheme="auto",
-                         platform=PLATFORMS["tpu_v5e"])
-    paged = eng.run([Request(rid=r.rid, prompt=r.prompt.copy(),
-                             max_new=r.max_new, arrival=r.arrival)
-                     for r in reqs], max_steps=args.steps)
-    print(f"  {paged['decode_tokens']:.0f} decode tokens, "
-          f"{paged['tokens_per_s']:.1f} tok/s, utilization "
-          f"{paged['cache_utilization']:.3f}, "
-          f"{paged['mid_gen_admissions']:.0f} mid-gen admissions, "
-          f"pool {num_blocks - 1} x {bs}")
+    print("== paged, PR-1 (per-request prefill, no sharing) ==")
+    pr1 = run_paged(cfg, params, reqs, args, prefix=False)
+    print(f"  {pr1['decode_tokens']:.0f} decode tokens, "
+          f"{pr1['prefill_tokens']:.0f} prefilled, "
+          f"{pr1['total_blocks_allocated']:.0f} blocks allocated, "
+          f"{pr1['prefill_compiles']:.0f} prefill compiles")
 
-    gain = paged["cache_utilization"] / max(base["cache_utilization"], 1e-9)
+    print("== paged + radix prefix cache + chunked prefill (this PR) ==")
+    pp = run_paged(cfg, params, reqs, args, prefix=True)
+    print(f"  {pp['decode_tokens']:.0f} decode tokens, "
+          f"{pp['prefill_tokens']:.0f} prefilled "
+          f"(hit rate {pp['prefix_hit_rate']:.2f}), "
+          f"{pp['total_blocks_allocated']:.0f} blocks allocated, "
+          f"{pp['prefill_compiles']:.0f} prefill compile "
+          f"(chunk={args.prefill_chunk}), "
+          f"{pp['prefix_evictions']:.0f} evictions")
+
+    # modeled TTFT effect of the measured hit rate (full-scale config)
+    mla = configs.full("deepseek-v2-236b").mla_config()
+    plat = PLATFORMS["tpu_v5e"]
+    L = 1024
+    P = int(round(L * pp["prefix_hit_rate"]))
+    if 0 < P < L:
+        t0, t1 = (prefill_time(mla, plat, L),
+                  prefill_time(mla, plat, L, cached_prefix=P))
+        sav = prefix_hit_savings(mla, seq_len=L, cached_prefix=P)
+        print(f"  modeled TTFT (1 layer, L={L}, hit {P} tokens): "
+              f"{t0 * 1e6:.0f} -> {t1 * 1e6:.0f} us "
+              f"({t0 / t1:.2f}x; {sav['flops_frac']:.0%} FLOPs, "
+              f"{sav['bytes_frac']:.0%} bytes saved)")
+
+    gain = pp["cache_utilization"] / max(base["cache_utilization"], 1e-9)
     rows = [
-        ["contiguous", base["decode_tokens"], f"{base['tokens_per_s']:.1f}",
-         f"{base['cache_utilization']:.3f}", "-"],
-        ["paged", int(paged["decode_tokens"]), f"{paged['tokens_per_s']:.1f}",
-         f"{paged['cache_utilization']:.3f}", f"{gain:.2f}x"],
+        ["contiguous", base["decode_tokens"], base["prefill_tokens"],
+         "-", "-", f"{base['cache_utilization']:.3f}", "-"],
+        ["paged (PR-1)", int(pr1["decode_tokens"]),
+         int(pr1["prefill_tokens"]), int(pr1["total_blocks_allocated"]),
+         int(pr1["prefill_compiles"]), f"{pr1['cache_utilization']:.3f}",
+         "0.00"],
+        ["paged+prefix", int(pp["decode_tokens"]),
+         int(pp["prefill_tokens"]), int(pp["total_blocks_allocated"]),
+         int(pp["prefill_compiles"]), f"{pp['cache_utilization']:.3f}",
+         f"{pp['prefix_hit_rate']:.2f}"],
     ]
     md = common.table(
-        ["runtime", "decode tokens", "tok/s", "cache util", "util gain"],
-        rows)
+        ["runtime", "decode tok", "prefill tok", "blocks alloc",
+         "prefill compiles", "cache util", "hit rate"], rows)
     print("\n" + md)
-    common.check("paged utilization beats contiguous",
-                 paged["cache_utilization"] > base["cache_utilization"],
-                 f"{paged['cache_utilization']:.3f} vs "
+
+    ok = True
+    ok &= common.check("paged utilization beats contiguous",
+                 pp["cache_utilization"] > base["cache_utilization"],
+                 f"{pp['cache_utilization']:.3f} vs "
                  f"{base['cache_utilization']:.3f}")
-    common.check("mid-generation admission happened",
-                 paged["mid_gen_admissions"] > 0)
-    common.save("bench_serving.json", {"contiguous": base, "paged": paged,
+    ok &= common.check("mid-generation admission happened",
+                        pp["mid_gen_admissions"] > 0)
+    ok &= common.check("identical outputs with and without prefix sharing",
+                       pr1["outputs"] == pp["outputs"])
+    if args.shared_prefix_len:
+        ok &= common.check("prefix hit rate > 0",
+                           pp["prefix_hit_rate"] > 0,
+                           f"{pp['prefix_hit_rate']:.2f}")
+        ok &= common.check(
+            "prefix sharing prefills strictly fewer tokens",
+            pp["prefill_tokens"] < pr1["prefill_tokens"],
+            f"{pp['prefill_tokens']:.0f} vs {pr1['prefill_tokens']:.0f}")
+        ok &= common.check(
+            "prefix sharing allocates fewer pool blocks",
+            pp["total_blocks_allocated"] < pr1["total_blocks_allocated"],
+            f"{pp['total_blocks_allocated']:.0f} vs "
+            f"{pr1['total_blocks_allocated']:.0f}")
+    ok &= common.check(
+        "chunked prefill compiles are bounded (1 chunk size)",
+        pp["prefill_compiles"] == 1,
+        f"{pp['prefill_compiles']:.0f} vs {pr1['prefill_compiles']:.0f} "
+        f"per-plen buckets")
+    pp_save = {k: v for k, v in pp.items() if k != "outputs"}
+    pr1_save = {k: v for k, v in pr1.items() if k != "outputs"}
+    common.save("bench_serving.json", {"contiguous": base, "paged": pr1_save,
+                                       "paged_prefix": pp_save,
                                        "util_gain": gain})
+    if not ok:
+        sys.exit(1)
 
 
 if __name__ == "__main__":

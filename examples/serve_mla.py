@@ -10,6 +10,22 @@ on the live (batch, max cache_len) point.
 The compact latent cache ((D_kvl + D_rope) bytes/token vs 2*H*Dh dense) is
 what makes a shared block pool pay off: ~16x more requests fit the same
 HBM, and the paged layout stops ragged requests from stranding capacity.
+
+PR 2 adds the serving-side dual of that result — cutting redundant
+TOKENS, not just bytes: every prompt here opens with the same
+``--shared-prefix-len`` system preamble, and the radix prefix cache
+(runtime.prefix_cache) maps those leading blocks to the SAME ref-counted
+pool blocks (copy-on-write at the first divergent/partial block), so
+only each prompt's un-cached suffix is prefilled — in fixed-size batched
+chunks straight into the pool (``--prefill-chunk``: one compiled prefill
+shape per chunk size instead of one retrace per prompt length).  Flags:
+
+  --shared-prefix-len N  common preamble tokens (0: fully random prompts)
+  --no-prefix-cache      disable block sharing (PR-1 behaviour)
+  --prefill-chunk N      batched prefill chunk size (0: per-request prefill)
+  --temperature T        sample with temperature T (0: greedy argmax);
+  --top-k K              PRNG keys fold (request id, absolute position),
+                         so recompute-preemption replay is deterministic
 """
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -36,6 +52,11 @@ ap.add_argument("--num-blocks", type=int, default=48)
 ap.add_argument("--arrival-rate", type=float, default=0.4,
                 help="mean requests per decode step (Poisson)")
 ap.add_argument("--platform", default="tpu_v5e", choices=sorted(PLATFORMS))
+ap.add_argument("--shared-prefix-len", type=int, default=16)
+ap.add_argument("--no-prefix-cache", action="store_true")
+ap.add_argument("--prefill-chunk", type=int, default=16)
+ap.add_argument("--temperature", type=float, default=0.0)
+ap.add_argument("--top-k", type=int, default=0)
 ap.add_argument("--seed", type=int, default=0)
 args = ap.parse_args()
 
@@ -59,20 +80,29 @@ params = nnm.init_params(jax.random.PRNGKey(args.seed),
 rng = np.random.default_rng(args.seed + 1)
 gaps = rng.exponential(1.0 / args.arrival_rate, args.requests)
 arrivals = np.floor(np.cumsum(gaps)).astype(int)
+preamble = rng.integers(0, cfg.vocab,
+                        (args.shared_prefix_len,)).astype(np.int32)
 reqs = []
 for i in range(args.requests):
     plen = int(rng.choice([8, 16, 24, 32]))
     gen = int(rng.integers(4, 20))
-    reqs.append(Request(
-        rid=i, prompt=rng.integers(0, cfg.vocab, (plen,)).astype(np.int32),
-        max_new=gen, arrival=int(arrivals[i])))
+    prompt = np.concatenate(
+        [preamble, rng.integers(0, cfg.vocab, (plen,)).astype(np.int32)])
+    reqs.append(Request(rid=i, prompt=prompt, max_new=gen,
+                        arrival=int(arrivals[i])))
 
 per_req = max(blocks_for(r.plen + r.max_new + 1, bs) for r in reqs)
 engine = PagedMLAEngine(cfg, params, num_blocks=args.num_blocks,
                         block_size=bs, max_batch=args.max_batch,
                         max_blocks_per_req=per_req,
                         compute_dtype=jnp.float32, impl="ref",
-                        scheme="auto", platform=plat)
+                        scheme="auto", platform=plat,
+                        enable_prefix_cache=not args.no_prefix_cache,
+                        prefill_mode="chunked" if args.prefill_chunk
+                        else "per_request",
+                        prefill_chunk=args.prefill_chunk or 32,
+                        temperature=args.temperature, top_k=args.top_k,
+                        sample_seed=args.seed)
 total_need = sum(blocks_for(r.plen + r.max_new + 1, bs) for r in reqs)
 print(f"\n{args.requests} requests (prompts 8-32, gen 4-19), pool "
       f"{args.num_blocks - 1} usable blocks x {bs} tokens "
@@ -92,6 +122,14 @@ print(f"  cache utilization         : {summary['cache_utilization']:.2f} "
       f"(valid tokens / allocated block slots)")
 print(f"  pool occupancy            : {summary['pool_occupancy']:.2f}")
 print(f"  scheme usage              : {summary['schemes_used']}")
+print(f"  prefix hit rate           : {summary['prefix_hit_rate']:.2f} "
+      f"({summary['prefix_hit_tokens']:.0f}/{summary['prompt_tokens']:.0f} "
+      f"prompt tokens shared)")
+print(f"  prefilled tokens / chunks : {summary['prefill_tokens']:.0f} / "
+      f"{summary['prefill_chunks']:.0f} "
+      f"({summary['prefill_compiles']:.0f} compiled prefill shapes)")
+print(f"  cache evictions / CoW     : {summary['prefix_evictions']:.0f} / "
+      f"{summary['prefix_cow_copies']:.0f}")
 print(f"  latency steps p50/max     : {int(np.median(lat))}/{int(max(lat))}")
 first = min(engine.sched.finished, key=lambda r: r.rid)
 print("first request's tokens:", np.asarray(first.output)[:16])

@@ -114,6 +114,8 @@ def update_latent_paged(pool: Dict[str, Any], block_table, lengths,
     that ``lengths[b] < block_table.shape[1] * bs``: a full table is NOT
     detected here — JAX clamps the out-of-range page index, which would
     silently overwrite the request's last block.
+    ``ContinuousScheduler._require_table_room`` raises on the host before
+    any step could reach that clamp.
     """
     bs = pool["ckv"].shape[-2]
     lengths = jnp.asarray(lengths, jnp.int32)
@@ -126,6 +128,54 @@ def update_latent_paged(pool: Dict[str, Any], block_table, lengths,
         "krope": pool["krope"].at[page, slot].set(
             krope_new.astype(pool["krope"].dtype)),
     }
+
+
+def update_latent_paged_chunk(pool: Dict[str, Any], block_table, lengths,
+                              n_valid, ckv_new, krope_new) -> Dict[str, Any]:
+    """Scatter a CHUNK of new tokens per request into the pool (batched
+    chunked prefill).
+
+    ckv_new (B, C, D_kvl), krope_new (B, C, D_rope): row b's chunk token c
+    is valid iff ``c < n_valid[b]`` and lands at absolute position
+    ``lengths[b] + c`` (pool block ``block_table[b, pos // bs]``, slot
+    ``pos % bs``).  Invalid tokens (chunk padding, idle batch rows) are
+    routed to the NULL block — block 0 absorbs the garbage and is never
+    attended (every mask excludes positions past each request's length).
+    The caller guarantees every VALID position has an allocated block.
+    """
+    bs = pool["ckv"].shape[-2]
+    bt = jnp.asarray(block_table, jnp.int32)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    n_valid = jnp.asarray(n_valid, jnp.int32)
+    C = ckv_new.shape[1]
+    pos = lengths[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]  # (B, C)
+    valid = jnp.arange(C, dtype=jnp.int32)[None, :] < n_valid[:, None]
+    blk = jnp.clip(pos // bs, 0, bt.shape[1] - 1)
+    page = jnp.where(valid, jnp.take_along_axis(bt, blk, axis=1), 0)
+    slot = pos % bs
+    return {
+        "ckv": pool["ckv"].at[page, slot].set(
+            ckv_new.astype(pool["ckv"].dtype)),
+        "krope": pool["krope"].at[page, slot].set(
+            krope_new.astype(pool["krope"].dtype)),
+    }
+
+
+def copy_block_paged(pool_tree, src: int, dst: int):
+    """Copy one pool block's contents (all leaves, all layers) from block
+    ``src`` to block ``dst`` — the device side of a copy-on-write break:
+    the scheduler swaps a shared write-target block for a private copy
+    (runtime.scheduler._cow_write_target) and the engine runs this copy
+    before the next pool write."""
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+
+    def leaf(a):
+        if a.ndim == 4:     # stacked (scan) layers: (layers, N, bs, D)
+            return a.at[:, dst].set(a[:, src])
+        return a.at[dst].set(a[src])
+
+    return jax.tree.map(leaf, pool_tree)
 
 
 def gather_latent_paged(pool: Dict[str, Any], block_table):

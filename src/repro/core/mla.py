@@ -180,6 +180,62 @@ def mla_prefill(params, cfg: MLAConfig, x, positions, *, attn_fn=None,
     return out, entries
 
 
+def mla_prefill_chunk_paged(params, cfg: MLAConfig, x, pool: Dict[str, Any],
+                            block_table, lengths, n_valid):
+    """One CHUNK of batched prefill, directly into the paged pool.
+
+    x: (B, C, D) — row b carries the next ``n_valid[b]`` prompt tokens of
+    its request, starting at absolute position ``lengths[b]`` (tokens
+    already in the pool: the prefix-cache hit plus earlier chunks).
+    Rows with ``n_valid[b] == 0`` are idle padding (their output is
+    garbage the engine discards; their latents scatter to the null
+    block).  Returns (out (B, C, D), new_pool).
+
+    The chunk's latents are scattered FIRST, then the queries attend the
+    whole gathered block-table view with a per-position causal mask —
+    shared prefix blocks, earlier chunks and the in-chunk causal triangle
+    all ride the same paged path.  The nope-scores run in the latent
+    space (q_nope absorbed through W_uk, MQA-style, exactly the 'seq'
+    decode scheme generalized to C query positions), so the cached
+    prefix is never up-projected to per-head K/V — same function as the
+    "MHA-mode" :func:`mla_prefill` (two-term scores are an exact
+    reordering of the concatenated dot product), asserted allclose in
+    tests/test_prefix_cache.py.
+    """
+    lengths = jnp.asarray(lengths, jnp.int32)
+    n_valid = jnp.asarray(n_valid, jnp.int32)
+    B, C, _ = x.shape
+    pos = lengths[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]  # (B, C)
+    _, q_nope, q_rope = _q_proj(params, cfg, x, pos)
+    ckv_new, krope_new = _kv_latent(params, cfg, x, pos)
+    pool = cachelib.update_latent_paged_chunk(pool, block_table, lengths,
+                                              n_valid, ckv_new, krope_new)
+    ckv_c, krope_c = cachelib.gather_latent_paged(pool, block_table)
+    S = ckv_c.shape[1]
+    scale = cfg.qk_dim ** -0.5
+    # latent-space queries (see mla_decode's dtype NOTE: native-dtype
+    # contractions with f32 accumulation — no f32 cache copy in HBM)
+    q_eff = jnp.einsum("bchn,khn->bchk", q_nope,
+                       params["w_uk"].astype(q_nope.dtype))
+    scores = (jnp.einsum("bchk,bsk->bchs", q_eff.astype(ckv_c.dtype), ckv_c,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bchr,bsr->bchs", q_rope.astype(krope_c.dtype),
+                           krope_c, preferred_element_type=jnp.float32)
+              ) * scale
+    # causal over absolute positions, clipped to each request's valid
+    # extent (garbage in the partial tail block / idle rows stays masked)
+    s_pos = jnp.arange(S, dtype=jnp.int32)
+    valid = (s_pos[None, None, :] <= pos[:, :, None]) \
+        & (s_pos[None, None, :] < (lengths + n_valid)[:, None, None])
+    scores = jnp.where(valid[:, :, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    o_lat = jnp.einsum("bchs,bsk->bchk", p.astype(ckv_c.dtype), ckv_c,
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+    o = jnp.einsum("bchk,khv->bchv", o_lat, params["w_uv"].astype(x.dtype))
+    out = jnp.einsum("bchv,hvd->bcd", o, params["w_o"].astype(x.dtype))
+    return out, pool
+
+
 # ------------------------------------------------------------------ decode -
 
 

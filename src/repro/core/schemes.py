@@ -38,6 +38,20 @@ def step_time(scheme: str, cfg: MLAConfig, platform: PlatformPoint,
     return max(c.flops / platform.peak_flops, c.bytes / platform.hbm_bw)
 
 
+def prefill_time(cfg: MLAConfig, platform: PlatformPoint, seq_len: int,
+                 batch: int = 1, cached_prefix: int = 0) -> float:
+    """Roofline TTFT estimate for one MLA layer's prefill; ``cached_prefix``
+    tokens come from the radix prefix cache (runtime.prefix_cache), so
+    only the suffix is projected/written while still attending the full
+    prompt.  bench_serving uses the ratio of this at the measured hit
+    rate vs 0 to report the modeled TTFT effect of prefix sharing."""
+    from ..hwmodel import attention_costs as ac  # local import: no cycle
+    c = ac.mla_prefill_cost(cfg, seq_len=seq_len, batch=batch,
+                            dtype_bytes=platform.dtype_bytes,
+                            cached_prefix=cached_prefix)
+    return max(c.flops / platform.peak_flops, c.bytes / platform.hbm_bw)
+
+
 def auto_dispatch(cfg: MLAConfig, platform: PlatformPoint, cache_len: int,
                   batch: int = 1, candidates=("seq", "rc", "ru"),
                   paged_block: int = 0) -> str:

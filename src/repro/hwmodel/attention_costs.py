@@ -128,28 +128,71 @@ def mla_decode_cost(cfg: MLAConfig, *, scheme: str, cache_len: int,
 
 def mla_prefill_cost(cfg: MLAConfig, *, seq_len: int, batch: int = 1,
                      dtype_bytes: int = 2, rope: bool = False, causal: bool = True,
-                     include_io: bool = True) -> Cost:
+                     include_io: bool = True, cached_prefix: int = 0) -> Cost:
+    """Prefill of an L-token prompt; ``cached_prefix = P`` tokens are
+    served by the radix prefix cache (runtime.prefix_cache): only the
+    Ls = L - P suffix tokens are projected / written, the suffix queries
+    still attend the FULL prompt (the shared prefix's latents are READ
+    from the pool instead of recomputed).  P = 0 reproduces the plain
+    prefill exactly; the causal score/PV term generalizes to the exact
+    pair fraction (L^2 - P^2) / 2."""
     D, H, Q, K, dn, dr, dv = _dims(cfg, rope)
     B, L, w = batch, seq_len, dtype_bytes
+    P = cached_prefix
+    if not 0 <= P < max(L, 1):
+        raise ValueError(f"cached_prefix {P} out of range for seq_len {L}")
+    Ls = L - P
     att = 0.5 if causal else 1.0
+    # query x key position pairs inside the causal mask, suffix rows only:
+    # sum_{i=P..L-1}(i+1) ~ (L^2 - P^2)*att  (matches the paper's L^2/2
+    # convention at P=0)
+    pairs = (L * L - P * P) * att if causal else Ls * L
     fl = {
-        "q_down": 2 * B * L * D * Q,
-        "q_up": 2 * B * L * Q * H * (dn + dr),
-        "kv_down": 2 * B * L * D * (K + dr),
-        "k_up": 2 * B * L * K * H * dn,
-        "v_up": 2 * B * L * K * H * dv,
-        "attn_scores": 2 * B * H * L * L * (dn + dr) * att,
-        "attn_out": 2 * B * H * L * L * dv * att,
-        "o_proj": 2 * B * L * H * dv * D,
+        "q_down": 2 * B * Ls * D * Q,
+        "q_up": 2 * B * Ls * Q * H * (dn + dr),
+        "kv_down": 2 * B * Ls * D * (K + dr),
+        "k_up": 2 * B * Ls * K * H * dn,
+        "v_up": 2 * B * Ls * K * H * dv,
+        "attn_scores": 2 * B * H * pairs * (dn + dr),
+        "attn_out": 2 * B * H * pairs * dv,
+        "o_proj": 2 * B * Ls * H * dv * D,
     }
     by = {
         "weights": (D * Q + Q * H * (dn + dr) + D * (K + dr) + K * H * dn
                     + K * H * dv + H * dv * D) * w,
-        "cache_write": B * L * (K + dr) * w,
+        "cache_write": B * Ls * (K + dr) * w,
     }
+    if P:
+        # the shared prefix's compact latents stream in from the pool
+        by["prefix_read"] = B * P * (K + dr) * w
     if include_io:
-        by["io"] = 2 * B * L * D * w
+        by["io"] = 2 * B * Ls * D * w
     return Cost(sum(fl.values()), sum(by.values()), {**fl, **{f"B:{k}": v for k, v in by.items()}})
+
+
+def prefix_hit_savings(cfg: MLAConfig, *, seq_len: int, cached_prefix: int,
+                       batch: int = 1, dtype_bytes: int = 2,
+                       rope: bool = False) -> Dict[str, float]:
+    """FLOPs / off-chip bytes a prefix-cache hit saves on one prefill,
+    total and per shared token — the analytical counterpart of the
+    runtime's hit-rate metric (bench_serving reports both).  The decode
+    phase is unchanged by sharing (same L per request); the win is the
+    prompt recompute + re-store that never happens, which is what moves
+    TTFT (see core.schemes.prefill_time)."""
+    base = mla_prefill_cost(cfg, seq_len=seq_len, batch=batch,
+                            dtype_bytes=dtype_bytes, rope=rope)
+    hit = mla_prefill_cost(cfg, seq_len=seq_len, batch=batch,
+                           dtype_bytes=dtype_bytes, rope=rope,
+                           cached_prefix=cached_prefix)
+    P = max(cached_prefix, 1)
+    return {
+        "flops_saved": base.flops - hit.flops,
+        "bytes_saved": base.bytes - hit.bytes,
+        "flops_saved_per_token": (base.flops - hit.flops) / P,
+        "bytes_saved_per_token": (base.bytes - hit.bytes) / P,
+        "flops_frac": 1.0 - hit.flops / max(base.flops, 1.0),
+        "bytes_frac": 1.0 - hit.bytes / max(base.bytes, 1.0),
+    }
 
 
 # ------------------------------------------------------------------ MHA ----

@@ -11,6 +11,22 @@ platform's compute-to-bandwidth ratio (core.schemes.auto_dispatch).
 instead (paged latent-KV pool + per-request block tables + mid-generation
 admission; runtime.engine).  With ``--scheme auto`` the dispatch re-runs
 EVERY step on the live (batch, max cache_len) point.
+
+Paged-runtime knobs (PR 2):
+
+  --no-prefix-cache   disable the radix prefix cache (runtime.prefix_cache):
+                      by default requests sharing a prompt prefix fork the
+                      same pool blocks (ref-counted, copy-on-write at the
+                      first divergent/partial block) and only prefill the
+                      un-cached suffix; released blocks stay LRU-evictable.
+  --prefill-chunk N   chunk size of the batched paged prefill (one compiled
+                      prefill shape per chunk size — NOT per prompt length);
+                      0 falls back to PR-1's per-request prefill (which
+                      also forces the prefix cache off).
+  --temperature/--top-k
+                      sampling beyond greedy argmax; the PRNG key is folded
+                      with (request id, absolute token position) so
+                      recompute-preemption replay stays deterministic.
 """
 from __future__ import annotations
 
@@ -46,6 +62,16 @@ def main():
     ap.add_argument("--block-size", type=int, default=16)
     ap.add_argument("--num-blocks", type=int, default=0,
                     help="pool blocks (0 = sized for the request load)")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable radix prefix-cache block sharing")
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="batched paged prefill chunk size "
+                         "(0 = PR-1 per-request prefill)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy; > 0 samples with a per-request PRNG "
+                         "key folded with the absolute token position")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k filter when sampling (0 = full vocab)")
     args = ap.parse_args()
 
     cfg = configs.smoke(args.arch) if args.smoke else configs.full(args.arch)
@@ -118,7 +144,12 @@ def _serve_paged(args, cfg, params, dtype):
         cfg, params, num_blocks=num_blocks, block_size=bs,
         max_batch=args.batch, max_blocks_per_req=per_req,
         compute_dtype=dtype, impl=args.impl, scheme=args.scheme,
-        platform=PLATFORMS[args.platform])
+        platform=PLATFORMS[args.platform],
+        enable_prefix_cache=not args.no_prefix_cache,
+        prefill_mode="chunked" if args.prefill_chunk else "per_request",
+        prefill_chunk=args.prefill_chunk or 32,
+        temperature=args.temperature, top_k=args.top_k,
+        sample_seed=args.seed)
     rng = np.random.default_rng(args.seed + 1)
     reqs = [Request(rid=i,
                     prompt=rng.integers(0, cfg.vocab,
@@ -133,6 +164,13 @@ def _serve_paged(args, cfg, params, dtype):
           f"{summary['mid_gen_admissions']:.0f} mid-generation admissions, "
           f"cache utilization {summary['cache_utilization']:.2f}, "
           f"schemes {summary['schemes_used']}")
+    print(f"[serve] prefix cache: hit rate "
+          f"{summary['prefix_hit_rate']:.2f} "
+          f"({summary['prefix_hit_tokens']:.0f}/"
+          f"{summary['prompt_tokens']:.0f} prompt tokens), "
+          f"{summary['prefill_tokens']:.0f} prefilled in "
+          f"{summary['prefill_chunks']:.0f} chunks, "
+          f"{summary['prefill_compiles']:.0f} prefill compiles")
     first = min(engine.sched.finished, key=lambda r: r.rid)
     print("[serve] sample:", np.asarray(first.output[:16]))
 

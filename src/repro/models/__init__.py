@@ -43,6 +43,16 @@ def decode_step(params, cfg: ModelConfig, token, cache, index, **kw):
     return _mod(cfg).decode_step(params, cfg, token, cache, index, **kw)
 
 
+def prefill_chunk_paged(params, cfg: ModelConfig, tokens, pool, block_tables,
+                        lengths, n_valid, **kw):
+    """Batched chunked prefill into the paged latent pool (MLA decoder-only
+    models; see models.lm.prefill_chunk_paged)."""
+    if cfg.family == "encdec":
+        raise NotImplementedError("paged serving targets decoder-only MLA")
+    return lm.prefill_chunk_paged(params, cfg, tokens, pool, block_tables,
+                                  lengths, n_valid, **kw)
+
+
 def init_cache(cfg: ModelConfig, batch: int, capacity: int, dtype=None):
     import jax.numpy as jnp
     dtype = dtype if dtype is not None else jnp.bfloat16

@@ -34,7 +34,7 @@ from .common import ModelConfig, Sub
 
 @dataclasses.dataclass
 class Ctx:
-    mode: str                       # train | prefill | decode
+    mode: str                       # train | prefill | prefill_chunk | decode
     positions: Optional[jax.Array]  # (B, L) for train/prefill
     index: Any = None               # decode position (traced scalar)
     cache: Optional[Dict] = None    # this sublayer's cache slice
@@ -43,10 +43,14 @@ class Ctx:
     scheme: str = "seq"             # MLA execution scheme
     capacity: int = 0               # cache capacity for prefill
     shard_mode: str = "train"       # sharding policy (see nn.sharding)
-    # Paged continuous-batching decode (MLA only): when ``lengths`` is set
-    # the cache slice is a paged pool and ``index`` is unused.
+    # Paged continuous batching (MLA only): when ``lengths`` is set the
+    # cache slice is a paged pool and ``index`` is unused.  Decode feeds
+    # one token per slot; mode 'prefill_chunk' feeds a (B, C) chunk of
+    # prompt tokens with ``n_valid`` real tokens per row, scattered into
+    # the pool at positions lengths[b]..lengths[b]+n_valid[b]-1.
     block_tables: Any = None        # (B, max_blocks) int32
     lengths: Any = None             # (B,) int32 — ragged per-request
+    n_valid: Any = None             # (B,) int32 — chunked prefill only
 
 
 # ------------------------------------------------------------------ defs ---
@@ -268,6 +272,15 @@ def _mla_step(params, cfg: ModelConfig, desc: Sub, x_t, ctx: Ctx):
                              scheme=ctx.scheme, decode_kernel=decode_kernel)
 
 
+def _mla_chunk(params, cfg: ModelConfig, desc: Sub, x, ctx: Ctx):
+    """Batched chunked prefill into the paged pool (mode 'prefill_chunk').
+    x: (B, C, D) normalized chunk; the shared prefix is attended through
+    the block table — see core.mla.mla_prefill_chunk_paged."""
+    return mlalib.mla_prefill_chunk_paged(params, cfg.mla_config(), x,
+                                          ctx.cache, ctx.block_tables,
+                                          ctx.lengths, ctx.n_valid)
+
+
 def _slstm_sharded(params, cfg: ModelConfig, x, ctx: Ctx):
     """sLSTM under shard_map over the DP axes (EXPERIMENTS.md §Perf C2).
 
@@ -360,9 +373,14 @@ def sub_apply(params, cfg: ModelConfig, desc: Sub, x, ctx: Ctx):
         # Megatron-SP boundary: gather the sequence before the QKV
         # projection (head sharding then becomes a free slice).
         h = _seq_parallel_constraint(h, ctx, on=False)
+    if ctx.mode == "prefill_chunk" and \
+            not (desc.mixer == "attn" and cfg.attn_kind == "mla"):
+        raise NotImplementedError(
+            "chunked paged prefill requires MLA attention sublayers")
     if desc.mixer == "attn":
         if cfg.attn_kind == "mla":
-            fn = _mla_step if ctx.mode == "decode" else _mla_seq
+            fn = {"decode": _mla_step,
+                  "prefill_chunk": _mla_chunk}.get(ctx.mode, _mla_seq)
         else:
             fn = _gqa_step if ctx.mode == "decode" else _gqa_seq
         a, new_cache = fn(params["attn"], cfg, desc, h, ctx)

@@ -154,6 +154,31 @@ def prefill(params, cfg: ModelConfig, tokens, *, embeds=None, capacity: int = 0,
     return _logits(params, cfg, x[:, -1]), caches
 
 
+def prefill_chunk_paged(params, cfg: ModelConfig, tokens, pool,
+                        block_tables, lengths, n_valid, *,
+                        compute_dtype=jnp.bfloat16, impl: str = "ref",
+                        scheme: str = "seq") -> Tuple[jax.Array, Dict]:
+    """One batched prefill CHUNK straight into the paged pool.
+
+    tokens: (B, C) int32 — row b holds its request's next ``n_valid[b]``
+    prompt tokens (rest is padding), starting at absolute position
+    ``lengths[b]`` (tokens already resident: prefix-cache hits + earlier
+    chunks).  Returns (logits (B, V) of each row's LAST VALID position,
+    new_pool) — the logits row matters only for the chunk that finishes a
+    request's prompt (it samples generated token #1); other rows are
+    discarded by the engine.  One compiled shape per (B, C), independent
+    of prompt length — the whole point vs the per-plen retraces of the
+    contiguous prefill."""
+    x = _embed(params, cfg, tokens, None, compute_dtype)
+    ctx = Ctx(mode="prefill_chunk", positions=None, impl=impl, scheme=scheme,
+              block_tables=block_tables, lengths=lengths, n_valid=n_valid)
+    x, caches, _ = _run_stack(params, cfg, x, ctx, pool)
+    B = x.shape[0]
+    last = jnp.maximum(jnp.asarray(n_valid, jnp.int32) - 1, 0)
+    h = x[jnp.arange(B), last]                    # (B, D) last valid hidden
+    return _logits(params, cfg, h), caches
+
+
 def decode_step(params, cfg: ModelConfig, token, cache, index, *,
                 compute_dtype=jnp.bfloat16, impl: str = "ref", mesh=None,
                 scheme: str = "seq", shard_mode: str = "train",

@@ -1,7 +1,9 @@
-from .steps import (TrainStepConfig, lm_loss, make_paged_serve_step,
-                    make_prefill_step, make_serve_step, make_train_step,
-                    cache_pspecs, scatter_prefill_to_paged)
+from .steps import (TrainStepConfig, lm_loss, make_chunked_prefill_step,
+                    make_paged_serve_step, make_prefill_step,
+                    make_serve_step, make_train_step, cache_pspecs,
+                    scatter_prefill_to_paged)
 from .loop import LoopConfig, SimulatedFailure, TrainLoop
 from .scheduler import (BlockAllocator, ContinuousScheduler, Request,
                         blocks_for)
+from .prefix_cache import PrefixCache, PrefixCacheStats
 from .engine import EngineStats, PagedMLAEngine

@@ -1,13 +1,24 @@
 """Continuous-batching MLA serving engine over the paged latent-KV pool.
 
-Glues the host-side ``ContinuousScheduler`` (admission, block tables,
-eviction) to the jitted device steps:
+Glues the host-side ``ContinuousScheduler`` (admission, radix prefix
+cache, block tables, eviction) to the jitted device steps:
 
-  * per-request prefill (bucketed capacities to bound recompiles) feeding
-    ``scatter_prefill_to_paged`` — the prefill->pool handoff;
+  * batched CHUNKED prefill straight into the pool
+    (``make_chunked_prefill_step``): admitted requests prefill together,
+    fixed-size chunk by chunk, attending their prefix-cache hits through
+    the block table — one compiled step shape per chunk size instead of
+    one retrace per prompt length, and no contiguous-entries detour.
+    (``prefill_mode='per_request'`` keeps PR-1's bucketed per-request
+    prefill + scatter for A/B comparison; it forces the prefix cache off
+    because it recomputes and rewrites whole prompts.)
   * one paged decode step per scheduler tick over ALL slots (inactive
     slots ride along pointing at the null block; their logits are
     discarded);
+  * sampling: greedy argmax by default; ``temperature > 0`` switches to
+    temperature / top-k sampling with a per-request PRNG key folded with
+    the ABSOLUTE token position, so recompute-preemption replay remains
+    deterministic (replayed tokens live in the prompt; fresh tokens
+    re-land on the same fold(rid, position) stream);
   * ``schemes.auto_dispatch`` re-run EVERY step on the live
     (batch, max cache_len) point with the paged-bytes cost term, so the
     rc/ru/seq choice tracks the batch composition — jitted steps are
@@ -20,26 +31,31 @@ Used by examples/serve_mla.py, benchmarks/bench_serving.py and
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Dict, List, Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from .. import models
+from ..core import cache as cachelib
 from ..core import mla as mlalib
 from ..core.schemes import PlatformPoint, auto_dispatch
 from ..models.common import ModelConfig
 from .scheduler import ContinuousScheduler, Request, blocks_for
-from .steps import (make_paged_serve_step, make_prefill_step,
-                    scatter_prefill_to_paged)
+from .steps import (make_chunked_prefill_step, make_paged_serve_step,
+                    make_prefill_step, scatter_prefill_to_paged)
 
 
 @dataclasses.dataclass
 class EngineStats:
     steps: int = 0
     decode_tokens: int = 0
-    prefill_tokens: int = 0
+    prefill_tokens: int = 0         # tokens actually prefilled (cache
+    prompt_tokens: int = 0          # hits excluded) vs tokens submitted
+    prefill_chunks: int = 0
     admissions: int = 0
     mid_gen_admissions: int = 0     # admitted while other slots were decoding
     preemptions: int = 0
@@ -56,6 +72,8 @@ class EngineStats:
             "steps": self.steps,
             "decode_tokens": self.decode_tokens,
             "prefill_tokens": self.prefill_tokens,
+            "prompt_tokens": self.prompt_tokens,
+            "prefill_chunks": self.prefill_chunks,
             "admissions": self.admissions,
             "mid_gen_admissions": self.mid_gen_admissions,
             "preemptions": self.preemptions,
@@ -74,11 +92,22 @@ class PagedMLAEngine:
                  max_blocks_per_req: Optional[int] = None,
                  compute_dtype=jnp.float32, impl: str = "ref",
                  scheme: str = "auto",
-                 platform: Optional[PlatformPoint] = None):
+                 platform: Optional[PlatformPoint] = None,
+                 enable_prefix_cache: bool = True,
+                 prefill_chunk: int = 32,
+                 prefill_mode: str = "chunked",
+                 temperature: float = 0.0, top_k: int = 0,
+                 sample_seed: int = 0):
         if cfg.attn_kind != "mla":
             raise NotImplementedError("PagedMLAEngine requires an MLA model")
         if scheme == "auto" and platform is None:
             raise ValueError("scheme='auto' needs a PlatformPoint")
+        if prefill_mode not in ("chunked", "per_request"):
+            raise ValueError(f"unknown prefill_mode {prefill_mode!r}")
+        if prefill_mode != "chunked" and enable_prefix_cache:
+            # the per-request path recomputes + rewrites WHOLE prompts,
+            # which would scatter over read-only shared blocks
+            enable_prefix_cache = False
         self.cfg = cfg
         self.mla = cfg.mla_config()
         # 'ru' streams the precomputed absorbed weights; attach them once
@@ -91,18 +120,29 @@ class PagedMLAEngine:
         self.scheme = scheme
         self.platform = platform
         self.block_size = block_size
+        self.prefill_mode = prefill_mode
+        self.prefill_chunk = int(prefill_chunk)
+        if self.prefill_chunk < 1:
+            raise ValueError("prefill_chunk must be >= 1")
+        self.temperature = float(temperature)
+        self.top_k = int(top_k)
+        self._sample_key = jax.random.PRNGKey(sample_seed)
         # max_blocks_per_req bounds the block-table WIDTH, i.e. the extent
         # every decode step scans per request — size it to the workload's
         # longest request, not the pool (nb = pool size would make each
         # step's cost scale with total pool capacity).
         self.sched = ContinuousScheduler(
             num_blocks=num_blocks, block_size=block_size,
-            max_batch=max_batch, max_blocks_per_req=max_blocks_per_req)
+            max_batch=max_batch, max_blocks_per_req=max_blocks_per_req,
+            enable_prefix_cache=enable_prefix_cache)
         self.pool = models.init_paged_cache(cfg, num_blocks, block_size,
                                             compute_dtype)
         self.pending = np.zeros((max_batch,), np.int32)   # next token to feed
         self._decode_steps: Dict[str, object] = {}
-        self._prefills: Dict[int, object] = {}
+        self._prefills: Dict[int, object] = {}     # per_request: cap -> fn
+        self._chunk_steps: Dict[int, object] = {}  # chunked: chunk size -> fn
+        self._copy_block = jax.jit(cachelib.copy_block_paged,
+                                   donate_argnums=(0,))
         self._last_scheme: Optional[str] = None
         self.stats = EngineStats()
 
@@ -124,6 +164,19 @@ class PagedMLAEngine:
                 compute_dtype=self.compute_dtype, impl=self.impl)
         return self._prefills[cap]
 
+    def _chunk_step(self, chunk: int):
+        if chunk not in self._chunk_steps:
+            self._chunk_steps[chunk] = make_chunked_prefill_step(
+                self.cfg, None, compute_dtype=self.compute_dtype,
+                impl=self.impl)
+        return self._chunk_steps[chunk]
+
+    @property
+    def prefill_compiles(self) -> int:
+        """Distinct prefill step shapes built so far: bounded by the number
+        of chunk sizes (chunked mode) instead of prompt-length buckets."""
+        return len(self._chunk_steps) + len(self._prefills)
+
     def _pick_scheme(self) -> str:
         if self.scheme != "auto":
             self._last_scheme = self.scheme
@@ -138,14 +191,112 @@ class PagedMLAEngine:
         self._last_scheme = s
         return s
 
+    # -------------------------------------------------------- sampling ----
+
+    def _sample_tokens(self, rows, slots) -> Dict[int, int]:
+        """Sample one token per slot; ``rows`` (len(slots), V) carries the
+        logits row of each listed slot (still occupied by its request).
+
+        temperature <= 0: one batched greedy argmax.  Otherwise
+        temperature / top-k sampling, one batched device call: per-slot
+        keys fold(fold(seed, rid), position), position = absolute index
+        of the sampled token in the request's full sequence — invariant
+        under recompute preemption (the folded prompt grows by exactly
+        the generated tokens), so replay drains the same PRNG stream per
+        request regardless of batch composition and reproduces the same
+        output."""
+        if self.temperature <= 0.0:
+            arg = np.asarray(jnp.argmax(rows, axis=-1))
+            return {s: int(arg[i]) for i, s in enumerate(slots)}
+        rids, poss = [], []
+        for s in slots:
+            req = self.sched.slots[s]
+            rids.append(req.rid)
+            poss.append(req.plen + len(req.tokens))
+        toks = np.asarray(self._sample_fn(
+            rows, jnp.asarray(rids, jnp.uint32),
+            jnp.asarray(poss, jnp.uint32)))
+        return {s: int(toks[i]) for i, s in enumerate(slots)}
+
+    @functools.cached_property
+    def _sample_fn(self):
+        base, temp, top_k = self._sample_key, self.temperature, self.top_k
+
+        def run(rows, rids, poss):
+            keys = jax.vmap(lambda r, p: jax.random.fold_in(
+                jax.random.fold_in(base, r), p))(rids, poss)
+            rows = rows.astype(jnp.float32) / temp
+            if top_k > 0:
+                kth = jnp.sort(rows, axis=-1)[:, -top_k]
+                rows = jnp.where(rows >= kth[:, None], rows, -jnp.inf)
+            return jax.vmap(jax.random.categorical)(keys, rows)
+
+        return jax.jit(run)
+
+    # --------------------------------------------------------- prefill ----
+
+    def _run_chunked_prefill(self, admitted, step_i: int) -> None:
+        """Prefill every just-admitted request's UN-CACHED prompt suffix as
+        a batch, ``prefill_chunk`` tokens per request per step, scattering
+        latents straight into the pool.  Rows that exhaust their prompt in
+        a chunk sample generated token #1 from that chunk's last-valid
+        logits and register their blocks in the radix cache."""
+        C = self.prefill_chunk
+        step_fn = self._chunk_step(C)
+        pending = dict(admitted)
+        fill = {slot: req.n_cached for slot, req in admitted}
+        while pending:
+            tokens = np.zeros((self.sched.max_batch, C), np.int32)
+            lens = np.zeros((self.sched.max_batch,), np.int32)
+            nv = np.zeros((self.sched.max_batch,), np.int32)
+            finishing = []
+            for slot, req in list(pending.items()):
+                start = fill[slot]
+                take = min(req.plen - start, C)
+                tokens[slot, :take] = req.prompt[start:start + take]
+                lens[slot] = start
+                nv[slot] = take
+                fill[slot] = start + take
+                if fill[slot] >= req.plen:
+                    finishing.append((slot, req))
+                    del pending[slot]
+            logits, self.pool = step_fn(
+                self.params, jnp.asarray(tokens), self.pool,
+                jnp.asarray(self.sched.block_table), jnp.asarray(lens),
+                jnp.asarray(nv))
+            self.stats.prefill_tokens += int(nv.sum())
+            self.stats.prefill_chunks += 1
+            for slot, req in finishing:
+                tok = self._sample_tokens(logits[slot][None], [slot])[slot]
+                # register blocks only now — their latents are in the pool
+                self.sched.commit_prefill(slot)
+                if self.sched.record_prefill_sample(slot, tok, step_i) is None:
+                    self.pending[slot] = tok
+
+    def _run_per_request_prefill(self, admitted, step_i: int) -> None:
+        """PR-1's path: contiguous per-request prefill (bucketed capacities
+        to bound recompiles) + whole-block scatter into the pool.  Kept
+        for A/B benchmarking; incompatible with prefix sharing."""
+        for slot, req in admitted:
+            cap = blocks_for(req.plen, self.block_size) * self.block_size
+            logits, entries = self._prefill(cap)(
+                self.params, jnp.asarray(req.prompt, jnp.int32)[None])
+            pages = jnp.asarray(self.sched.block_table[slot], jnp.int32)
+            self.pool = scatter_prefill_to_paged(self.pool, entries, pages)
+            self.stats.prefill_tokens += req.plen
+            tok = self._sample_tokens(logits[0][None], [slot])[slot]
+            self.sched.commit_prefill(slot)
+            if self.sched.record_prefill_sample(slot, tok, step_i) is None:
+                self.pending[slot] = tok
+
     # ------------------------------------------------------------- run ----
 
     def submit(self, req: Request) -> None:
         self.sched.submit(req)
 
     def step(self) -> None:
-        """One scheduler tick: admit + prefill, then one batched decode
-        step over all slots."""
+        """One scheduler tick: admit + batched prefill, then one batched
+        decode step over all slots."""
         t0 = time.perf_counter()
         step_i = self.stats.steps
         was_decoding = self.sched.n_active > 0
@@ -154,24 +305,22 @@ class PagedMLAEngine:
         # request could take the last blocks, get preempted immediately,
         # and throw away the prefill it just paid for.
         self.stats.preemptions += len(self.sched.ensure_step_capacity())
+        for src, dst in self.sched.drain_cow():
+            self.pool = self._copy_block(self.pool,
+                                         jnp.asarray(src, jnp.int32),
+                                         jnp.asarray(dst, jnp.int32))
 
-        for slot, req in self.sched.try_admit(step_i):
-            # cache capacity buckets to a block multiple; the token array
-            # stays unpadded so prefill's last-position logits are the
-            # real prompt end (jit retraces per distinct prompt length —
-            # drivers should quantize prompt lengths).
-            cap = blocks_for(req.plen, self.block_size) * self.block_size
-            logits, entries = self._prefill(cap)(
-                self.params, jnp.asarray(req.prompt, jnp.int32)[None])
-            pages = jnp.asarray(self.sched.block_table[slot], jnp.int32)
-            self.pool = scatter_prefill_to_paged(self.pool, entries, pages)
-            tok = int(jnp.argmax(logits[0]))
+        admitted = self.sched.try_admit(step_i)
+        for _, req in admitted:
             self.stats.admissions += 1
-            self.stats.prefill_tokens += req.plen
+            self.stats.prompt_tokens += req.plen
             if was_decoding:
                 self.stats.mid_gen_admissions += 1
-            if self.sched.record_prefill_sample(slot, tok, step_i) is None:
-                self.pending[slot] = tok
+        if admitted:
+            if self.prefill_mode == "chunked":
+                self._run_chunked_prefill(admitted, step_i)
+            else:
+                self._run_per_request_prefill(admitted, step_i)
 
         active = self.sched.active_slots
         if active:
@@ -183,8 +332,7 @@ class PagedMLAEngine:
                 self.params, jnp.asarray(self.pending),
                 self.pool, jnp.asarray(self.sched.block_table),
                 jnp.asarray(self.sched.lengths))
-            sampled = np.asarray(jnp.argmax(logits, axis=-1))
-            picks = {s: int(sampled[s]) for s in active}
+            picks = self._sample_tokens(logits[jnp.asarray(active)], active)
             self.sched.advance(picks, step_i)
             for s, t in picks.items():
                 self.pending[s] = t
@@ -220,8 +368,13 @@ class PagedMLAEngine:
                     f"scheme={self._last_scheme}")
             if self.stats.steps >= max_steps:
                 raise RuntimeError(f"did not drain in {max_steps} steps")
-        return self.stats.summary()
+        return self.summary()
 
-
-
-
+    def summary(self) -> Dict[str, float]:
+        """Engine stats + prefix-cache stats + allocator totals."""
+        out = self.stats.summary()
+        out.update(self.sched.prefix.summary())
+        out["total_blocks_allocated"] = float(
+            self.sched.allocator.total_allocs)
+        out["prefill_compiles"] = float(self.prefill_compiles)
+        return out

@@ -4,23 +4,32 @@ The device side (core.cache paged layout, kernels.mla_decode paged kernel)
 is pure and shape-static; everything ragged and dynamic lives here, in
 numpy, between jitted steps:
 
-  * ``BlockAllocator`` — a free list over the global block pool.  Block 0
-    is the reserved NULL block: unassigned block-table entries point at it
-    so every block-table-driven gather/DMA stays in-bounds.
+  * ``BlockAllocator`` — a REF-COUNTED free list over the global block
+    pool.  Block 0 is the reserved NULL block: unassigned block-table
+    entries point at it so every block-table-driven gather/DMA stays
+    in-bounds.  ``fork`` (refcount += 1) and ``release`` (refcount -= 1)
+    replace raw ``free`` throughout the scheduler — prefix-shared blocks
+    are mapped by several requests at once (runtime.prefix_cache).
   * ``ContinuousScheduler`` — fixed ``max_batch`` decode slots.  Requests
     are admitted FCFS into free slots whenever the pool can cover their
-    prompt (+1 for the first generated token); each decode step lazily
-    allocates one more block for any request crossing a block boundary;
-    finished requests free their blocks immediately, so capacity flows to
-    the waiting queue mid-generation — the continuous-batching property.
-  * Out-of-blocks mid-decode preempts the youngest running request
-    (recompute-style: its prompt + generated tokens re-enter the waiting
-    queue as a longer prompt), so the oldest requests always make
-    progress.
+    prompt (+1 for the first generated token); ``try_admit`` first matches
+    the longest cached prefix in the radix ``PrefixCache`` and maps the
+    request's leading block-table entries onto the shared pool blocks, so
+    only the un-cached suffix needs prefilling (``Request.n_cached``).
+    Each decode step lazily allocates one more block for any request
+    crossing a block boundary; finished requests release their blocks —
+    trie-registered ones stay resident as LRU-evictable prefix cache,
+    the rest return to the free list immediately.
+  * Out-of-blocks mid-decode first evicts LRU refcount-zero cached
+    blocks, then preempts the youngest running request (recompute-style:
+    its prompt + generated tokens re-enter the waiting queue as a longer
+    prompt — whose prefix usually re-hits the cache), so the oldest
+    requests always make progress.
 
 The scheduler is deliberately model-agnostic: it hands out numpy block
-tables / lengths; ``runtime.engine`` owns params, jitted steps and the
-prefill -> pool scatter.
+tables / lengths / copy-on-write block pairs; ``runtime.engine`` owns
+params, jitted steps, the chunked prefill -> pool scatter, and the device
+side of every CoW copy (``cow_pending``).
 """
 from __future__ import annotations
 
@@ -29,6 +38,8 @@ import dataclasses
 from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
+
+from .prefix_cache import PrefixCache
 
 NULL_BLOCK = 0
 
@@ -45,6 +56,7 @@ class Request:
     finished_step: int = -1
     n_preempted: int = 0
     orig_plen: int = -1           # preemption folds output into the prompt
+    n_cached: int = 0             # prompt tokens served by the prefix cache
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32)
@@ -67,8 +79,13 @@ class Request:
 
 
 class BlockAllocator:
-    """Free-list allocator over ``num_blocks`` fixed-size blocks; block 0
-    (NULL) is never handed out."""
+    """Ref-counted free-list allocator over ``num_blocks`` fixed-size
+    blocks; block 0 (NULL) is never handed out.
+
+    ``alloc`` hands out blocks at refcount 1; ``fork`` adds a reference
+    (prefix sharing); ``release`` drops one and REPORTS blocks reaching
+    zero without freeing them — the caller (PrefixCache) decides whether
+    a zero block stays cached (LRU-evictable) or is ``free``d."""
 
     def __init__(self, num_blocks: int):
         if num_blocks < 2:
@@ -76,6 +93,8 @@ class BlockAllocator:
         self.num_blocks = num_blocks
         self._free: List[int] = list(range(num_blocks - 1, 0, -1))
         self._free_set = set(self._free)    # O(1) double-free detection
+        self.refcount: Dict[int, int] = {}  # allocated block -> references
+        self.total_allocs = 0               # cumulative blocks handed out
 
     @property
     def num_free(self) -> int:
@@ -85,22 +104,62 @@ class BlockAllocator:
     def num_allocated(self) -> int:
         return (self.num_blocks - 1) - len(self._free)
 
+    def _check_id(self, b: int) -> None:
+        if not (0 < b < self.num_blocks):
+            raise ValueError(f"bad block id {b}")
+
     def alloc(self, n: int) -> Optional[List[int]]:
-        """Pop ``n`` blocks, or None (and no change) if the pool is short."""
+        """Pop ``n`` blocks at refcount 1, or None (and no change) if the
+        pool is short."""
         if n < 0:
             raise ValueError(n)
         if n > len(self._free):
             return None
         got = [self._free.pop() for _ in range(n)]
         self._free_set.difference_update(got)
+        for b in got:
+            self.refcount[b] = 1
+        self.total_allocs += n
         return got
 
-    def free(self, blocks: List[int]) -> None:
+    def fork(self, blocks: List[int]) -> None:
+        """Add one reference per block (prefix-cache hit).  Reviving a
+        cached refcount-0 block is legal; forking a free block is not."""
         for b in blocks:
-            if not (0 < b < self.num_blocks):
-                raise ValueError(f"bad block id {b}")
+            self._check_id(b)
+            if b in self._free_set or b not in self.refcount:
+                raise ValueError(f"fork of unallocated block {b}")
+            self.refcount[b] += 1
+
+    def release(self, blocks: List[int]) -> List[int]:
+        """Drop one reference per block; returns the blocks that reached
+        refcount 0 (still allocated — route them to ``free`` or keep them
+        cached)."""
+        zeroed = []
+        for b in blocks:
+            self._check_id(b)
+            rc = self.refcount.get(b)
+            if rc is None or b in self._free_set:
+                raise ValueError(f"release of unallocated block {b}")
+            if rc <= 0:
+                raise ValueError(f"release of refcount-0 block {b}")
+            self.refcount[b] = rc - 1
+            if rc == 1:
+                zeroed.append(b)
+        return zeroed
+
+    def free(self, blocks: List[int]) -> None:
+        """Return blocks to the free list.  Only unshared blocks
+        (refcount <= 1) may be freed; shared blocks must be ``release``d
+        by each holder."""
+        for b in blocks:
+            self._check_id(b)
             if b in self._free_set:
                 raise ValueError(f"double free of block {b}")
+            if self.refcount.get(b, 0) > 1:
+                raise ValueError(f"free of shared block {b} "
+                                 f"(refcount {self.refcount[b]})")
+            self.refcount.pop(b, None)
             self._free.append(b)
             self._free_set.add(b)
 
@@ -111,9 +170,12 @@ def blocks_for(n_tokens: int, block_size: int) -> int:
 
 class ContinuousScheduler:
     def __init__(self, *, num_blocks: int, block_size: int, max_batch: int,
-                 max_blocks_per_req: Optional[int] = None):
+                 max_blocks_per_req: Optional[int] = None,
+                 enable_prefix_cache: bool = True):
         self.allocator = BlockAllocator(num_blocks)
         self.block_size = block_size
+        self.prefix = PrefixCache(self.allocator, block_size,
+                                  enabled=enable_prefix_cache)
         self.max_batch = max_batch
         self.max_blocks = max_blocks_per_req or (num_blocks - 1)
         self.block_table = np.full((max_batch, self.max_blocks), NULL_BLOCK,
@@ -124,6 +186,9 @@ class ContinuousScheduler:
         self.waiting: Deque[Request] = collections.deque()
         self.finished: List[Request] = []
         self._admit_order: List[int] = []   # slots, oldest admission first
+        # (src, dst) device copies the engine must run before the next
+        # pool write (copy-on-write breaks of shared write targets)
+        self.cow_pending: List[Tuple[int, int]] = []
 
     # ------------------------------------------------------------ queue ---
 
@@ -145,11 +210,15 @@ class ContinuousScheduler:
     # -------------------------------------------------------- admission ---
 
     def try_admit(self, step: int = 0) -> List[Tuple[int, Request]]:
-        """FCFS admission into free slots.  A request needs blocks for its
-        whole prompt plus the first generated token; if the pool cannot
-        cover the queue head, admission stops (no head-of-line skipping —
-        keeps FCFS latency honest).  Returns [(slot, request)] admitted
-        now; the engine prefills them and scatters into the pool."""
+        """FCFS admission into free slots.  The radix cache is consulted
+        first: the longest cached prefix is ``fork``ed onto the request's
+        leading block-table entries (``req.n_cached`` tokens need no
+        prefill); fresh blocks cover the rest of the prompt plus the
+        first generated token.  If the pool cannot cover the queue head
+        even after LRU eviction, admission stops (no head-of-line
+        skipping — keeps FCFS latency honest).  Returns [(slot, request)]
+        admitted now; the engine prefills the un-cached suffixes as a
+        batch and then calls ``commit_prefill`` per request."""
         admitted = []
         for slot in range(self.max_batch):
             if not self.waiting:
@@ -168,11 +237,15 @@ class ContinuousScheduler:
                 raise ValueError(
                     f"request {req.rid}: prompt {req.plen} needs {need} "
                     f"blocks > pool size {self.allocator.num_blocks - 1}")
-            blocks = self.allocator.alloc(need)
-            if blocks is None:          # out of blocks: admission refused
+            shared = self.prefix.match(req.prompt)
+            fresh = self.prefix.alloc(need - len(shared))
+            if fresh is None:               # out of blocks: admission refused
+                self.prefix.cancel_match(req.prompt, shared)
                 break
+            blocks = shared + fresh
             self.waiting.popleft()
             req.slot, req.admitted_step = slot, step
+            req.n_cached = len(shared) * self.block_size
             self.slots[slot] = req
             self.blocks_of[slot] = blocks
             self.block_table[slot] = NULL_BLOCK
@@ -182,24 +255,51 @@ class ContinuousScheduler:
             admitted.append((slot, req))
         return admitted
 
+    def commit_prefill(self, slot: int) -> int:
+        """Register the request's full prompt blocks in the radix cache.
+        MUST be called only after the engine's prefill has scattered the
+        corresponding latents into the pool — matches hand out pool
+        contents, not promises.  Returns the number of blocks newly
+        registered."""
+        req = self.slots[slot]
+        n_full = req.plen // self.block_size
+        return self.prefix.insert(req.prompt, self.blocks_of[slot][:n_full])
+
     # ----------------------------------------------------- decode cycle ---
+
+    def _require_table_room(self, slot: int, n_tokens: int) -> None:
+        """Raise if ``n_tokens`` total tokens would overflow slot's block
+        table.  ``core.cache.update_latent_paged`` cannot detect this —
+        JAX clamps the out-of-range page index onto the request's LAST
+        block and silently overwrites it — so the host must refuse first."""
+        if blocks_for(n_tokens, self.block_size) > self.max_blocks:
+            req = self.slots[slot]
+            raise RuntimeError(
+                f"block table full: request {req.rid if req else '?'} in "
+                f"slot {slot} needs {n_tokens} token slots but the table "
+                f"caps at {self.max_blocks} blocks x {self.block_size} = "
+                f"{self.max_blocks * self.block_size} tokens; a device "
+                f"write would clamp onto the last block and silently "
+                f"overwrite it (raise max_blocks_per_req or max_new)")
 
     def ensure_step_capacity(self) -> List[Request]:
         """Grow each active request's allocation so the next decode token
         (written at position lengths[slot]) has a block.  Oldest admissions
-        grow first; on pool exhaustion the YOUNGEST running request is
-        preempted (recompute-style) so the oldest always make progress.
+        grow first; on pool exhaustion the cache is LRU-evicted, then the
+        YOUNGEST running request is preempted (recompute-style) so the
+        oldest always make progress.  If the write-target block turns out
+        shared (prefix-forked or trie-registered), the share is broken
+        copy-on-write: a private block is allocated and the (src, dst)
+        device copy is queued on ``cow_pending`` for the engine.
         Returns the preempted requests."""
         preempted: List[Request] = []
         for slot in list(self._admit_order):          # oldest first
             if self.slots[slot] is None:              # already preempted
                 continue
+            self._require_table_room(slot, int(self.lengths[slot]) + 1)
             need = blocks_for(int(self.lengths[slot]) + 1, self.block_size)
-            if need > self.max_blocks:
-                raise ValueError(f"request in slot {slot} exceeds "
-                                 f"max_blocks_per_req {self.max_blocks}")
             while need > len(self.blocks_of[slot]):
-                got = self.allocator.alloc(1)
+                got = self.prefix.alloc(1)
                 if got is None:
                     if self.n_active <= 1:
                         raise RuntimeError(
@@ -212,13 +312,45 @@ class ContinuousScheduler:
                     continue
                 self.blocks_of[slot].extend(got)
                 self.block_table[slot, len(self.blocks_of[slot]) - 1] = got[0]
+            if self.slots[slot] is not None:
+                self._cow_write_target(slot)
         return preempted
+
+    def _cow_write_target(self, slot: int) -> None:
+        """Copy-on-write: if the block about to receive this slot's next
+        token is shared, swap in a private copy.  Structurally this does
+        not arise from prefix sharing alone (shared blocks cover only
+        full prompt prefixes, writes land strictly after the prompt) —
+        it guards external forks and future decode-block registration."""
+        widx = int(self.lengths[slot]) // self.block_size
+        if widx >= len(self.blocks_of[slot]):
+            return                          # preempted mid-growth
+        old = self.blocks_of[slot][widx]
+        if not self.prefix.is_write_shared(old):
+            return
+        got = self.prefix.alloc(1)
+        if got is None:
+            raise RuntimeError(
+                f"pool exhausted breaking a copy-on-write share of block "
+                f"{old} (slot {slot}); increase num_blocks")
+        self.blocks_of[slot][widx] = got[0]
+        self.block_table[slot, widx] = got[0]
+        self.prefix.release([old])
+        self.prefix.count_cow()
+        self.cow_pending.append((old, got[0]))
+
+    def drain_cow(self) -> List[Tuple[int, int]]:
+        """Hand the queued (src, dst) copy-on-write block copies to the
+        engine (which owns the device pool) and clear the queue."""
+        out, self.cow_pending = self.cow_pending, []
+        return out
 
     def _preempt_youngest(self) -> Tuple[Request, int]:
         slot = self._admit_order[-1]
         req = self.slots[slot]
         # recompute-style: prompt + generated so far re-enter the queue as
-        # a longer prompt (greedy decoding makes the replay identical)
+        # a longer prompt (per-position-keyed sampling makes the replay
+        # identical — see engine._sample)
         req.prompt = np.concatenate(
             [req.prompt, np.asarray(req.tokens, np.int32)])
         req.max_new -= len(req.tokens)
@@ -246,7 +378,8 @@ class ContinuousScheduler:
         """Account one decode step: ``sampled[slot]`` is the token the step
         just produced for that slot; the token fed INTO the step is now in
         the cache (lengths += 1).  Finished requests are evicted and their
-        blocks freed.  Returns the requests finished this step."""
+        blocks released (trie-registered ones stay LRU-evictable).
+        Returns the requests finished this step."""
         done: List[Request] = []
         for slot, tok in sampled.items():
             req = self.slots[slot]
@@ -262,7 +395,7 @@ class ContinuousScheduler:
         return done
 
     def _release_slot(self, slot: int) -> None:
-        self.allocator.free(self.blocks_of.pop(slot))
+        self.prefix.release(self.blocks_of.pop(slot))
         req = self.slots[slot]
         req.slot = -1
         self.slots[slot] = None
@@ -274,7 +407,8 @@ class ContinuousScheduler:
 
     def utilization(self) -> Dict[str, float]:
         """valid_frac: valid tokens / allocated slots (internal
-        fragmentation); pool_frac: allocated blocks / pool size."""
+        fragmentation); pool_frac: allocated blocks / pool size (cached
+        refcount-0 blocks are counted separately as cached_blocks)."""
         alloc_blocks = sum(len(v) for v in self.blocks_of.values())
         valid = int(self.lengths[self.active_slots].sum()) \
             if self.active_slots else 0
@@ -284,4 +418,5 @@ class ContinuousScheduler:
             "pool_frac": alloc_blocks / (self.allocator.num_blocks - 1),
             "valid_tokens": float(valid),
             "allocated_blocks": float(alloc_blocks),
+            "cached_blocks": float(self.prefix.num_evictable),
         }

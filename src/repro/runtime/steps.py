@@ -337,6 +337,39 @@ def make_paged_serve_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
     return jax.jit(run, donate_argnums=(2,))
 
 
+def make_chunked_prefill_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
+                              *, compute_dtype=jnp.bfloat16,
+                              impl: str = "ref"):
+    """Batched chunked prefill straight into the paged pool:
+
+        fn(params, tokens (B, C), pool_tree, block_tables (B, nb),
+           lengths (B,), n_valid (B,)) -> (last_valid_logits (B, V),
+                                           pool_tree)
+
+    Row b prefills its request's next ``n_valid[b]`` prompt tokens at
+    absolute positions lengths[b].., attending the already-resident
+    prefix (prefix-cache hits + earlier chunks) THROUGH the block table;
+    idle rows carry n_valid 0.  The pool is donated (in-place scatter).
+
+    This replaces the per-request contiguous prefill + scatter detour:
+    one compiled step shape per (batch, chunk) pair — NOT one retrace per
+    prompt length — and every admitted request prefills as a batch.
+    """
+    if mesh is not None:
+        raise NotImplementedError("chunked paged prefill is single-host "
+                                  "(ROADMAP: multi-host sharded paged cache)")
+    if cfg.attn_kind != "mla":
+        raise NotImplementedError("paged serving requires attn_kind='mla'")
+
+    def run(params, tokens, pool, block_tables, lengths, n_valid):
+        return models.prefill_chunk_paged(params, cfg, tokens, pool,
+                                          block_tables, lengths, n_valid,
+                                          compute_dtype=compute_dtype,
+                                          impl=impl)
+
+    return jax.jit(run, donate_argnums=(2,))
+
+
 def _scatter_entries(pool_leaf, contig_leaf, pages, block_size: int):
     """One cache leaf of the prefill->paged handoff.  contig_leaf:
     (1, cap, D) or stacked (layers, 1, cap, D); pages: (n_pg,) pool block

@@ -1,0 +1,594 @@
+"""Radix prefix cache + chunked batched paged prefill (PR 2).
+
+Covers, bottom-up:
+  * BlockAllocator refcounts: fork / release / free semantics;
+  * PrefixCache: longest-prefix match with the plen-1 copy-on-write cap,
+    insert-after-prefill, LRU eviction of refcount-zero blocks, revival;
+  * property test (seeded core + hypothesis wrapper) driving random
+    submit/decode/fork/release/evict sequences, asserting no double
+    free, refcounts == live block-table references, shared blocks never
+    freed while referenced;
+  * the full-block-table silent-overwrite fix (scheduler raises before
+    update_latent_paged could clamp);
+  * chunked paged prefill == contiguous "MHA-mode" prefill numerics, and
+    decode-after-shared-chunked-prefill == contiguous decode for ALL
+    FOUR execution schemes at ragged lengths (the acceptance criterion);
+  * copy-on-write: a shared write-target block is swapped for a device
+    copy and decode numerics are unaffected;
+  * engine end-to-end: shared-prefix streams hit the cache, prefill
+    strictly fewer tokens / allocate strictly fewer blocks than the
+    PR-1 runtime, compile one prefill shape, and emit IDENTICAL tokens;
+  * temperature / top-k sampling determinism, incl. preemption replay;
+  * the hwmodel prefix-hit cost term.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as configs
+import repro.models as models
+from repro.core import cache as cachelib
+from repro.core import mla as mlalib
+from repro.core.schemes import prefill_time
+from repro.hwmodel import attention_costs as ac
+from repro.nn import module as nnm
+from repro.runtime import (BlockAllocator, ContinuousScheduler,
+                           PagedMLAEngine, PrefixCache, Request, blocks_for)
+
+MCFG = mlalib.MLAConfig(d_model=64, n_heads=4, q_lora_rank=48,
+                        kv_lora_rank=32, qk_nope_dim=16, qk_rope_dim=8,
+                        v_head_dim=16)
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+# ----------------------------------------------------- allocator refcounts --
+
+
+def test_allocator_refcount_semantics():
+    a = BlockAllocator(6)
+    g = a.alloc(3)
+    b0, b1, b2 = g
+    a.fork([b0])                                 # rc 2
+    with pytest.raises(ValueError):
+        a.free([b0])                             # shared: must release
+    assert a.release([b0]) == []                 # rc 1
+    a.free([b0])                                 # now legal
+    with pytest.raises(ValueError):
+        a.free([b0])                             # double free
+    with pytest.raises(ValueError):
+        a.fork([b0])                             # fork of freed block
+    with pytest.raises(ValueError):
+        a.release([b0])                          # release of freed block
+    assert a.release([b1]) == [b1]               # zeroed, NOT freed yet
+    with pytest.raises(ValueError):
+        a.release([b1])                          # rc already 0
+    a.free([b1])
+    assert a.num_free == 4 and a.refcount == {b2: 1}
+    assert a.total_allocs == 3
+
+
+# ---------------------------------------------------------- radix matching --
+
+
+def _cache(num_blocks=10, bs=4, enabled=True):
+    alloc = BlockAllocator(num_blocks)
+    return PrefixCache(alloc, bs, enabled=enabled), alloc
+
+
+def test_match_longest_prefix_with_cow_cap():
+    pc, alloc = _cache()
+    toks = np.arange(12)                         # 3 full blocks of 4
+    blocks = alloc.alloc(3)
+    pc.insert(toks, blocks)
+    pc.release(blocks)                           # trie keeps them resident
+    # identical 12-token prompt: cap at (12-1)//4 = 2 blocks, NOT 3 —
+    # the last block is recomputed privately so prefill emits the
+    # last-position logits (the copy-on-write boundary)
+    assert pc.match(toks) == blocks[:2]
+    pc.release(blocks[:2])
+    # longer prompt with the same start matches all 3 full blocks
+    assert pc.match(np.arange(14)) == blocks
+    pc.release(blocks)
+    # divergence inside block 2 stops the walk after block 1
+    div = np.concatenate([np.arange(6), [99], np.arange(7, 14)])
+    assert pc.match(div) == blocks[:1]
+    pc.release(blocks[:1])
+    # prompts shorter than one full block never match
+    assert pc.match(np.arange(4)) == []
+    assert pc.stats.hit_tokens == (2 + 3 + 1) * 4
+
+
+def test_disabled_cache_is_passthrough():
+    pc, alloc = _cache(enabled=False)
+    blocks = pc.alloc(2)
+    assert pc.insert(np.arange(8), blocks) == 0
+    assert pc.match(np.arange(8)) == []
+    pc.release(blocks)                           # straight back to the pool
+    assert alloc.num_free == 9 and pc.num_cached == 0
+
+
+def test_lru_eviction_and_revival():
+    pc, alloc = _cache(num_blocks=8, bs=2)       # 7 usable
+    a = pc.alloc(2)
+    pc.insert([1, 2, 3, 4], a)
+    b = pc.alloc(2)
+    pc.insert([5, 6, 7, 8], b)
+    pc.release(a)
+    pc.release(b)                                # both cached, rc 0
+    assert pc.num_evictable == 4 and alloc.num_free == 3
+    # touch chain a to make it most-recently-used
+    got = pc.match([1, 2, 3, 4, 9])              # forks both a-blocks
+    assert got == a
+    pc.release(a)
+    # allocating 5 blocks: 3 free + 2 evicted; chain b (LRU) must go first
+    fresh = pc.alloc(5)
+    assert fresh is not None and len(fresh) == 5
+    assert pc.stats.evictions == 2
+    assert pc.match([5, 6, 7, 8, 9]) == []       # b evicted...
+    assert pc.match([1, 2, 3, 4, 9]) == a        # ...a survived
+    pc.release(a)
+    # leaf-first: a's deeper block must evict before its parent
+    pc.evict(1)
+    assert pc.match([1, 2, 3, 4, 9]) == a[:1]
+    pc.release(a[:1])
+
+
+def test_refused_admission_does_not_inflate_hit_rate():
+    """A pool-pressured queue head is matched then refused every tick;
+    cancel_match must back the stats out so hit rate counts only tokens
+    actually served (review finding on PR 2)."""
+    s = ContinuousScheduler(num_blocks=7, block_size=2, max_batch=2)
+    s.submit(Request(rid=0, prompt=np.arange(8, dtype=np.int32), max_new=4))
+    (slot, _), = s.try_admit()
+    s.commit_prefill(slot)
+    s.record_prefill_sample(slot, 1)
+    hit0 = s.prefix.stats.hit_tokens
+    # same prompt, but only 1 free block left: matched, then refused
+    s.submit(Request(rid=1, prompt=np.arange(8, dtype=np.int32), max_new=4))
+    for _ in range(3):
+        assert s.try_admit() == []
+    assert s.prefix.stats.hit_tokens == hit0
+    assert s.prefix.stats.lookup_tokens == 8      # request 0's offer only
+    # every forked block was handed back on refusal
+    assert all(s.allocator.refcount[b] == 1 for b in s.blocks_of[slot])
+
+
+def test_insert_keeps_existing_mapping():
+    pc, alloc = _cache(bs=2)
+    a = pc.alloc(1)
+    pc.insert([7, 8], a)
+    dup = pc.alloc(1)                            # same content, other block
+    assert pc.insert([7, 8], dup) == 0           # path exists: not replaced
+    assert pc.match([7, 8, 9]) == a
+    pc.release(a + dup)
+    assert alloc.refcount[a[0]] == 1             # still held by the match
+    assert dup[0] not in alloc.refcount          # duplicate went free
+
+
+# ------------------------------------------------------------ property test -
+
+
+def _drive_scheduler(seed: int, n_ops: int = 120) -> None:
+    """Random submit/decode/fork/release/evict traffic against the real
+    scheduler (allocator + prefix cache), with invariants checked after
+    every op:  refcount(b) == #live block-table references to b, the
+    free list never intersects live tables or the trie, and shared
+    blocks are never freed while referenced (free() raising on rc > 1 is
+    exercised explicitly)."""
+    rng = np.random.default_rng(seed)
+    s = ContinuousScheduler(num_blocks=int(rng.integers(6, 16)),
+                            block_size=int(rng.integers(2, 5)),
+                            max_batch=int(rng.integers(1, 4)))
+    pool_tokens = (s.allocator.num_blocks - 1) * s.block_size
+    rid = 0
+
+    def live_refs():
+        refs = {}
+        for blocks in s.blocks_of.values():
+            for b in blocks:
+                refs[b] = refs.get(b, 0) + 1
+        return refs
+
+    def check():
+        refs = live_refs()
+        rc = s.allocator.refcount
+        for b, n in refs.items():
+            assert rc.get(b, 0) == n, (b, rc.get(b, 0), n)
+        for b, c in rc.items():
+            assert c == refs.get(b, 0), (b, c, refs.get(b, 0))
+            if c == 0:
+                assert b in s.prefix._evictable
+        free = set(s.allocator._free)
+        assert not free & set(refs)
+        assert not free & set(s.prefix._node_of)
+        assert not free & set(rc)
+        # a shared block can never be hard-freed
+        for b, c in rc.items():
+            if c > 1:
+                with pytest.raises(ValueError):
+                    s.allocator.free([b])
+
+    for _ in range(n_ops):
+        op = rng.integers(0, 5)
+        if op == 0 and len(s.waiting) < 4:           # submit
+            # small alphabet + common preamble -> real prefix collisions
+            plen = int(rng.integers(1, max(pool_tokens // 2, 2)))
+            prompt = np.concatenate([
+                np.zeros(min(plen, 4), np.int32),
+                rng.integers(0, 3, max(plen - 4, 0)).astype(np.int32)])
+            s.submit(Request(rid=rid, prompt=prompt,
+                             max_new=int(rng.integers(1, 6))))
+            rid += 1
+        elif op == 1:                                # admit + commit
+            for slot, _ in s.try_admit():
+                s.commit_prefill(slot)
+        elif op == 2 and s.active_slots:             # one decode tick
+            s.ensure_step_capacity()
+            s.drain_cow()
+            s.advance({sl: int(rng.integers(0, 3))
+                       for sl in s.active_slots})
+        elif op == 3:                                # LRU eviction pressure
+            s.prefix.evict(int(rng.integers(1, 3)))
+        elif op == 4 and s.active_slots:             # external fork/release
+            # (refcount transiently exceeds table refs between the two
+            # calls — invariants are only claimed at op boundaries)
+            slot = int(rng.choice(s.active_slots))
+            blk = s.blocks_of[slot][0]
+            s.allocator.fork([blk])
+            s.prefix.release([blk])
+        check()
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 7, 11, 23, 42])
+def test_scheduler_refcount_invariants_seeded(seed):
+    _drive_scheduler(seed)
+
+
+def test_scheduler_refcount_invariants_hypothesis():
+    hypothesis = pytest.importorskip(
+        "hypothesis", reason="optional dev dep: property-based sweeps")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(min_value=0, max_value=10_000))
+    def run(seed):
+        _drive_scheduler(seed, n_ops=60)
+
+    run()
+
+
+# ------------------------------------------------ full-table overwrite fix --
+
+
+def test_full_block_table_raises_not_clamps():
+    # 2 blocks x 2 tokens per request: a 3-token prompt + 2 generated
+    # tokens would need a 3rd block -> the PR-1 runtime would let
+    # update_latent_paged clamp the page index onto block 1 and silently
+    # overwrite it; the scheduler must refuse on the host instead.
+    s = ContinuousScheduler(num_blocks=12, block_size=2, max_batch=1,
+                            max_blocks_per_req=2)
+    s.submit(Request(rid=0, prompt=np.arange(3, dtype=np.int32), max_new=8))
+    (slot, _), = s.try_admit()
+    s.record_prefill_sample(slot, 1)
+    s.ensure_step_capacity()                     # lengths 3 (+1) fits: ok
+    s.advance({slot: 1})                         # lengths -> 4 == capacity
+    with pytest.raises(RuntimeError, match="block table full"):
+        s.ensure_step_capacity()
+
+
+# ----------------------------------------- chunked prefill / CoW numerics --
+
+
+def _paged_setup(lengths, shared_tok, bs, nb, N):
+    """Block tables where every request's leading ``shared_tok`` tokens
+    map to the SAME pool blocks (the radix-cache layout)."""
+    B = len(lengths)
+    n_sh = shared_tok // bs
+    rng = np.random.default_rng(0)
+    ids = list(rng.permutation(np.arange(1, N)))
+    shared = [ids.pop() for _ in range(n_sh)]
+    bt = np.zeros((B, nb), np.int32)
+    for b in range(B):
+        nfull = blocks_for(int(lengths[b]) + 1, bs)
+        bt[b, :n_sh] = shared
+        for j in range(n_sh, nfull):
+            bt[b, j] = ids.pop()
+    return jnp.asarray(bt)
+
+
+def _chunked_shared_prefill(chunk):
+    """Fill a paged pool via chunked prefill with the leading blocks of
+    every request SHARED (the radix-cache layout); returns everything
+    needed to compare against the contiguous oracle."""
+    bs, nb, N = 4, 8, 40
+    lengths = np.asarray([13, 21, 9, 24], np.int32)   # ragged
+    shared_tok = 8                                    # 2 shared blocks
+    B, S = len(lengths), nb * bs
+    params = nnm.init_params(jax.random.PRNGKey(0), mlalib.mla_defs(MCFG),
+                             jnp.float32)
+    rng = np.random.default_rng(1)
+    common = rng.standard_normal((shared_tok, MCFG.d_model)) * 0.1
+    xs = [np.concatenate([common,
+                          rng.standard_normal((int(L) - shared_tok,
+                                               MCFG.d_model)) * 0.1])
+          for L in lengths]
+    bt = _paged_setup(lengths, shared_tok, bs, nb, N)
+    pool = cachelib.paged_latent_cache(N, bs, MCFG.kv_lora_rank,
+                                       MCFG.qk_rope_dim, jnp.float32)
+    # contiguous oracle per request
+    want_out, want_entries = [], []
+    for b in range(B):
+        x = jnp.asarray(xs[b], jnp.float32)[None]
+        pos = jnp.arange(int(lengths[b]))[None]
+        o, e = mlalib.mla_prefill(params, MCFG, x, pos)
+        want_out.append(np.asarray(o[0]))
+        want_entries.append(e)
+    # paged: request 0 prefills its WHOLE prompt (it "populates" the
+    # shared blocks); the others start after the 8 shared tokens.
+    got_out = [np.zeros((int(L), MCFG.d_model), np.float32)
+               for L in lengths]
+    for b in range(B):
+        start = 0 if b == 0 else shared_tok
+        while start < int(lengths[b]):
+            take = min(chunk, int(lengths[b]) - start)
+            xc = np.zeros((B, chunk, MCFG.d_model), np.float32)
+            xc[b, :take] = xs[b][start:start + take]
+            lens = np.zeros((B,), np.int32)
+            lens[b] = start
+            nv = np.zeros((B,), np.int32)
+            nv[b] = take
+            o, pool = mlalib.mla_prefill_chunk_paged(
+                params, MCFG, jnp.asarray(xc), pool, bt,
+                jnp.asarray(lens), jnp.asarray(nv))
+            got_out[b][start:start + take] = np.asarray(o[b, :take])
+            start += take
+    return (params, pool, bt, lengths, xs, got_out, want_out,
+            want_entries, shared_tok)
+
+
+@pytest.mark.parametrize("chunk", [3, 8])
+def test_chunked_prefill_matches_contiguous(chunk):
+    """Chunk-by-chunk paged prefill reproduces the contiguous MHA-mode
+    prefill: same per-position outputs, same cached latents — including
+    requests whose leading blocks are SHARED and therefore skipped."""
+    (params, pool, bt, lengths, xs, got_out, want_out, want_entries,
+     shared_tok) = _chunked_shared_prefill(chunk)
+    for b in range(len(lengths)):
+        lo = 0 if b == 0 else shared_tok
+        np.testing.assert_allclose(got_out[b][lo:], want_out[b][lo:],
+                                   atol=5e-5, rtol=5e-5)
+        ckv_c, krope_c = cachelib.gather_latent_paged(pool, bt[b:b + 1])
+        L = int(lengths[b])
+        np.testing.assert_allclose(np.asarray(ckv_c[0, :L]),
+                                   np.asarray(want_entries[b]["ckv"][0]),
+                                   atol=5e-5, rtol=5e-5)
+        np.testing.assert_allclose(np.asarray(krope_c[0, :L]),
+                                   np.asarray(want_entries[b]["krope"][0]),
+                                   atol=5e-5, rtol=5e-5)
+
+
+@pytest.mark.parametrize("scheme", mlalib.SCHEMES)
+def test_decode_after_shared_chunked_prefill(scheme):
+    """THE acceptance criterion: decode over a pool filled by chunked
+    prefill WITH block sharing is allclose to the contiguous non-shared
+    path, for all four execution schemes, at ragged lengths."""
+    params, pool, bt, lengths, xs = _chunked_shared_prefill(5)[:5]
+    params = mlalib.prepare_serving(params, MCFG, "ru")
+    B = len(lengths)
+    S = bt.shape[1] * 4
+    x_t = rand(jax.random.PRNGKey(9), (B, MCFG.d_model)) * 0.1
+    want = []
+    for b in range(B):
+        c = cachelib.latent_cache(1, S, MCFG.kv_lora_rank, MCFG.qk_rope_dim,
+                                  jnp.float32)
+        pos = jnp.arange(int(lengths[b]))[None]
+        _, e = mlalib.mla_prefill(params, MCFG,
+                                  jnp.asarray(xs[b], jnp.float32)[None], pos)
+        c = cachelib.update_latent(c, e["ckv"], e["krope"], 0)
+        o, _ = mlalib.mla_decode(params, MCFG, x_t[b:b + 1], c,
+                                 int(lengths[b]), scheme=scheme)
+        want.append(np.asarray(o[0]))
+    got, _ = mlalib.mla_decode_paged(params, MCFG, x_t, pool, bt,
+                                     jnp.asarray(lengths), scheme=scheme)
+    np.testing.assert_allclose(np.asarray(got), np.stack(want),
+                               atol=5e-5, rtol=5e-5)
+
+
+def test_copy_block_paged_and_cow():
+    # device copy correctness
+    pool = cachelib.paged_latent_cache(6, 4, 8, 4, jnp.float32)
+    pool = {k: v.at[2].set(7.0) for k, v in pool.items()}
+    pool = cachelib.copy_block_paged(pool, 2, 5)
+    np.testing.assert_allclose(np.asarray(pool["ckv"][5]), 7.0)
+    # scheduler swaps a SHARED write-target for a private copy
+    s = ContinuousScheduler(num_blocks=12, block_size=4, max_batch=1)
+    s.submit(Request(rid=0, prompt=np.arange(6, dtype=np.int32), max_new=9))
+    (slot, _), = s.try_admit()
+    s.commit_prefill(slot)
+    s.record_prefill_sample(slot, 1)
+    wtarget = s.blocks_of[slot][1]          # partial block: write target
+    s.allocator.fork([wtarget])             # simulate an external holder
+    s.ensure_step_capacity()
+    copies = s.drain_cow()
+    assert len(copies) == 1 and copies[0][0] == wtarget
+    assert s.blocks_of[slot][1] == copies[0][1] != wtarget
+    assert s.block_table[slot, 1] == copies[0][1]
+    assert s.allocator.refcount[wtarget] == 1       # our ref released
+    assert s.prefix.stats.cow_copies == 1
+    s.prefix.release([wtarget])             # external holder lets go
+    # next tick: nothing left to break
+    s.ensure_step_capacity()
+    assert s.drain_cow() == []
+
+
+# --------------------------------------------------------- engine e2e -------
+
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    cfg = configs.smoke("deepseek-v2-236b")
+    params = nnm.init_params(jax.random.PRNGKey(0), models.model_defs(cfg),
+                             jnp.float32)
+    return cfg, params
+
+
+def _shared_prefix_requests(cfg, rng, n=4, pre=12):
+    preamble = rng.integers(0, cfg.vocab, (pre,)).astype(np.int32)
+    reqs = []
+    for i in range(n):
+        tail = rng.integers(0, cfg.vocab,
+                            (int(rng.choice([5, 9, 14])),)).astype(np.int32)
+        reqs.append(Request(rid=i, prompt=np.concatenate([preamble, tail]),
+                            max_new=int(rng.integers(2, 6)), arrival=2 * i))
+    return reqs
+
+
+def _contiguous_greedy(cfg, params, prompt, max_new):
+    from repro.launch.serve import _prepare_mla
+    from repro.runtime import make_prefill_step, make_serve_step
+    params = _prepare_mla(params, cfg, "seq")
+    capacity = len(prompt) + max_new + 1
+    prefill = make_prefill_step(cfg, None, batch=1, capacity=capacity,
+                                compute_dtype=jnp.float32, scheme="seq")
+    step = make_serve_step(cfg, None, compute_dtype=jnp.float32,
+                           scheme="seq")
+    logits, cache = prefill(params, jnp.asarray(prompt, jnp.int32)[None])
+    out = [int(jnp.argmax(logits[0]))]
+    for i in range(max_new - 1):
+        logits, cache = step(params, jnp.asarray(out[-1:], jnp.int32),
+                             cache, len(prompt) + i)
+        out.append(int(jnp.argmax(logits[0])))
+    return out
+
+
+def _run_engine(cfg, params, reqs, **kw):
+    eng = PagedMLAEngine(cfg, params, num_blocks=40, block_size=4,
+                         max_batch=2, compute_dtype=jnp.float32,
+                         scheme="seq", **kw)
+    eng.run([Request(rid=r.rid, prompt=r.prompt.copy(), max_new=r.max_new,
+                     arrival=r.arrival) for r in reqs])
+    return eng
+
+
+def test_engine_shared_prefix_beats_pr1(smoke_model):
+    """Acceptance: on a shared-prefix stream the prefix runtime reports a
+    hit rate > 0, strictly fewer prefilled tokens and allocated blocks
+    than PR-1's runtime, a SINGLE prefill compilation, and the exact
+    greedy tokens of the contiguous path."""
+    cfg, params = smoke_model
+    reqs = _shared_prefix_requests(cfg, np.random.default_rng(5))
+    new = _run_engine(cfg, params, reqs, prefill_chunk=6)
+    old = _run_engine(cfg, params, reqs, enable_prefix_cache=False,
+                      prefill_mode="per_request")
+    sn, so = new.summary(), old.summary()
+    assert sn["prefix_hit_rate"] > 0
+    assert sn["prefill_tokens"] < so["prefill_tokens"]
+    assert sn["total_blocks_allocated"] < so["total_blocks_allocated"]
+    assert sn["prefill_compiles"] == 1          # one chunk size, 4 plens
+    assert so["prefill_compiles"] > 1           # PR-1: per-plen buckets
+    outs_new = {r.rid: r.output for r in new.sched.finished}
+    outs_old = {r.rid: r.output for r in old.sched.finished}
+    assert outs_new == outs_old
+    for r in reqs:                               # and both match contiguous
+        want = _contiguous_greedy(cfg, params, r.prompt, r.max_new)
+        assert outs_new[r.rid] == want, f"request {r.rid}"
+
+
+def test_engine_prefix_reuse_after_release(smoke_model):
+    """Blocks released at finish stay LRU-evictable and are re-hit by a
+    later identical prompt (no re-prefill of the shared blocks)."""
+    cfg, params = smoke_model
+    rng = np.random.default_rng(7)
+    prompt = rng.integers(0, cfg.vocab, (11,)).astype(np.int32)
+    reqs = [Request(rid=i, prompt=prompt.copy(), max_new=3, arrival=6 * i)
+            for i in range(2)]                  # strictly sequential
+    eng = _run_engine(cfg, params, reqs, prefill_chunk=4)
+    s = eng.summary()
+    assert s["prefix_hit_tokens"] == 8          # 2 full blocks re-hit
+    assert s["prefill_tokens"] == 11 + 3
+    outs = {r.rid: r.output for r in eng.sched.finished}
+    assert outs[0] == outs[1]
+
+
+# ---------------------------------------------------------------- sampling --
+
+
+def test_sampling_determinism_and_topk1(smoke_model):
+    cfg, params = smoke_model
+    rng = np.random.default_rng(11)
+    reqs = _shared_prefix_requests(cfg, rng, n=3, pre=8)
+    a = _run_engine(cfg, params, reqs, temperature=0.8, top_k=5,
+                    sample_seed=3)
+    b = _run_engine(cfg, params, reqs, temperature=0.8, top_k=5,
+                    sample_seed=3)
+    outs_a = {r.rid: r.output for r in a.sched.finished}
+    outs_b = {r.rid: r.output for r in b.sched.finished}
+    assert outs_a == outs_b                     # same seed -> same stream
+    c = _run_engine(cfg, params, reqs, temperature=0.8, top_k=5,
+                    sample_seed=4)
+    outs_c = {r.rid: r.output for r in c.sched.finished}
+    assert outs_c != outs_a                     # seed actually matters
+    # top_k=1 collapses to greedy argmax regardless of temperature
+    g = _run_engine(cfg, params, reqs)
+    k1 = _run_engine(cfg, params, reqs, temperature=2.5, top_k=1)
+    assert {r.rid: r.output for r in g.sched.finished} == \
+        {r.rid: r.output for r in k1.sched.finished}
+
+
+def test_sampling_survives_preemption_replay(smoke_model):
+    """Recompute preemption must not change sampled outputs: the PRNG key
+    folds the ABSOLUTE token position, and replayed tokens ride in the
+    folded prompt."""
+    cfg, params = smoke_model
+    rng = np.random.default_rng(13)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab, (6,)).astype(np.int32),
+                    max_new=10, arrival=0) for i in range(2)]
+    kw = dict(block_size=4, max_batch=2, compute_dtype=jnp.float32,
+              scheme="seq", temperature=0.7, top_k=8, sample_seed=1,
+              prefill_chunk=4)
+    big = PagedMLAEngine(cfg, params, num_blocks=40, **kw)
+    big.run([Request(rid=r.rid, prompt=r.prompt.copy(), max_new=r.max_new)
+             for r in reqs])
+    # 6 usable blocks of 4 tokens cannot hold 2 x (6 prompt + 10 gen):
+    # the youngest request must be preempted and replayed
+    small = PagedMLAEngine(cfg, params, num_blocks=7, **kw)
+    small.run([Request(rid=r.rid, prompt=r.prompt.copy(), max_new=r.max_new)
+               for r in reqs])
+    assert small.stats.preemptions > 0
+    assert {r.rid: r.output for r in small.sched.finished} == \
+        {r.rid: r.output for r in big.sched.finished}
+
+
+# ----------------------------------------------------------------- hwmodel --
+
+
+def test_prefill_cost_prefix_term():
+    kw = dict(seq_len=512, batch=2)
+    base = ac.mla_prefill_cost(ac.DSV3_MLA, **kw)
+    hit = ac.mla_prefill_cost(ac.DSV3_MLA, cached_prefix=256, **kw)
+    assert hit.flops < base.flops and hit.bytes < base.bytes
+    assert "B:prefix_read" in hit.breakdown
+    # suffix projections scale linearly, score pairs quadratically
+    assert hit.breakdown["q_down"] == base.breakdown["q_down"] / 2
+    assert hit.breakdown["attn_scores"] == pytest.approx(
+        base.breakdown["attn_scores"] * (512**2 - 256**2) / 512**2)
+    # savings monotone in the cached prefix
+    s1 = ac.prefix_hit_savings(ac.DSV3_MLA, seq_len=512, cached_prefix=128)
+    s2 = ac.prefix_hit_savings(ac.DSV3_MLA, seq_len=512, cached_prefix=384)
+    assert 0 < s1["flops_saved"] < s2["flops_saved"]
+    assert 0 < s1["bytes_saved"] < s2["bytes_saved"]
+    with pytest.raises(ValueError):
+        ac.mla_prefill_cost(ac.DSV3_MLA, seq_len=512, cached_prefix=512)
+
+
+def test_prefill_time_reflects_hits():
+    from repro.hwmodel.platforms import PLATFORMS
+    plat = PLATFORMS["tpu_v5e"]
+    t0 = prefill_time(ac.DSV3_MLA, plat, 2048)
+    t1 = prefill_time(ac.DSV3_MLA, plat, 2048, cached_prefix=1024)
+    assert t1 < t0                               # TTFT drops with hits
