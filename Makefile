@@ -3,10 +3,15 @@
 # passing subset.
 PY ?= python
 
-.PHONY: test test-fast bench-serving bench-smoke
+.PHONY: test test-fast test-kernels bench-serving bench-smoke
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
+
+# Pallas kernel oracle-parity suites alone (pl.pallas_call(interpret=True)
+# on CPU — they EXECUTE in CI, not skip).  Fast inner loop for kernel work.
+test-kernels:
+	PYTHONPATH=src $(PY) -m pytest -q -m kernel
 
 # Skip the slow dry-run compile cells during inner-loop development.
 test-fast:

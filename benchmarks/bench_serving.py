@@ -42,12 +42,14 @@ import common
 import repro.configs as configs
 import repro.models as models
 from repro.core.schemes import prefill_time
-from repro.hwmodel.attention_costs import prefix_hit_savings
+from repro.hwmodel.attention_costs import (mla_prefill_chunk_cost,
+                                           prefix_hit_savings)
 from repro.hwmodel.platforms import PLATFORMS
 from repro.launch.serve import _prepare_mla
 from repro.nn import module as nnm
 from repro.runtime import (PagedMLAEngine, Request, blocks_for,
                            make_prefill_step, make_serve_step)
+from repro.runtime.steps import make_chunked_prefill_step
 
 
 def make_requests(n, vocab, rng, shared_prefix_len=16):
@@ -127,9 +129,11 @@ def run_contiguous(cfg, params, reqs, max_batch):
     }
 
 
-def run_paged(cfg, params, reqs, args, *, prefix: bool):
+def run_paged(cfg, params, reqs, args, *, prefix: bool,
+              prefill_impl=None):
     """Paged runtime; ``prefix=False`` reproduces PR-1 (per-request
-    prefill, no block sharing)."""
+    prefill, no block sharing); ``prefill_impl='pallas'`` swaps the
+    chunked prefill's gather view for the fused Pallas kernel."""
     bs = args.block_size
     num_blocks = 1 + sum(blocks_for(r.plen + r.max_new + 1, bs)
                          for r in reqs) // 2   # force block reuse
@@ -141,12 +145,60 @@ def run_paged(cfg, params, reqs, args, *, prefix: bool):
         platform=PLATFORMS["tpu_v5e"],
         enable_prefix_cache=prefix,
         prefill_mode="chunked" if prefix else "per_request",
+        prefill_impl=prefill_impl,
         prefill_chunk=args.prefill_chunk)
     out = eng.run([Request(rid=r.rid, prompt=r.prompt.copy(),
                            max_new=r.max_new, arrival=r.arrival)
                    for r in reqs], max_steps=args.steps)
     out["num_blocks"] = num_blocks
     out["outputs"] = {r.rid: r.output for r in eng.sched.finished}
+    return out
+
+
+def bench_prefill_kernel(cfg, params, args):
+    """Prefill-kernel row: ONE jitted chunked-prefill step over a paged
+    pool with a resident prefix, gather path vs Pallas kernel —
+    measured step latency (directional on CPU: the kernel runs in
+    interpret mode there), logits parity, and the modeled off-chip bytes
+    of each path at full scale (hwmodel.mla_prefill_chunk_cost)."""
+    bs, B, C = args.block_size, args.max_batch, args.prefill_chunk
+    rng = np.random.default_rng(args.seed + 2)
+    nb = blocks_for(bs + C, bs) + 1        # resident block + chunk + slack
+    num_blocks = 1 + B * nb
+    pool0 = models.init_paged_cache(cfg, num_blocks, bs, jnp.float32)
+    ids = list(range(1, num_blocks))
+    bt = np.asarray([[ids.pop(0) for _ in range(nb)] for _ in range(B)],
+                    np.int32)
+    lens = np.full((B,), bs, np.int32)     # one block already resident
+    nv = np.full((B,), C, np.int32)
+    tokens = rng.integers(0, cfg.vocab, (B, C)).astype(np.int32)
+    out = {}
+    for name, impl in (("gather", "ref"), ("pallas", "kernel")):
+        step = make_chunked_prefill_step(cfg, None,
+                                         compute_dtype=jnp.float32,
+                                         impl=impl)
+        logits, _ = step(params, jnp.asarray(tokens),
+                         jax.tree.map(jnp.copy, pool0), jnp.asarray(bt),
+                         jnp.asarray(lens), jnp.asarray(nv))   # warmup
+        jax.block_until_ready(logits)
+        reps, t0 = 3, time.perf_counter()
+        for _ in range(reps):
+            lg, _ = step(params, jnp.asarray(tokens),
+                         jax.tree.map(jnp.copy, pool0), jnp.asarray(bt),
+                         jnp.asarray(lens), jnp.asarray(nv))
+            jax.block_until_ready(lg)
+        out[name] = {"step_ms": (time.perf_counter() - t0) / reps * 1e3,
+                     "compiles": 1,
+                     "logits": np.asarray(logits)}
+    # modeled full-scale cost of each path (one DeepSeek-V2 layer)
+    mla = configs.full("deepseek-v2-236b").mla_config()
+    kw = dict(seq_len=1024, chunk=128, paged_block=128, batch=B)
+    for name in ("gather", "pallas"):
+        c = mla_prefill_chunk_cost(mla, impl=name, **kw)
+        attn_by = c.breakdown["B:cache_read"] + c.breakdown.get(
+            "B:gather_materialize", c.breakdown.get("B:block_table", 0.0))
+        out[name].update(model_bytes=c.bytes, model_flops=c.flops,
+                         attn_oi=c.breakdown["attn_scores_pv"] / attn_by)
     return out
 
 
@@ -197,6 +249,22 @@ def main():
           f"(chunk={args.prefill_chunk}), "
           f"{pp['prefix_evictions']:.0f} evictions")
 
+    print("== paged + prefix + Pallas prefill kernel (no gather) ==")
+    pk = run_paged(cfg, params, reqs, args, prefix=True,
+                   prefill_impl="pallas")
+    print(f"  {pk['decode_tokens']:.0f} decode tokens, "
+          f"{pk['prefill_tokens']:.0f} prefilled, "
+          f"{pk['prefill_compiles']:.0f} prefill compile")
+
+    print("== prefill-kernel step: gather view vs in-place Pallas ==")
+    kb = bench_prefill_kernel(cfg, params, args)
+    for name in ("gather", "pallas"):
+        r = kb[name]
+        print(f"  {name:7s}: {r['step_ms']:8.2f} ms/step (CPU, "
+              f"directional), modeled {r['model_bytes'] / 1e6:.0f} MB/layer "
+              f"at L=1024 C=128 bs=128, attn OI {r['attn_oi']:.0f} FLOP/B, "
+              f"{r['compiles']} compile")
+
     # modeled TTFT effect of the measured hit rate (full-scale config)
     mla = configs.full("deepseek-v2-236b").mla_config()
     plat = PLATFORMS["tpu_v5e"]
@@ -223,11 +291,22 @@ def main():
          int(pp["prefill_tokens"]), int(pp["total_blocks_allocated"]),
          int(pp["prefill_compiles"]), f"{pp['cache_utilization']:.3f}",
          f"{pp['prefix_hit_rate']:.2f}"],
+        ["paged+prefix+pallas", int(pk["decode_tokens"]),
+         int(pk["prefill_tokens"]), int(pk["total_blocks_allocated"]),
+         int(pk["prefill_compiles"]), f"{pk['cache_utilization']:.3f}",
+         f"{pk['prefix_hit_rate']:.2f}"],
     ]
     md = common.table(
         ["runtime", "decode tok", "prefill tok", "blocks alloc",
          "prefill compiles", "cache util", "hit rate"], rows)
     print("\n" + md)
+    md_k = common.table(
+        ["prefill path", "step ms (CPU)", "modeled MB/layer",
+         "attn OI (FLOP/B)", "compiles"],
+        [[n, f"{kb[n]['step_ms']:.2f}", f"{kb[n]['model_bytes'] / 1e6:.0f}",
+          f"{kb[n]['attn_oi']:.0f}", kb[n]["compiles"]]
+         for n in ("gather", "pallas")])
+    print(md_k)
 
     ok = True
     ok &= common.check("paged utilization beats contiguous",
@@ -256,11 +335,36 @@ def main():
         pp["prefill_compiles"] == 1,
         f"{pp['prefill_compiles']:.0f} vs {pr1['prefill_compiles']:.0f} "
         f"per-plen buckets")
+    ok &= common.check(
+        "Pallas prefill outputs token-identical to the gather path",
+        pk["outputs"] == pp["outputs"])
+    ok &= common.check(
+        "Pallas prefill compiles stay bounded (1 chunk size)",
+        pk["prefill_compiles"] == 1, f"{pk['prefill_compiles']:.0f}")
+    ok &= common.check(
+        "prefill-step logits parity (gather vs Pallas)",
+        np.allclose(kb["gather"]["logits"], kb["pallas"]["logits"],
+                    atol=1e-4, rtol=1e-4))
+    ok &= common.check(
+        "modeled prefill bytes: in-place paged reads < materialized gather",
+        kb["pallas"]["model_bytes"] < kb["gather"]["model_bytes"],
+        f"{kb['pallas']['model_bytes'] / 1e6:.0f} vs "
+        f"{kb['gather']['model_bytes'] / 1e6:.0f} MB/layer")
+    ok &= common.check(
+        "modeled attention intensity rises with the kernel",
+        kb["pallas"]["attn_oi"] > kb["gather"]["attn_oi"],
+        f"{kb['pallas']['attn_oi']:.0f} vs {kb['gather']['attn_oi']:.0f} "
+        f"FLOP/B")
     pp_save = {k: v for k, v in pp.items() if k != "outputs"}
     pr1_save = {k: v for k, v in pr1.items() if k != "outputs"}
+    pk_save = {k: v for k, v in pk.items() if k != "outputs"}
+    kb_save = {n: {k: v for k, v in kb[n].items() if k != "logits"}
+               for n in kb}
     common.save("bench_serving.json", {"contiguous": base, "paged": pr1_save,
                                        "paged_prefix": pp_save,
+                                       "paged_prefix_pallas": pk_save,
                                        "util_gain": gain})
+    common.save("bench_prefill_kernel.json", kb_save)
     if not ok:
         sys.exit(1)
 

@@ -26,6 +26,20 @@ shape per chunk size instead of one retrace per prompt length).  Flags:
   --temperature T        sample with temperature T (0: greedy argmax);
   --top-k K              PRNG keys fold (request id, absolute position),
                          so recompute-preemption replay is deterministic
+
+PR 3 closes the loop on the prefill phase itself: the chunked prefill's
+chunk-attention can run through the fused paged Pallas kernel
+(kernels.mla_prefill — the multi-query sibling of the flash-decode
+kernel) instead of materializing the contiguous block-table view in HBM
+every chunk:
+
+  --prefill-impl {auto,gather,pallas}
+                         'gather' = reference view (what PR 2 shipped);
+                         'pallas' = in-place block-table walk, no gather
+                         ever written (token-identical, tier-1-gated);
+                         'auto' follows --impl ('kernel' -> pallas)
+  --impl {ref,kernel}    attention impl for decode AND (via 'auto' above)
+                         prefill; on CPU kernels run interpreted
 """
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -55,6 +69,9 @@ ap.add_argument("--platform", default="tpu_v5e", choices=sorted(PLATFORMS))
 ap.add_argument("--shared-prefix-len", type=int, default=16)
 ap.add_argument("--no-prefix-cache", action="store_true")
 ap.add_argument("--prefill-chunk", type=int, default=16)
+ap.add_argument("--prefill-impl", default="auto",
+                choices=("auto", "gather", "pallas"))
+ap.add_argument("--impl", default="ref", choices=("ref", "kernel"))
 ap.add_argument("--temperature", type=float, default=0.0)
 ap.add_argument("--top-k", type=int, default=0)
 ap.add_argument("--seed", type=int, default=0)
@@ -95,11 +112,12 @@ per_req = max(blocks_for(r.plen + r.max_new + 1, bs) for r in reqs)
 engine = PagedMLAEngine(cfg, params, num_blocks=args.num_blocks,
                         block_size=bs, max_batch=args.max_batch,
                         max_blocks_per_req=per_req,
-                        compute_dtype=jnp.float32, impl="ref",
+                        compute_dtype=jnp.float32, impl=args.impl,
                         scheme="auto", platform=plat,
                         enable_prefix_cache=not args.no_prefix_cache,
                         prefill_mode="chunked" if args.prefill_chunk
                         else "per_request",
+                        prefill_impl=args.prefill_impl,
                         prefill_chunk=args.prefill_chunk or 32,
                         temperature=args.temperature, top_k=args.top_k,
                         sample_seed=args.seed)

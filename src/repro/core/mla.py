@@ -32,6 +32,7 @@ score matrix is L x L and V must be materialized first).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -180,8 +181,29 @@ def mla_prefill(params, cfg: MLAConfig, x, positions, *, attn_fn=None,
     return out, entries
 
 
+def _q_latent_chunk(params, cfg: MLAConfig, q_l, q_nope, scheme: str):
+    """Chunk-shaped sibling of :func:`_q_latent`: map a (B, C, ...) chunk
+    of nope-queries into the KV-latent space per execution scheme.
+    Returns q_eff: (B, C, H, D_kvl)."""
+    if scheme == "seq":
+        return jnp.einsum("bchn,khn->bchk", q_nope,
+                          params["w_uk"].astype(q_nope.dtype))
+    if scheme == "rc":
+        w_absorb = jnp.einsum(
+            "qhn,khn->hqk",
+            params["w_uq"][:, :, : cfg.qk_nope_dim].astype(jnp.float32),
+            params["w_uk"].astype(jnp.float32)).astype(q_l.dtype)
+        return jnp.einsum("bcq,hqk->bchk", q_l, w_absorb)
+    if scheme == "ru":
+        return jnp.einsum("bcq,hqk->bchk", q_l,
+                          params["w_absorb"].astype(q_l.dtype))
+    raise ValueError(f"unknown scheme {scheme}")
+
+
 def mla_prefill_chunk_paged(params, cfg: MLAConfig, x, pool: Dict[str, Any],
-                            block_table, lengths, n_valid):
+                            block_table, lengths, n_valid, *,
+                            scheme: str = "seq", impl: str = "gather",
+                            prefill_kernel=None):
     """One CHUNK of batched prefill, directly into the paged pool.
 
     x: (B, C, D) — row b carries the next ``n_valid[b]`` prompt tokens of
@@ -192,46 +214,96 @@ def mla_prefill_chunk_paged(params, cfg: MLAConfig, x, pool: Dict[str, Any],
     block).  Returns (out (B, C, D), new_pool).
 
     The chunk's latents are scattered FIRST, then the queries attend the
-    whole gathered block-table view with a per-position causal mask —
-    shared prefix blocks, earlier chunks and the in-chunk causal triangle
-    all ride the same paged path.  The nope-scores run in the latent
-    space (q_nope absorbed through W_uk, MQA-style, exactly the 'seq'
-    decode scheme generalized to C query positions), so the cached
-    prefix is never up-projected to per-head K/V — same function as the
-    "MHA-mode" :func:`mla_prefill` (two-term scores are an exact
-    reordering of the concatenated dot product), asserted allclose in
-    tests/test_prefix_cache.py.
+    resident prefix THROUGH the block table — shared prefix blocks,
+    earlier chunks and the in-chunk causal triangle all ride the same
+    paged path.  The nope-scores run in the latent space (q mapped
+    through the scheme's absorption — 'seq'/'rc'/'ru', exactly the
+    decode schemes generalized to C query positions; 'naive' up-projects
+    the gathered cache, the paper's strawman), so the cached prefix is
+    never up-projected to per-head K/V — same function as the "MHA-mode"
+    :func:`mla_prefill` (two-term scores are an exact reordering of the
+    concatenated dot product), asserted allclose in
+    tests/test_prefix_cache.py and tests/test_prefill_kernel.py.
+
+    ``impl``: 'gather' materializes the contiguous (B, S) block-table
+    view (the reference path — what the roofline charges for); 'pallas'
+    runs the fused paged Pallas kernel (kernels.mla_prefill) which walks
+    the block table in place, no gather ever hitting HBM.  'naive' has
+    no kernel path and falls back to the gather view.
+    ``prefill_kernel``: optional kernel closure (models.blocks injects
+    the mesh-aware ops wrapper); defaults to the unsharded kernel.
     """
+    if impl not in ("gather", "pallas"):
+        raise ValueError(f"unknown prefill impl {impl!r}")
     lengths = jnp.asarray(lengths, jnp.int32)
     n_valid = jnp.asarray(n_valid, jnp.int32)
     B, C, _ = x.shape
     pos = lengths[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]  # (B, C)
-    _, q_nope, q_rope = _q_proj(params, cfg, x, pos)
+    q_l, q_nope, q_rope = _q_proj(params, cfg, x, pos)
     ckv_new, krope_new = _kv_latent(params, cfg, x, pos)
     pool = cachelib.update_latent_paged_chunk(pool, block_table, lengths,
                                               n_valid, ckv_new, krope_new)
+    scale = cfg.qk_dim ** -0.5
+
+    if impl == "pallas" and scheme != "naive":
+        # the deployment path: the kernel walks the block table in place —
+        # no contiguous gather is ever materialized (ROADMAP: the last
+        # HBM-materializing hot path in the serving engine).
+        q_eff = _q_latent_chunk(params, cfg, q_l, q_nope, scheme)
+        q_full = jnp.concatenate([q_eff, q_rope], axis=-1)
+        if prefill_kernel is None:
+            from ..kernels import ops as kops  # local import: no cycle
+            prefill_kernel = functools.partial(
+                kops.mla_prefill_paged_attention, impl="kernel")
+        o_lat = prefill_kernel(q_full, pool["ckv"], pool["krope"],
+                               block_table, lengths, n_valid,
+                               softmax_scale=scale)
+        o = jnp.einsum("bchk,khv->bchv", o_lat.astype(x.dtype),
+                       params["w_uv"].astype(x.dtype))
+        out = jnp.einsum("bchv,hvd->bcd", o, params["w_o"].astype(x.dtype))
+        return out, pool
+
+    # reference path: gather each request's pages into a contiguous view
+    # (numerics oracle; materializes the (B, S) block-table view in HBM).
     ckv_c, krope_c = cachelib.gather_latent_paged(pool, block_table)
     S = ckv_c.shape[1]
-    scale = cfg.qk_dim ** -0.5
-    # latent-space queries (see mla_decode's dtype NOTE: native-dtype
-    # contractions with f32 accumulation — no f32 cache copy in HBM)
-    q_eff = jnp.einsum("bchn,khn->bchk", q_nope,
-                       params["w_uk"].astype(q_nope.dtype))
-    scores = (jnp.einsum("bchk,bsk->bchs", q_eff.astype(ckv_c.dtype), ckv_c,
-                         preferred_element_type=jnp.float32)
-              + jnp.einsum("bchr,bsr->bchs", q_rope.astype(krope_c.dtype),
-                           krope_c, preferred_element_type=jnp.float32)
-              ) * scale
     # causal over absolute positions, clipped to each request's valid
     # extent (garbage in the partial tail block / idle rows stays masked)
     s_pos = jnp.arange(S, dtype=jnp.int32)
     valid = (s_pos[None, None, :] <= pos[:, :, None]) \
         & (s_pos[None, None, :] < (lengths + n_valid)[:, None, None])
-    scores = jnp.where(valid[:, :, None, :], scores, NEG_INF)
-    p = jax.nn.softmax(scores, axis=-1)
-    o_lat = jnp.einsum("bchs,bsk->bchk", p.astype(ckv_c.dtype), ckv_c,
+    if scheme == "naive":
+        # 1->3->2: up-project the entire gathered cache (the strawman).
+        k_nope = jnp.einsum("bsk,khn->bshn", ckv_c,
+                            params["w_uk"].astype(ckv_c.dtype))
+        v_full = jnp.einsum("bsk,khv->bshv", ckv_c,
+                            params["w_uv"].astype(ckv_c.dtype))
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(
+                krope_c[:, :, None, :].astype(k_nope.dtype),
+                k_nope.shape[:3] + (cfg.qk_rope_dim,))], axis=-1)
+        scores = jnp.einsum("bchd,bshd->bchs", q.astype(k.dtype), k,
+                            preferred_element_type=jnp.float32) * scale
+        scores = jnp.where(valid[:, :, None, :], scores, NEG_INF)
+        p = jax.nn.softmax(scores, axis=-1)
+        o = jnp.einsum("bchs,bshv->bchv", p.astype(v_full.dtype), v_full,
                        preferred_element_type=jnp.float32).astype(x.dtype)
-    o = jnp.einsum("bchk,khv->bchv", o_lat, params["w_uv"].astype(x.dtype))
+    else:
+        # latent-space queries (see mla_decode's dtype NOTE: native-dtype
+        # contractions with f32 accumulation — no f32 cache copy in HBM)
+        q_eff = _q_latent_chunk(params, cfg, q_l, q_nope, scheme)
+        scores = (jnp.einsum("bchk,bsk->bchs", q_eff.astype(ckv_c.dtype),
+                             ckv_c, preferred_element_type=jnp.float32)
+                  + jnp.einsum("bchr,bsr->bchs", q_rope.astype(krope_c.dtype),
+                               krope_c, preferred_element_type=jnp.float32)
+                  ) * scale
+        scores = jnp.where(valid[:, :, None, :], scores, NEG_INF)
+        p = jax.nn.softmax(scores, axis=-1)
+        o_lat = jnp.einsum("bchs,bsk->bchk", p.astype(ckv_c.dtype), ckv_c,
+                           preferred_element_type=jnp.float32).astype(x.dtype)
+        o = jnp.einsum("bchk,khv->bchv", o_lat,
+                       params["w_uv"].astype(x.dtype))
     out = jnp.einsum("bchv,hvd->bcd", o, params["w_o"].astype(x.dtype))
     return out, pool
 

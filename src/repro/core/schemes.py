@@ -39,16 +39,31 @@ def step_time(scheme: str, cfg: MLAConfig, platform: PlatformPoint,
 
 
 def prefill_time(cfg: MLAConfig, platform: PlatformPoint, seq_len: int,
-                 batch: int = 1, cached_prefix: int = 0) -> float:
+                 batch: int = 1, cached_prefix: int = 0,
+                 chunk: int = 0, paged_block: int = 0,
+                 impl: str = "pallas") -> float:
     """Roofline TTFT estimate for one MLA layer's prefill; ``cached_prefix``
     tokens come from the radix prefix cache (runtime.prefix_cache), so
     only the suffix is projected/written while still attending the full
     prompt.  bench_serving uses the ratio of this at the measured hit
-    rate vs 0 to report the modeled TTFT effect of prefix sharing."""
+    rate vs 0 to report the modeled TTFT effect of prefix sharing.
+
+    ``chunk > 0 and paged_block > 0`` costs the chunked PAGED prefill
+    instead (hwmodel.attention_costs.mla_prefill_chunk_cost): ``impl``
+    'gather' charges the materialized block-table view the reference
+    path writes + re-reads every chunk, 'pallas' the in-place paged
+    reads of the fused kernel — the arithmetic-intensity delta the
+    prefill kernel exists to claw back."""
     from ..hwmodel import attention_costs as ac  # local import: no cycle
-    c = ac.mla_prefill_cost(cfg, seq_len=seq_len, batch=batch,
-                            dtype_bytes=platform.dtype_bytes,
-                            cached_prefix=cached_prefix)
+    if chunk and paged_block:
+        c = ac.mla_prefill_chunk_cost(cfg, seq_len=seq_len, chunk=chunk,
+                                      paged_block=paged_block, batch=batch,
+                                      dtype_bytes=platform.dtype_bytes,
+                                      cached_prefix=cached_prefix, impl=impl)
+    else:
+        c = ac.mla_prefill_cost(cfg, seq_len=seq_len, batch=batch,
+                                dtype_bytes=platform.dtype_bytes,
+                                cached_prefix=cached_prefix)
     return max(c.flops / platform.peak_flops, c.bytes / platform.hbm_bw)
 
 

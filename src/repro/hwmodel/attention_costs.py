@@ -170,6 +170,92 @@ def mla_prefill_cost(cfg: MLAConfig, *, seq_len: int, batch: int = 1,
     return Cost(sum(fl.values()), sum(by.values()), {**fl, **{f"B:{k}": v for k, v in by.items()}})
 
 
+def mla_prefill_chunk_cost(cfg: MLAConfig, *, seq_len: int, chunk: int,
+                           paged_block: int, batch: int = 1,
+                           dtype_bytes: int = 2, rope: bool = False,
+                           cached_prefix: int = 0, impl: str = "pallas",
+                           include_io: bool = True,
+                           table_entry_bytes: int = 4) -> Cost:
+    """Chunked PAGED prefill of an L-token prompt, C tokens per chunk,
+    over a block pool with ``paged_block``-token blocks.
+
+    ``impl`` models the two chunk-attention paths of
+    core.mla.mla_prefill_chunk_paged:
+
+      'gather' — the reference path: every chunk MATERIALIZES the
+        contiguous (B, W) block-table view in HBM (pool gather read +
+        view write + attention re-read, W = the table extent rounded to
+        whole blocks) and computes scores over the full view width —
+        per-chunk bytes AND FLOPs scale with W regardless of how little
+        of the prompt is resident yet.
+      'pallas' — the kernel (kernels.mla_prefill): walks the block table
+        in place, streaming only the blocks at-or-before the chunk's
+        last valid position, once, plus the table entries themselves.
+        No view is ever written; this is what restores the arithmetic
+        intensity the paper's roofline assigns the compute-bound prefill
+        phase (scores stay on-chip, the pool streams HBM->VMEM once).
+
+    Weights are re-streamed once per chunk step (each chunk is its own
+    jitted step).  ``cached_prefix = P`` tokens ride the radix prefix
+    cache: only the suffix is projected/written, but every chunk still
+    attends the resident prefix through the table.
+    """
+    if impl not in ("gather", "pallas"):
+        raise ValueError(f"unknown impl {impl!r}")
+    if chunk < 1 or paged_block < 1:
+        raise ValueError("chunk and paged_block must be >= 1")
+    D, H, Q, K, dn, dr, dv = _dims(cfg, rope)
+    B, L, w, P, C, bs = batch, seq_len, dtype_bytes, cached_prefix, chunk, \
+        paged_block
+    if not 0 <= P < max(L, 1):
+        raise ValueError(f"cached_prefix {P} out of range for seq_len {L}")
+    Ls = L - P
+    n_chunks = -(-Ls // C)
+    # per-suffix-token projections (identical across impls; the 'seq'
+    # absorption: q_nope -> latent via W_uk, PV output via W_uv)
+    fl: Dict[str, float] = {
+        "q_down": 2 * B * Ls * D * Q,
+        "q_up": 2 * B * Ls * Q * H * (dn + dr),
+        "q_latent": 2 * B * Ls * H * dn * K,
+        "kv_down": 2 * B * Ls * D * (K + dr),
+        "v_up": 2 * B * Ls * H * K * dv,
+        "o_proj": 2 * B * Ls * H * dv * D,
+    }
+    w_bytes = (D * Q + Q * H * (dn + dr) + D * (K + dr) + K * H * dn
+               + K * H * dv + H * dv * D) * w
+    by: Dict[str, float] = {
+        "weights": w_bytes * n_chunks,      # re-streamed every chunk step
+        "cache_write": B * Ls * (K + dr) * w,
+    }
+    W = -(-L // bs) * bs                    # table extent, whole blocks
+    fl_attn = rd_pool = rd_table = view_bytes = 0.0
+    for k in range(n_chunks):
+        c_k = min(C, Ls - k * C)            # valid rows this chunk
+        end_k = P + k * C + c_k             # newest attendable position + 1
+        ext_k = -(-end_k // bs) * bs        # resident extent, whole blocks
+        if impl == "pallas":
+            fl_attn += 2 * B * H * c_k * ext_k * ((K + dr) + K)
+            rd_pool += B * ext_k * (K + dr) * w
+            rd_table += B * (ext_k // bs) * table_entry_bytes
+        else:
+            # scores/PV run over the FULL gathered view width W (masked
+            # entries are still computed), and the view round-trips HBM:
+            # pool gather read + view write + attention re-read.
+            fl_attn += 2 * B * H * c_k * W * ((K + dr) + K)
+            rd_pool += B * W * (K + dr) * w
+            view_bytes += 2 * B * W * (K + dr) * w
+    fl["attn_scores_pv"] = fl_attn
+    by["cache_read"] = rd_pool
+    if impl == "pallas":
+        by["block_table"] = rd_table
+    else:
+        by["gather_materialize"] = view_bytes
+    if include_io:
+        by["io"] = 2 * B * Ls * D * w
+    return Cost(sum(fl.values()), sum(by.values()),
+                {**fl, **{f"B:{k}": v for k, v in by.items()}})
+
+
 def prefix_hit_savings(cfg: MLAConfig, *, seq_len: int, cached_prefix: int,
                        batch: int = 1, dtype_bytes: int = 2,
                        rope: bool = False) -> Dict[str, float]:

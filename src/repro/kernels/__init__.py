@@ -1,7 +1,9 @@
 from . import ops, ref
 from .flash_attention import flash_attention
 from .mla_decode import mla_decode_kernel
-from .ops import attention, mla_decode_attention
+from .mla_prefill import mla_prefill_paged_kernel
+from .ops import attention, mla_decode_attention, mla_prefill_paged_attention
 
 __all__ = ["ops", "ref", "flash_attention", "mla_decode_kernel",
-           "attention", "mla_decode_attention"]
+           "mla_prefill_paged_kernel", "attention", "mla_decode_attention",
+           "mla_prefill_paged_attention"]

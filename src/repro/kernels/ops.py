@@ -19,6 +19,7 @@ from .. import compat
 from . import ref
 from .flash_attention import flash_attention
 from .mla_decode import mla_decode_kernel, mla_decode_paged_kernel
+from .mla_prefill import mla_prefill_paged_kernel
 
 
 def attention(q, k, v, *, impl: str = "ref", causal: bool = True,
@@ -98,3 +99,37 @@ def mla_decode_paged_attention(q_full, ckv_pages, krope_pages, block_tables,
                   PS(None, None, None), PS(dp, None), PS(dp)),
         out_specs=PS(dp, "model", None), check_vma=False,
     )(q_full, ckv_pages, krope_pages, block_tables, indices)
+
+
+def mla_prefill_paged_attention(q_full, ckv_pages, krope_pages, block_tables,
+                                lengths, n_valid, *, impl: str = "ref",
+                                softmax_scale: Optional[float] = None,
+                                mesh: Optional[Mesh] = None, dp_axes=None,
+                                block_q: int = 0):
+    """Paged chunked-prefill MLA attention: q_full (B,C,H,Dl+Dr), pool
+    pages (N,bs,Dl)/(N,bs,Dr), block_tables (B,nb), per-request
+    ``lengths``/``n_valid`` (B,) -> (B,C,H,Dl).
+
+    The multi-query sibling of :func:`mla_decode_paged_attention`: under
+    shard_map the batch (and with it the block tables / lengths /
+    n_valid) shards over the DP axes and heads over 'model'; the block
+    POOL is replicated over 'model' (the MQA structure of absorbed MLA —
+    head shards re-read the same compact pool, which is the paper's
+    bandwidth win: the latent pool is ~16x smaller than dense KV)."""
+    if impl == "ref":
+        return ref.mla_prefill_paged_ref(q_full, ckv_pages, krope_pages,
+                                         block_tables, lengths, n_valid,
+                                         softmax_scale=softmax_scale)
+    fn = functools.partial(mla_prefill_paged_kernel,
+                           softmax_scale=softmax_scale, block_q=block_q)
+    if mesh is None:
+        return fn(q_full, ckv_pages, krope_pages, block_tables, lengths,
+                  n_valid)
+    dp = dp_axes if dp_axes is not None else tuple(
+        a for a in ("pod", "data") if a in mesh.axis_names)
+    return compat.shard_map(
+        lambda q, c, r, t, ln, nv: fn(q, c, r, t, ln, nv), mesh=mesh,
+        in_specs=(PS(dp, None, "model", None), PS(None, None, None),
+                  PS(None, None, None), PS(dp, None), PS(dp), PS(dp)),
+        out_specs=PS(dp, None, "model", None), check_vma=False,
+    )(q_full, ckv_pages, krope_pages, block_tables, lengths, n_valid)

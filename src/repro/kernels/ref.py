@@ -58,6 +58,49 @@ def mla_decode_ref(q_full, ckv, krope, index, *,
     return o.astype(q_full.dtype)
 
 
+def mla_prefill_paged_ref(q_full, ckv_pages, krope_pages, block_tables,
+                          lengths, n_valid, *,
+                          softmax_scale: Optional[float] = None):
+    """Paged chunked-prefill oracle (multi-query sibling of
+    :func:`mla_decode_paged_ref`).
+
+    q_full      : (B, C, H, Dl+Dr) — chunk queries in the joint latent
+                  space ([q_eff ; q_rope], any absorption scheme)
+    ckv_pages   : (N, bs, Dl); krope_pages: (N, bs, Dr) — global pool
+                  (the chunk's own latents are already scattered in)
+    block_tables: (B, nb) int32; lengths: (B,) int32 — absolute position
+                  of each row's first chunk token; n_valid: (B,) int32 —
+                  real tokens per row (rows past it, and idle rows with
+                  n_valid 0, yield EXACT ZEROS, matching the kernel).
+    Returns (B, C, H, Dl).
+
+    Gathers each request's pages into a contiguous view and reduces with
+    a causal mask over absolute positions (chunk token c attends pool
+    positions <= lengths[b] + c).  The Pallas kernel reads the pool in
+    place instead (no gather) — this is the numerics oracle, not the
+    deployment path.
+    """
+    B, C, H, D = q_full.shape
+    bt = jnp.asarray(block_tables, jnp.int32)
+    nb, bs = bt.shape[1], ckv_pages.shape[1]
+    lengths = jnp.asarray(lengths, jnp.int32)
+    n_valid = jnp.asarray(n_valid, jnp.int32)
+    ckv = ckv_pages[bt].reshape(B, nb * bs, ckv_pages.shape[-1])
+    krope = krope_pages[bt].reshape(B, nb * bs, krope_pages.shape[-1])
+    scale = softmax_scale if softmax_scale is not None else D ** -0.5
+    cache = jnp.concatenate([ckv, krope], axis=-1)
+    s = jnp.einsum("bchd,bsd->bchs", q_full.astype(jnp.float32),
+                   cache.astype(jnp.float32)) * scale
+    q_pos = lengths[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+    k_pos = jnp.arange(nb * bs, dtype=jnp.int32)
+    valid = (k_pos[None, None, :] <= q_pos[:, :, None]) \
+        & (jnp.arange(C, dtype=jnp.int32)[None, :, None] < n_valid[:, None, None])
+    s = jnp.where(valid[:, :, None, :], s, NEG_INF)
+    p = jnp.where(valid[:, :, None, :], jax.nn.softmax(s, axis=-1), 0.0)
+    o = jnp.einsum("bchs,bsk->bchk", p, ckv.astype(jnp.float32))
+    return o.astype(q_full.dtype)
+
+
 def mla_decode_paged_ref(q_full, ckv_pages, krope_pages, block_tables,
                          indices, *, softmax_scale: Optional[float] = None):
     """Paged absorbed-MLA decode oracle.

@@ -27,6 +27,20 @@ Paged-runtime knobs (PR 2):
                       sampling beyond greedy argmax; the PRNG key is folded
                       with (request id, absolute token position) so
                       recompute-preemption replay stays deterministic.
+
+Prefill impl switch (PR 3):
+
+  --prefill-impl {auto,gather,pallas}
+                      chunk-attention path of the batched paged prefill.
+                      'gather' materializes the contiguous (B, S)
+                      block-table view in HBM every chunk (the reference
+                      path); 'pallas' runs the fused paged prefill kernel
+                      (kernels.mla_prefill) that walks the block table in
+                      place — same tokens, no gather ever written.  'auto'
+                      (default) follows --impl: 'kernel' (or its alias
+                      'pallas') uses the kernel, 'ref' the gather view.
+                      Both paths are token-identical (tier-1-gated in
+                      tests/test_prefill_kernel.py + tests/test_paged.py).
 """
 from __future__ import annotations
 
@@ -67,6 +81,12 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=32,
                     help="batched paged prefill chunk size "
                          "(0 = PR-1 per-request prefill)")
+    ap.add_argument("--prefill-impl", default="auto",
+                    choices=("auto", "gather", "pallas"),
+                    help="chunked-prefill attention path: 'gather' "
+                         "materializes the block-table view (reference), "
+                         "'pallas' walks the block table in place via the "
+                         "fused prefill kernel; 'auto' follows --impl")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy; > 0 samples with a per-request PRNG "
                          "key folded with the absolute token position")
@@ -147,6 +167,7 @@ def _serve_paged(args, cfg, params, dtype):
         platform=PLATFORMS[args.platform],
         enable_prefix_cache=not args.no_prefix_cache,
         prefill_mode="chunked" if args.prefill_chunk else "per_request",
+        prefill_impl=args.prefill_impl,
         prefill_chunk=args.prefill_chunk or 32,
         temperature=args.temperature, top_k=args.top_k,
         sample_seed=args.seed)

@@ -253,7 +253,7 @@ def _mla_step(params, cfg: ModelConfig, desc: Sub, x_t, ctx: Ctx):
     mcfg = cfg.mla_config()
     if ctx.lengths is not None:     # paged continuous-batching decode
         decode_kernel = None
-        if ctx.impl == "kernel":
+        if ctx.impl in ("kernel", "pallas"):
             def decode_kernel(q_full, ckv, krope, tables, idx, softmax_scale):
                 return kops.mla_decode_paged_attention(
                     q_full, ckv, krope, tables, idx, impl="kernel",
@@ -263,7 +263,7 @@ def _mla_step(params, cfg: ModelConfig, desc: Sub, x_t, ctx: Ctx):
                                        scheme=ctx.scheme,
                                        decode_kernel=decode_kernel)
     decode_kernel = None
-    if ctx.impl == "kernel":
+    if ctx.impl in ("kernel", "pallas"):
         def decode_kernel(q_full, ckv, krope, index, softmax_scale):
             return kops.mla_decode_attention(
                 q_full, ckv, krope, index, impl="kernel",
@@ -275,10 +275,23 @@ def _mla_step(params, cfg: ModelConfig, desc: Sub, x_t, ctx: Ctx):
 def _mla_chunk(params, cfg: ModelConfig, desc: Sub, x, ctx: Ctx):
     """Batched chunked prefill into the paged pool (mode 'prefill_chunk').
     x: (B, C, D) normalized chunk; the shared prefix is attended through
-    the block table — see core.mla.mla_prefill_chunk_paged."""
+    the block table — see core.mla.mla_prefill_chunk_paged.  With
+    ctx.impl 'kernel'/'pallas' the fused paged Pallas prefill kernel
+    (kernels.mla_prefill) replaces the materialized block-table gather."""
+    prefill_kernel, impl = None, "gather"
+    if ctx.impl in ("kernel", "pallas"):
+        impl = "pallas"
+
+        def prefill_kernel(q_full, ckv, krope, tables, lens, nv,
+                           softmax_scale):
+            return kops.mla_prefill_paged_attention(
+                q_full, ckv, krope, tables, lens, nv, impl="kernel",
+                softmax_scale=softmax_scale, mesh=ctx.mesh)
     return mlalib.mla_prefill_chunk_paged(params, cfg.mla_config(), x,
                                           ctx.cache, ctx.block_tables,
-                                          ctx.lengths, ctx.n_valid)
+                                          ctx.lengths, ctx.n_valid,
+                                          scheme=ctx.scheme, impl=impl,
+                                          prefill_kernel=prefill_kernel)
 
 
 def _slstm_sharded(params, cfg: ModelConfig, x, ctx: Ctx):

@@ -168,7 +168,12 @@ def prefill_chunk_paged(params, cfg: ModelConfig, tokens, pool,
     request's prompt (it samples generated token #1); other rows are
     discarded by the engine.  One compiled shape per (B, C), independent
     of prompt length — the whole point vs the per-plen retraces of the
-    contiguous prefill."""
+    contiguous prefill.
+
+    ``impl`` 'kernel' / 'pallas' routes the chunk attention through the
+    fused paged Pallas prefill kernel (kernels.mla_prefill): the block
+    table is walked in place, no contiguous (B, S) gather of the pool is
+    materialized.  'ref' keeps the gather reference path."""
     x = _embed(params, cfg, tokens, None, compute_dtype)
     ctx = Ctx(mode="prefill_chunk", positions=None, impl=impl, scheme=scheme,
               block_tables=block_tables, lengths=lengths, n_valid=n_valid)

@@ -96,6 +96,7 @@ class PagedMLAEngine:
                  enable_prefix_cache: bool = True,
                  prefill_chunk: int = 32,
                  prefill_mode: str = "chunked",
+                 prefill_impl: Optional[str] = None,
                  temperature: float = 0.0, top_k: int = 0,
                  sample_seed: int = 0):
         if cfg.attn_kind != "mla":
@@ -104,6 +105,13 @@ class PagedMLAEngine:
             raise ValueError("scheme='auto' needs a PlatformPoint")
         if prefill_mode not in ("chunked", "per_request"):
             raise ValueError(f"unknown prefill_mode {prefill_mode!r}")
+        if impl == "pallas":        # alias: the kernel impl IS Pallas
+            impl = "kernel"
+        if prefill_impl in ("auto", ""):
+            prefill_impl = None
+        if prefill_impl not in (None, "gather", "pallas"):
+            raise ValueError(f"unknown prefill_impl {prefill_impl!r} "
+                             "(None/'auto' | 'gather' | 'pallas')")
         if prefill_mode != "chunked" and enable_prefix_cache:
             # the per-request path recomputes + rewrites WHOLE prompts,
             # which would scatter over read-only shared blocks
@@ -121,6 +129,11 @@ class PagedMLAEngine:
         self.platform = platform
         self.block_size = block_size
         self.prefill_mode = prefill_mode
+        # chunked-prefill attention path: None follows ``impl`` ('ref' ->
+        # gather view, 'kernel' -> Pallas); 'gather'/'pallas' override it
+        # so the prefill path can be A/B'd with the decode path pinned
+        # (bench_serving's prefill-kernel row does exactly that).
+        self.prefill_impl = prefill_impl
         self.prefill_chunk = int(prefill_chunk)
         if self.prefill_chunk < 1:
             raise ValueError("prefill_chunk must be >= 1")
@@ -166,9 +179,18 @@ class PagedMLAEngine:
 
     def _chunk_step(self, chunk: int):
         if chunk not in self._chunk_steps:
+            impl = {"gather": "ref", "pallas": "kernel",
+                    None: self.impl}[self.prefill_impl]
+            # a FIXED engine scheme prefills with the same absorption
+            # ordering (all schemes compute the same function); 'auto'
+            # pins prefill to 'seq' so the per-step decode dispatch does
+            # not multiply compiled chunk shapes, and 'naive' has no
+            # latent chunk path.
+            scheme = self.scheme if self.scheme in ("seq", "rc", "ru") \
+                else "seq"
             self._chunk_steps[chunk] = make_chunked_prefill_step(
                 self.cfg, None, compute_dtype=self.compute_dtype,
-                impl=self.impl)
+                impl=impl, scheme=scheme)
         return self._chunk_steps[chunk]
 
     @property

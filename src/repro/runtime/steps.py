@@ -339,7 +339,7 @@ def make_paged_serve_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
 
 def make_chunked_prefill_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
                               *, compute_dtype=jnp.bfloat16,
-                              impl: str = "ref"):
+                              impl: str = "ref", scheme: str = "seq"):
     """Batched chunked prefill straight into the paged pool:
 
         fn(params, tokens (B, C), pool_tree, block_tables (B, nb),
@@ -350,6 +350,13 @@ def make_chunked_prefill_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
     absolute positions lengths[b].., attending the already-resident
     prefix (prefix-cache hits + earlier chunks) THROUGH the block table;
     idle rows carry n_valid 0.  The pool is donated (in-place scatter).
+
+    ``impl`` selects the chunk-attention path: 'ref' runs the gather
+    reference (materializes the (B, S) block-table view each chunk);
+    'kernel' / 'pallas' runs the fused paged Pallas prefill kernel
+    (kernels.mla_prefill) which walks the block table in place.
+    ``scheme`` picks the query-absorption ordering (seq/rc/ru — all
+    compute the same function; 'naive' falls back to the gather view).
 
     This replaces the per-request contiguous prefill + scatter detour:
     one compiled step shape per (batch, chunk) pair — NOT one retrace per
@@ -365,7 +372,7 @@ def make_chunked_prefill_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
         return models.prefill_chunk_paged(params, cfg, tokens, pool,
                                           block_tables, lengths, n_valid,
                                           compute_dtype=compute_dtype,
-                                          impl=impl)
+                                          impl=impl, scheme=scheme)
 
     return jax.jit(run, donate_argnums=(2,))
 

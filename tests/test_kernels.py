@@ -12,6 +12,8 @@ from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.mla_decode import mla_decode_kernel
 
+pytestmark = pytest.mark.kernel
+
 TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
 
 

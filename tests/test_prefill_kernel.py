@@ -1,0 +1,384 @@
+"""Oracle-parity suite for the paged chunked-prefill Pallas kernel
+(kernels/mla_prefill.py) — every kernel path is pinned against TWO
+independent references:
+
+  1. the pure-jnp oracle ``ref.mla_prefill_paged_ref`` (kernel level);
+  2. the PR-2 gather path (``core.mla.mla_prefill_chunk_paged`` with
+     impl='gather'), which itself is pinned against the contiguous
+     MHA-mode prefill in tests/test_prefix_cache.py (core level);
+
+sweeping schemes x chunk sizes x ragged lengths, plus adversarial block
+tables: interleaved null blocks, lengths exactly on a block boundary,
+single-token tail chunks, and chunks larger than the remaining prompt.
+Everything runs (not skips) on CPU via pl.pallas_call(interpret=True) —
+the ``kernel`` marker wires the module into its own CI step.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cache as cachelib
+from repro.core import mla as mlalib
+from repro.core.schemes import prefill_time
+from repro.hwmodel import attention_costs as ac
+from repro.hwmodel.platforms import PLATFORMS
+from repro.kernels import ref
+from repro.kernels.mla_decode import mla_decode_paged_kernel
+from repro.kernels.mla_prefill import mla_prefill_paged_kernel
+from repro.nn import module as nnm
+
+pytestmark = pytest.mark.kernel
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+MCFG = mlalib.MLAConfig(d_model=64, n_heads=4, q_lora_rank=48,
+                        kv_lora_rank=32, qk_nope_dim=16, qk_rope_dim=8,
+                        v_head_dim=16)
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+def _inputs(B, C, H, Dl, Dr, bs, nb, N, seed=0, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    rng = np.random.default_rng(seed)
+    q = rand(ks[0], (B, C, H, Dl + Dr), dtype)
+    ckv = rand(ks[1], (N, bs, Dl), dtype)
+    krope = rand(ks[2], (N, bs, Dr), dtype)
+    bt = jnp.asarray(rng.integers(0, N, (B, nb)), jnp.int32)
+    return q, ckv, krope, bt
+
+
+# ---------------------------------------------------------- kernel level ---
+
+
+@pytest.mark.parametrize("B,C,H,Dl,Dr,bs,nb,N,lengths,n_valid", [
+    (1, 4, 4, 32, 8, 4, 2, 4, [0], [4]),        # first chunk of a prompt
+    (3, 6, 4, 32, 8, 4, 8, 16, [0, 5, 11], [6, 3, 0]),   # ragged + idle row
+    (2, 8, 8, 64, 16, 8, 3, 8, [8, 15], [8, 1]),  # boundary start + 1-tail
+    (2, 5, 4, 32, 8, 16, 2, 6, [0, 27], [5, 5]),  # big blocks, deep start
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_prefill_kernel_vs_oracle(B, C, H, Dl, Dr, bs, nb, N, lengths,
+                                  n_valid, dtype, interpret_mode):
+    q, ckv, krope, bt = _inputs(B, C, H, Dl, Dr, bs, nb, N, dtype=dtype)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    n_valid = jnp.asarray(n_valid, jnp.int32)
+    out = mla_prefill_paged_kernel(q, ckv, krope, bt, lengths, n_valid,
+                                   interpret=True)
+    want = ref.mla_prefill_paged_ref(q, ckv, krope, bt, lengths, n_valid)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+@pytest.mark.parametrize("block_q", [1, 2, 3, 8])
+def test_prefill_kernel_query_tiling(block_q):
+    """C-query tiles: every block_q (incl. non-dividing -> padded tiles)
+    reproduces the untiled kernel and the oracle."""
+    B, C, H, Dl, Dr, bs, nb, N = 2, 7, 4, 32, 8, 4, 6, 12
+    q, ckv, krope, bt = _inputs(B, C, H, Dl, Dr, bs, nb, N, seed=3)
+    lengths = jnp.asarray([2, 9], jnp.int32)
+    n_valid = jnp.asarray([7, 4], jnp.int32)
+    want = ref.mla_prefill_paged_ref(q, ckv, krope, bt, lengths, n_valid)
+    out = mla_prefill_paged_kernel(q, ckv, krope, bt, lengths, n_valid,
+                                   block_q=block_q, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_prefill_kernel_padding_rows_are_zero():
+    """Rows past n_valid (and whole idle requests) return EXACT zeros —
+    the contract that keeps kernel/oracle parity assertable everywhere."""
+    B, C, H, Dl, Dr, bs, nb, N = 2, 6, 4, 32, 8, 4, 4, 8
+    q, ckv, krope, bt = _inputs(B, C, H, Dl, Dr, bs, nb, N, seed=4)
+    lengths = jnp.asarray([3, 0], jnp.int32)
+    n_valid = jnp.asarray([2, 0], jnp.int32)
+    out = np.asarray(mla_prefill_paged_kernel(q, ckv, krope, bt, lengths,
+                                              n_valid, interpret=True))
+    assert (out[0, 2:] == 0).all()
+    assert (out[1] == 0).all()
+    want = np.asarray(ref.mla_prefill_paged_ref(q, ckv, krope, bt, lengths,
+                                                n_valid))
+    assert (want[0, 2:] == 0).all() and (want[1] == 0).all()
+
+
+def test_prefill_kernel_ignores_unreferenced_pages():
+    """Poisoning pool blocks outside the table must not change results."""
+    B, C, H, Dl, Dr, bs, nb, N = 1, 4, 4, 32, 8, 4, 3, 8
+    q, _, _, _ = _inputs(B, C, H, Dl, Dr, bs, nb, N, seed=5)
+    ks = jax.random.split(jax.random.PRNGKey(6), 2)
+    ckv = rand(ks[0], (N, bs, Dl))
+    krope = rand(ks[1], (N, bs, Dr))
+    bt = jnp.asarray([[2, 5, 1]], jnp.int32)
+    lengths = jnp.asarray([6], jnp.int32)
+    n_valid = jnp.asarray([4], jnp.int32)
+    out = mla_prefill_paged_kernel(q, ckv, krope, bt, lengths, n_valid,
+                                   interpret=True)
+    poisoned = [i for i in range(N) if i not in (1, 2, 5)]
+    out_p = mla_prefill_paged_kernel(
+        q, ckv.at[jnp.asarray(poisoned)].set(1e4),
+        krope.at[jnp.asarray(poisoned)].set(1e4), bt, lengths, n_valid,
+        interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_p), atol=1e-6)
+
+
+def test_prefill_kernel_chunk1_equals_decode_kernel():
+    """Cross-kernel triangle: a single-token chunk at position L (latent
+    already in the pool) must agree with the paged flash-DECODE kernel at
+    indices == L — the prefill kernel really is its multi-query sibling."""
+    B, H, Dl, Dr, bs, nb, N = 3, 4, 32, 8, 4, 6, 14
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = rand(ks[0], (B, H, Dl + Dr))
+    ckv = rand(ks[1], (N, bs, Dl))
+    krope = rand(ks[2], (N, bs, Dr))
+    rng = np.random.default_rng(7)
+    bt = jnp.asarray(rng.integers(1, N, (B, nb)), jnp.int32)
+    lengths = jnp.asarray([0, 7, 20], jnp.int32)
+    dec = mla_decode_paged_kernel(q, ckv, krope, bt, lengths, interpret=True)
+    pre = mla_prefill_paged_kernel(q[:, None], ckv, krope, bt, lengths,
+                                   jnp.ones((B,), jnp.int32), interpret=True)
+    np.testing.assert_allclose(np.asarray(pre[:, 0]), np.asarray(dec),
+                               atol=2e-5, rtol=2e-5)
+
+
+# --------------------------------------------------- adversarial tables ----
+
+
+def test_adversarial_interleaved_null_blocks():
+    """Null-block entries interleaved with stale allocated blocks BEYOND
+    the valid extent: masking must make both invisible."""
+    B, C, H, Dl, Dr, bs, nb, N = 1, 4, 4, 32, 8, 4, 6, 10
+    q, ckv, krope, _ = _inputs(B, C, H, Dl, Dr, bs, nb, N, seed=8)
+    # resident extent: 2 blocks (lengths+n_valid = 8); beyond it the
+    # table interleaves null entries with stale (poisoned) blocks.
+    bt_clean = jnp.asarray([[3, 7, 0, 0, 0, 0]], jnp.int32)
+    bt_dirty = jnp.asarray([[3, 7, 0, 9, 0, 4]], jnp.int32)
+    lengths = jnp.asarray([4], jnp.int32)
+    n_valid = jnp.asarray([4], jnp.int32)
+    ckv_p = ckv.at[jnp.asarray([9, 4])].set(1e4)
+    krope_p = krope.at[jnp.asarray([9, 4])].set(1e4)
+    want = ref.mla_prefill_paged_ref(q, ckv, krope, bt_clean, lengths,
+                                     n_valid)
+    for table, c, r in ((bt_clean, ckv, krope), (bt_dirty, ckv_p, krope_p)):
+        out = mla_prefill_paged_kernel(q, c, r, table, lengths, n_valid,
+                                       interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("lengths,n_valid", [
+    ([4], [4]),      # chunk ends EXACTLY on a block boundary
+    ([8], [4]),      # chunk starts AND ends on block boundaries
+    ([7], [1]),      # single-token tail chunk crossing into a new block
+    ([3], [1]),      # single-token tail chunk inside a block
+])
+def test_adversarial_block_boundaries(lengths, n_valid):
+    B, C, H, Dl, Dr, bs, nb, N = 1, 4, 4, 32, 8, 4, 4, 9
+    q, ckv, krope, bt = _inputs(B, C, H, Dl, Dr, bs, nb, N, seed=9)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    n_valid = jnp.asarray(n_valid, jnp.int32)
+    out = mla_prefill_paged_kernel(q, ckv, krope, bt, lengths, n_valid,
+                                   interpret=True)
+    want = ref.mla_prefill_paged_ref(q, ckv, krope, bt, lengths, n_valid)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_adversarial_chunk_larger_than_remaining_prompt():
+    """C much larger than every request's remaining prompt (the common
+    last-chunk shape): the garbage tail must not leak into valid rows."""
+    B, C, H, Dl, Dr, bs, nb, N = 3, 16, 4, 32, 8, 4, 8, 26
+    q, ckv, krope, bt = _inputs(B, C, H, Dl, Dr, bs, nb, N, seed=10)
+    lengths = jnp.asarray([0, 6, 13], jnp.int32)
+    n_valid = jnp.asarray([2, 5, 3], jnp.int32)
+    out = mla_prefill_paged_kernel(q, ckv, krope, bt, lengths, n_valid,
+                                   interpret=True)
+    want = ref.mla_prefill_paged_ref(q, ckv, krope, bt, lengths, n_valid)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+    for b in range(B):
+        assert (np.asarray(out)[b, int(n_valid[b]):] == 0).all()
+
+
+# ------------------------------------------------------------ core level ---
+
+
+def _filled_pool(params, lengths, bs, nb, N, seed=1):
+    """Pool + scrambled block table with per-request token history already
+    resident (the state a mid-prompt chunk sees)."""
+    rng = np.random.default_rng(seed)
+    B = len(lengths)
+    bt = jnp.asarray(rng.permutation(np.arange(1, N))[:B * nb].reshape(B, nb),
+                     jnp.int32)
+    pool = cachelib.paged_latent_cache(N, bs, MCFG.kv_lora_rank,
+                                       MCFG.qk_rope_dim, jnp.float32)
+    for b in range(B):
+        L = int(lengths[b])
+        if not L:
+            continue
+        x = jnp.asarray(rng.standard_normal((1, L, MCFG.d_model)) * 0.1,
+                        jnp.float32)
+        ckv, krope = mlalib._kv_latent(params, MCFG, x,
+                                       jnp.arange(L, dtype=jnp.int32)[None])
+        for t in range(L):
+            pool = cachelib.update_latent_paged(
+                pool, bt[b:b + 1], jnp.asarray([t], jnp.int32),
+                ckv[:, t], krope[:, t])
+    return pool, bt
+
+
+@pytest.mark.parametrize("scheme", ["seq", "rc", "ru"])
+@pytest.mark.parametrize("chunk", [1, 3, 8])
+def test_kernel_matches_gather_path(scheme, chunk):
+    """THE acceptance criterion: impl='pallas' allclose to the PR-2
+    gather path (and thereby to the contiguous MHA-mode prefill, pinned
+    in tests/test_prefix_cache.py) for every absorption scheme, at
+    ragged lengths, with identical pool contents after the step."""
+    bs, nb, N = 4, 8, 40
+    lengths = np.asarray([0, 5, 11], np.int32)
+    B = len(lengths)
+    params = nnm.init_params(jax.random.PRNGKey(0), mlalib.mla_defs(MCFG),
+                             jnp.float32)
+    params = mlalib.prepare_serving(params, MCFG, "ru")
+    pool, bt = _filled_pool(params, lengths, bs, nb, N)
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((B, chunk, MCFG.d_model)) * 0.1,
+                    jnp.float32)
+    n_valid = jnp.asarray([chunk, max(chunk - 1, 1), 0], jnp.int32)
+    og, pg = mlalib.mla_prefill_chunk_paged(
+        params, MCFG, x, dict(pool), bt, jnp.asarray(lengths), n_valid,
+        scheme=scheme, impl="gather")
+    op, pp = mlalib.mla_prefill_chunk_paged(
+        params, MCFG, x, dict(pool), bt, jnp.asarray(lengths), n_valid,
+        scheme=scheme, impl="pallas")
+    for b in range(B):
+        v = int(n_valid[b])
+        np.testing.assert_allclose(np.asarray(og[b, :v]),
+                                   np.asarray(op[b, :v]),
+                                   atol=3e-5, rtol=3e-5)
+    for leaf in ("ckv", "krope"):
+        np.testing.assert_allclose(np.asarray(pg[leaf]), np.asarray(pp[leaf]),
+                                   atol=1e-6)
+
+
+def test_naive_scheme_falls_back_to_gather():
+    """'naive' (the paper's strawman) has no kernel path: impl='pallas'
+    must still compute the same function via the gather view."""
+    bs, nb, N = 4, 4, 16
+    lengths = np.asarray([3], np.int32)
+    params = nnm.init_params(jax.random.PRNGKey(1), mlalib.mla_defs(MCFG),
+                             jnp.float32)
+    pool, bt = _filled_pool(params, lengths, bs, nb, N)
+    x = jnp.asarray(np.random.default_rng(3).standard_normal(
+        (1, 4, MCFG.d_model)) * 0.1, jnp.float32)
+    nv = jnp.asarray([4], jnp.int32)
+    for impl in ("gather", "pallas"):
+        o_n, _ = mlalib.mla_prefill_chunk_paged(
+            params, MCFG, x, dict(pool), bt, jnp.asarray(lengths), nv,
+            scheme="naive", impl=impl)
+        o_s, _ = mlalib.mla_prefill_chunk_paged(
+            params, MCFG, x, dict(pool), bt, jnp.asarray(lengths), nv,
+            scheme="seq", impl=impl)
+        np.testing.assert_allclose(np.asarray(o_n), np.asarray(o_s),
+                                   atol=3e-5, rtol=3e-5)
+
+
+def test_bad_impl_raises():
+    params = nnm.init_params(jax.random.PRNGKey(0), mlalib.mla_defs(MCFG),
+                             jnp.float32)
+    pool = cachelib.paged_latent_cache(4, 4, MCFG.kv_lora_rank,
+                                       MCFG.qk_rope_dim, jnp.float32)
+    with pytest.raises(ValueError, match="prefill impl"):
+        mlalib.mla_prefill_chunk_paged(
+            params, MCFG, jnp.zeros((1, 2, MCFG.d_model)), pool,
+            jnp.asarray([[1]], jnp.int32), jnp.asarray([0], jnp.int32),
+            jnp.asarray([2], jnp.int32), impl="cuda")
+
+
+# ------------------------------------------------------ hypothesis sweep ---
+
+
+def test_prefill_kernel_oracle_property():
+    """Hypothesis-driven sweep: random pool geometry, scrambled tables,
+    ragged lengths/n_valid and query tilings all agree with the oracle."""
+    hypothesis = pytest.importorskip(
+        "hypothesis", reason="optional dev dep: property-based sweeps")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.data())
+    def drive(data):
+        B = data.draw(st.integers(1, 3), label="B")
+        C = data.draw(st.integers(1, 6), label="C")
+        H = data.draw(st.sampled_from([1, 2, 4]), label="H")
+        bs = data.draw(st.sampled_from([2, 4, 8]), label="bs")
+        nb = data.draw(st.integers(1, 4), label="nb")
+        Dl, Dr = 16, 8
+        N = data.draw(st.integers(2, 8), label="N")
+        seed = data.draw(st.integers(0, 2 ** 16), label="seed")
+        cap = nb * bs
+        lengths, n_valid = [], []
+        for b in range(B):
+            ln = data.draw(st.integers(0, max(cap - 1, 0)), label=f"len{b}")
+            nv = data.draw(st.integers(0, min(C, cap - ln)), label=f"nv{b}")
+            lengths.append(ln), n_valid.append(nv)
+        block_q = data.draw(st.integers(0, C), label="block_q")
+        q, ckv, krope, bt = _inputs(B, C, H, Dl, Dr, bs, nb, N, seed=seed)
+        lengths = jnp.asarray(lengths, jnp.int32)
+        n_valid = jnp.asarray(n_valid, jnp.int32)
+        out = mla_prefill_paged_kernel(q, ckv, krope, bt, lengths, n_valid,
+                                       block_q=block_q, interpret=True)
+        want = ref.mla_prefill_paged_ref(q, ckv, krope, bt, lengths, n_valid)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   atol=3e-5, rtol=3e-5)
+
+    drive()
+
+
+# ----------------------------------------------------------------- hwmodel -
+
+
+def test_prefill_chunk_cost_pallas_beats_gather():
+    """The roofline point of the PR: replacing the materialized gather
+    with in-place paged reads strictly cuts bytes (and masked-score
+    FLOPs), raising the attention term's arithmetic intensity."""
+    kw = dict(seq_len=512, chunk=64, paged_block=128, batch=2)
+    g = ac.mla_prefill_chunk_cost(ac.DSV3_MLA, impl="gather", **kw)
+    p = ac.mla_prefill_chunk_cost(ac.DSV3_MLA, impl="pallas", **kw)
+    assert p.bytes < g.bytes
+    assert p.flops <= g.flops
+    # arithmetic intensity of the ATTENTION term (the projections
+    # dominate whole-layer FLOPs at short chunks and would mask it):
+    # the gather path moves 3x the pool bytes (gather read + view write
+    # + attention re-read) for no additional useful work.
+    g_attn_oi = g.breakdown["attn_scores_pv"] / (
+        g.breakdown["B:cache_read"] + g.breakdown["B:gather_materialize"])
+    p_attn_oi = p.breakdown["attn_scores_pv"] / (
+        p.breakdown["B:cache_read"] + p.breakdown["B:block_table"])
+    assert p_attn_oi > g_attn_oi
+    assert "B:gather_materialize" in g.breakdown
+    assert "B:block_table" in p.breakdown
+    assert "B:gather_materialize" not in p.breakdown
+    # early chunks only stream the resident extent: the in-place read
+    # total is strictly below n_chunks * full-extent
+    n_chunks = 512 // 64
+    full = 2 * 512 * (512 + 0) * 2          # B * W * K * w at rope=False
+    assert p.breakdown["B:cache_read"] < n_chunks * full
+    # a cached prefix cuts both paths
+    ph = ac.mla_prefill_chunk_cost(ac.DSV3_MLA, impl="pallas",
+                                   cached_prefix=256, **kw)
+    assert ph.flops < p.flops and ph.bytes < p.bytes
+
+
+def test_prefill_time_reflects_chunk_impl():
+    plat = PLATFORMS["tpu_v5e"]
+    t_gather = prefill_time(ac.DSV3_MLA, plat, 2048, chunk=128,
+                            paged_block=128, impl="gather")
+    t_pallas = prefill_time(ac.DSV3_MLA, plat, 2048, chunk=128,
+                            paged_block=128, impl="pallas")
+    t_plain = prefill_time(ac.DSV3_MLA, plat, 2048)
+    assert t_pallas < t_gather          # the kernel's whole point
+    assert t_plain <= t_pallas          # paging + chunking is never free
