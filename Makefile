@@ -1,9 +1,11 @@
 # Tier-1 verification (ROADMAP.md).  -x fails fast; pytest exits non-zero
 # on collection errors, so import-time breakage cannot hide behind a
-# passing subset.
+# passing subset.  `make test` runs EVERYTHING and remains the union of
+# what CI runs (ci.yml partitions it into not-kernel/not-mesh + kernel +
+# mesh steps so each class of regression is visible at a glance).
 PY ?= python
 
-.PHONY: test test-fast test-kernels bench-serving bench-smoke
+.PHONY: test test-fast test-kernels test-mesh bench-serving bench-smoke
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -13,16 +15,30 @@ test:
 test-kernels:
 	PYTHONPATH=src $(PY) -m pytest -q -m kernel
 
-# Skip the slow dry-run compile cells during inner-loop development.
+# Multi-device sharded-serving parity suites (tests/test_mesh_paged.py).
+# The forced host-platform device count makes the sharded paths EXECUTE on
+# a CPU-only box; the suites' subprocess drivers also force it themselves,
+# so they pass under plain `make test` too — this target is the fast inner
+# loop + the dedicated CI `mesh` job.
+test-mesh:
+	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+		PYTHONPATH=src $(PY) -m pytest -q -m mesh
+
+# Inner-loop development: skip the slow dry-run compile cells AND the
+# kernel/mesh suites (interpret-mode Pallas and the 8-virtual-device
+# subprocess sweeps are slow inner loops — they belong in `make test` /
+# `make test-kernels` / `make test-mesh`).
 test-fast:
-	PYTHONPATH=src $(PY) -m pytest -x -q --ignore=tests/test_dryrun_small.py
+	PYTHONPATH=src $(PY) -m pytest -x -q -m "not kernel and not mesh" \
+		--ignore=tests/test_dryrun_small.py
 
 bench-serving:
 	PYTHONPATH=src $(PY) benchmarks/bench_serving.py --requests 12 --steps 200
 
 # Tiny CPU config wired into CI (exits non-zero if any serving check
 # regresses: prefix hit rate, prefill-token/block savings, bounded
-# prefill compiles, utilization vs the contiguous baseline).
+# prefill compiles, utilization vs the contiguous baseline, sharded-row
+# token parity + per-device paged-byte scaling).
 bench-smoke:
 	PYTHONPATH=src $(PY) benchmarks/bench_serving.py --requests 6 \
 		--max-batch 2 --block-size 8 --prefill-chunk 8 \

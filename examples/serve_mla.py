@@ -40,9 +40,40 @@ every chunk:
                          'auto' follows --impl ('kernel' -> pallas)
   --impl {ref,kernel}    attention impl for decode AND (via 'auto' above)
                          prefill; on CPU kernels run interpreted
+
+PR 4 lifts the single-host restriction — the same engine serves sharded:
+
+  --mesh DPxMP           e.g. '2x2': batch rows (token / block-table /
+                         length) shard over 'data', heads over 'model',
+                         the latent pool replicates on every device (its
+                         compactness is what makes that affordable — the
+                         paper's bandwidth argument scaled out; the
+                         per-device cache traffic still shrinks by DP).
+                         Tokens are identical to single-host serving
+                         (tests/test_mesh_paged.py).  On CPU this script
+                         forces the virtual device count for you.
 """
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# --mesh on CPU needs the forced device count set BEFORE jax initializes;
+# peek at argv so `python examples/serve_mla.py --mesh 2x2` (or --mesh=2x2)
+# just works.
+_spec = ""
+for _i, _a in enumerate(sys.argv):
+    if _a == "--mesh" and _i + 1 < len(sys.argv):
+        _spec = sys.argv[_i + 1]
+    elif _a.startswith("--mesh="):
+        _spec = _a.split("=", 1)[1]
+if _spec:
+    try:
+        _need = 1
+        for _d in _spec.lower().replace(",", "x").split("x"):
+            _need *= int(_d)
+    except ValueError:
+        _need = 0
+    from repro.envflags import force_host_device_count
+    force_host_device_count(_need)
 
 import argparse
 import time
@@ -74,6 +105,9 @@ ap.add_argument("--prefill-impl", default="auto",
 ap.add_argument("--impl", default="ref", choices=("ref", "kernel"))
 ap.add_argument("--temperature", type=float, default=0.0)
 ap.add_argument("--top-k", type=int, default=0)
+ap.add_argument("--mesh", default="",
+                help="device mesh 'DPxMP' (e.g. '2x2' = data x model); "
+                     "'' = single host")
 ap.add_argument("--seed", type=int, default=0)
 args = ap.parse_args()
 
@@ -81,6 +115,12 @@ cfg = configs.smoke("deepseek-v2-236b")
 mla = cfg.mla_config()
 plat = PLATFORMS[args.platform]
 bs = args.block_size
+mesh = None
+if args.mesh:
+    from repro.launch.serve import _parse_mesh
+    mesh = _parse_mesh(args.mesh)
+    print(f"mesh {args.mesh}: batch over 'data', heads over 'model', "
+          f"latent pool replicated ({jax.device_count()} devices)")
 
 print(f"platform {plat.name}: ridge OI = {plat.ridge_oi:.0f} FLOP/B")
 for L, B in ((64, 1), (64, args.max_batch), (2048, args.max_batch)):
@@ -120,7 +160,7 @@ engine = PagedMLAEngine(cfg, params, num_blocks=args.num_blocks,
                         prefill_impl=args.prefill_impl,
                         prefill_chunk=args.prefill_chunk or 32,
                         temperature=args.temperature, top_k=args.top_k,
-                        sample_seed=args.seed)
+                        sample_seed=args.seed, mesh=mesh)
 total_need = sum(blocks_for(r.plen + r.max_new + 1, bs) for r in reqs)
 print(f"\n{args.requests} requests (prompts 8-32, gen 4-19), pool "
       f"{args.num_blocks - 1} usable blocks x {bs} tokens "

@@ -28,13 +28,17 @@ class PlatformPoint:
 
 def step_time(scheme: str, cfg: MLAConfig, platform: PlatformPoint,
               cache_len: int, batch: int = 1,
-              paged_block: int = 0) -> float:
+              paged_block: int = 0, dp_shards: int = 1) -> float:
     """``paged_block > 0``: cost the paged latent cache (whole-block reads
-    + block-table traffic; see hwmodel.attention_costs)."""
+    + block-table traffic).  ``dp_shards > 1``: per-DEVICE roofline of
+    data-parallel serving — the batch-proportional cache terms shrink to
+    the local batch while weight bytes stay whole (the devices run in
+    lockstep, so the slowest == any one device; see
+    hwmodel.attention_costs.mla_decode_cost)."""
     from ..hwmodel import attention_costs as ac  # local import: no cycle
     c = ac.mla_decode_cost(cfg, scheme=scheme, cache_len=cache_len,
                            batch=batch, dtype_bytes=platform.dtype_bytes,
-                           paged_block=paged_block)
+                           paged_block=paged_block, dp_shards=dp_shards)
     return max(c.flops / platform.peak_flops, c.bytes / platform.hbm_bw)
 
 
@@ -69,13 +73,17 @@ def prefill_time(cfg: MLAConfig, platform: PlatformPoint, seq_len: int,
 
 def auto_dispatch(cfg: MLAConfig, platform: PlatformPoint, cache_len: int,
                   batch: int = 1, candidates=("seq", "rc", "ru"),
-                  paged_block: int = 0) -> str:
+                  paged_block: int = 0, dp_shards: int = 1) -> str:
     """Return the fastest scheme for this (platform, cache, batch) point.
 
     The continuous-batching runtime calls this EVERY step on the live
     (batch, max cache_len) point, so the rc/ru/seq choice adapts as the
     batch composition changes (the paper: "the choice between them can be
-    made dynamically")."""
+    made dynamically").  Under data-parallel serving the engine passes
+    ``dp_shards`` so the decision is made on the PER-DEVICE point (the
+    local batch is what each device's roofline sees — a dispatch computed
+    on the global batch would over-weight the batch-shared terms)."""
     return min(candidates, key=lambda s: step_time(s, cfg, platform,
                                                    cache_len, batch,
-                                                   paged_block=paged_block))
+                                                   paged_block=paged_block,
+                                                   dp_shards=dp_shards))

@@ -1,0 +1,27 @@
+"""Pre-jax-init environment knobs.  DELIBERATELY imports nothing heavy:
+the whole point is to mutate ``XLA_FLAGS`` before the first jax backend
+call, so callers import this (or copy its one-liner) ahead of jax.
+
+Call sites that must stay self-contained keep their own variants with
+different, intentional semantics: launch/dryrun.py prepends
+unconditionally (it owns its subprocess env), and the subprocess driver
+in tests/test_mesh_paged.py overwrites (fresh interpreter, fixed lane).
+"""
+from __future__ import annotations
+
+import os
+
+_COUNT_FLAG = "host_platform_device_count"
+
+
+def force_host_device_count(n: int) -> bool:
+    """Append ``--xla_force_host_platform_device_count=n`` to XLA_FLAGS
+    unless a count is already forced (a user/CI setting wins).  Returns
+    True when the flag was added.  Must run before jax initializes its
+    backend — import this module ahead of jax."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    if n <= 1 or _COUNT_FLAG in flags:
+        return False
+    os.environ["XLA_FLAGS"] = \
+        f"{flags} --xla_force_{_COUNT_FLAG}={n}".strip()
+    return True

@@ -65,16 +65,29 @@ def _dims(cfg: MLAConfig, rope: bool):
 def mla_decode_cost(cfg: MLAConfig, *, scheme: str, cache_len: int,
                     batch: int = 1, dtype_bytes: int = 2, rope: bool = False,
                     include_io: bool = False, paged_block: int = 0,
-                    table_entry_bytes: int = 4) -> Cost:
+                    table_entry_bytes: int = 4, dp_shards: int = 1) -> Cost:
     """One decode step of one MLA layer. ``cache_len`` = L (incl. new token).
 
     ``paged_block > 0`` models the paged latent cache: reads happen in
     whole blocks (internal fragmentation rounds L up to a block multiple)
     and each step additionally streams the per-request block tables
     (ceil(L/bs) int32 entries per request).  Keeps the roofline honest for
-    the continuous-batching runtime (runtime.engine)."""
+    the continuous-batching runtime (runtime.engine).
+
+    ``dp_shards > 1`` returns the PER-DEVICE cost of data-parallel serving
+    (runtime.steps: batch/table/length rows sharded over the DP axes):
+    every batch-proportional term — cache read/write, block-table
+    traffic, per-token projections and scores — shrinks to the local
+    batch ceil(B / dp_shards), while the WEIGHT bytes are unchanged (each
+    device still streams the full weight set per step; the pool is
+    replicated, but a device only reads the blocks its local rows
+    reference).  This is the scale-out shape of the paper's bandwidth
+    argument: DP scales the served batch while per-device cache traffic
+    stays flat."""
     D, H, Q, K, dn, dr, dv = _dims(cfg, rope)
-    B, L, w = batch, cache_len, dtype_bytes
+    if dp_shards < 1:
+        raise ValueError(f"dp_shards must be >= 1, got {dp_shards}")
+    B, L, w = -(-batch // dp_shards), cache_len, dtype_bytes
     fl: Dict[str, float] = {}
     by: Dict[str, float] = {}
 

@@ -41,6 +41,23 @@ Prefill impl switch (PR 3):
                       'pallas') uses the kernel, 'ref' the gather view.
                       Both paths are token-identical (tier-1-gated in
                       tests/test_prefill_kernel.py + tests/test_paged.py).
+
+Sharded serving (PR 4) — composes with --paged:
+
+  --mesh DPxMP        device mesh, e.g. '2x2' = (data=2, model=2).  The
+                      contiguous path shards per make_prefill_step /
+                      make_serve_step; the PAGED path shards the batch
+                      (token / block-table / length rows) over 'data' and
+                      heads over 'model' while the latent pool replicates
+                      on every device (runtime.steps: the compact cache
+                      is what makes replication affordable; per-device
+                      cache traffic still drops by the DP factor).
+                      Outputs are token-identical to single-host serving
+                      (tests/test_mesh_paged.py).  Needs
+                      jax.device_count() >= DP*MP: on CPU set
+                      XLA_FLAGS=--xla_force_host_platform_device_count=N.
+  --policy            weight-sharding rules for the mesh
+                      (nn.sharding.make_rules mode; default 'serve').
 """
 from __future__ import annotations
 
@@ -92,15 +109,25 @@ def main():
                          "key folded with the absolute token position")
     ap.add_argument("--top-k", type=int, default=0,
                     help="top-k filter when sampling (0 = full vocab)")
+    ap.add_argument("--mesh", default="",
+                    help="device mesh 'DPxMP' (e.g. '2x2' = data x model); "
+                         "'' = single host.  Composes with --paged.  On "
+                         "CPU, force devices first: XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N")
+    ap.add_argument("--policy", default="serve",
+                    choices=("serve", "serve_2dtp", "dp", "tp"),
+                    help="weight-sharding rules under --mesh "
+                         "(nn.sharding.make_rules mode)")
     args = ap.parse_args()
 
     cfg = configs.smoke(args.arch) if args.smoke else configs.full(args.arch)
     dtype = jnp.float32
     params = nnm.init_params(jax.random.PRNGKey(args.seed),
                              models.model_defs(cfg), dtype)
+    mesh = _parse_mesh(args.mesh)
 
     if args.paged:
-        return _serve_paged(args, cfg, params, dtype)
+        return _serve_paged(args, cfg, params, dtype, mesh)
 
     scheme = args.scheme
     if scheme == "auto":
@@ -114,12 +141,29 @@ def main():
         else:
             scheme = "seq"
 
+    if cfg.attn_kind == "mla":
+        # engine build: attach precomputed absorbed weights for 'ru'
+        # (BEFORE the step builders, so mesh in_shardings see the final
+        # param tree — see steps.paged_param_shardings)
+        params = _prepare_mla(params, cfg, scheme)
+
     capacity = args.prompt_len + args.gen + 1
-    prefill = make_prefill_step(cfg, None, batch=args.batch,
+    tmpl = params if mesh is not None else None
+    prefill = make_prefill_step(cfg, mesh, batch=args.batch,
                                 capacity=capacity, compute_dtype=dtype,
-                                impl=args.impl, scheme=scheme)
-    step = make_serve_step(cfg, None, compute_dtype=dtype, impl=args.impl,
-                           scheme=scheme)
+                                impl=args.impl, scheme=scheme,
+                                policy=args.policy, params_template=tmpl)
+    step = make_serve_step(cfg, mesh, compute_dtype=dtype, impl=args.impl,
+                           scheme=scheme, policy=args.policy,
+                           params_template=tmpl)
+    if mesh is not None:
+        # with a mesh the serve-step builder closes over the cache pytree
+        # (shardings depend on its structure); commit the weights once
+        from repro.runtime.steps import commit_params
+        params = commit_params(params, cfg, mesh, args.policy)
+        step = step(jax.eval_shape(
+            lambda: models.init_cache(cfg, args.batch, capacity, dtype)),
+            args.batch, capacity)
 
     key = jax.random.PRNGKey(args.seed + 1)
     toks = jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab)
@@ -128,9 +172,6 @@ def main():
         P = cfg.n_patches if cfg.family == "vlm" else cfg.n_frames
         kw["embeds"] = jax.random.normal(key, (args.batch, P, cfg.d_model),
                                          dtype) * 0.02
-    if cfg.attn_kind == "mla":
-        # engine build: attach precomputed absorbed weights for 'ru'
-        params = _prepare_mla(params, cfg, scheme)
 
     t0 = time.time()
     logits, cache = prefill(params, toks, **kw)
@@ -152,9 +193,29 @@ def main():
     print("[serve] sample:", np.stack(out_tokens, 1)[0][:16])
 
 
-def _serve_paged(args, cfg, params, dtype):
+def _parse_mesh(spec: str):
+    """'' -> None; 'DPxMP' (e.g. '2x2') -> Mesh((dp, mp), (data, model))."""
+    if not spec:
+        return None
+    from repro.launch.mesh import make_mesh
+    try:
+        dp, mp = (int(x) for x in spec.lower().replace(",", "x").split("x"))
+    except ValueError:
+        raise SystemExit(f"--mesh expects 'DPxMP' (e.g. '2x2'), got {spec!r}")
+    need = dp * mp
+    if jax.device_count() < need:
+        raise SystemExit(
+            f"--mesh {spec}: needs {need} devices, found "
+            f"{jax.device_count()}.  On CPU force virtual devices first: "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={need}")
+    return make_mesh((dp, mp), ("data", "model"))
+
+
+def _serve_paged(args, cfg, params, dtype, mesh=None):
     """Continuous-batching path: the fixed (batch x prompt x gen) load
-    becomes a staggered request stream against the paged runtime."""
+    becomes a staggered request stream against the paged runtime.  With a
+    mesh, batch rows shard over 'data', heads over 'model', and the pool
+    replicates (runtime.steps) — same tokens as single-host serving."""
     from repro.runtime import PagedMLAEngine, Request, blocks_for
 
     bs = args.block_size
@@ -170,7 +231,7 @@ def _serve_paged(args, cfg, params, dtype):
         prefill_impl=args.prefill_impl,
         prefill_chunk=args.prefill_chunk or 32,
         temperature=args.temperature, top_k=args.top_k,
-        sample_seed=args.seed)
+        sample_seed=args.seed, mesh=mesh, shard_policy=args.policy)
     rng = np.random.default_rng(args.seed + 1)
     reqs = [Request(rid=i,
                     prompt=rng.integers(0, cfg.vocab,

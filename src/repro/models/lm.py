@@ -157,7 +157,8 @@ def prefill(params, cfg: ModelConfig, tokens, *, embeds=None, capacity: int = 0,
 def prefill_chunk_paged(params, cfg: ModelConfig, tokens, pool,
                         block_tables, lengths, n_valid, *,
                         compute_dtype=jnp.bfloat16, impl: str = "ref",
-                        scheme: str = "seq") -> Tuple[jax.Array, Dict]:
+                        mesh=None, scheme: str = "seq",
+                        shard_mode: str = "serve") -> Tuple[jax.Array, Dict]:
     """One batched prefill CHUNK straight into the paged pool.
 
     tokens: (B, C) int32 — row b holds its request's next ``n_valid[b]``
@@ -173,9 +174,13 @@ def prefill_chunk_paged(params, cfg: ModelConfig, tokens, pool,
     ``impl`` 'kernel' / 'pallas' routes the chunk attention through the
     fused paged Pallas prefill kernel (kernels.mla_prefill): the block
     table is walked in place, no contiguous (B, S) gather of the pool is
-    materialized.  'ref' keeps the gather reference path."""
+    materialized.  'ref' keeps the gather reference path.  With ``mesh``
+    the kernel path runs under shard_map (batch over DP, heads over
+    'model', pool replicated — kernels.ops.mla_prefill_paged_attention);
+    the gather path is partitioned by GSPMD."""
     x = _embed(params, cfg, tokens, None, compute_dtype)
-    ctx = Ctx(mode="prefill_chunk", positions=None, impl=impl, scheme=scheme,
+    ctx = Ctx(mode="prefill_chunk", positions=None, impl=impl, mesh=mesh,
+              scheme=scheme, shard_mode=shard_mode,
               block_tables=block_tables, lengths=lengths, n_valid=n_valid)
     x, caches, _ = _run_stack(params, cfg, x, ctx, pool)
     B = x.shape[0]

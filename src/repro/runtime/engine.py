@@ -23,7 +23,15 @@ cache, block tables, eviction) to the jitted device steps:
     (batch, max cache_len) point with the paged-bytes cost term, so the
     rc/ru/seq choice tracks the batch composition — jitted steps are
     cached per scheme and swapped freely because all schemes compute the
-    same function with identical weights (the paper's core claim).
+    same function with identical weights (the paper's core claim);
+  * optional ``mesh``/``shard_policy``: decode and chunked prefill run
+    sharded — batch (token / block-table / length rows) over the DP axes,
+    heads over 'model', the latent pool replicated over every axis (its
+    compactness is what makes full replication affordable — the paper's
+    bandwidth argument scaled out).  ``max_batch`` is padded up to a DP
+    multiple (free: inactive slots carry length 0 and null tables), the
+    scheduler stays host-global and unsharded, and outputs are
+    token-identical to single-host serving (tests/test_mesh_paged.py).
 
 Used by examples/serve_mla.py, benchmarks/bench_serving.py and
 ``python -m repro.launch.serve --paged``.
@@ -98,13 +106,21 @@ class PagedMLAEngine:
                  prefill_mode: str = "chunked",
                  prefill_impl: Optional[str] = None,
                  temperature: float = 0.0, top_k: int = 0,
-                 sample_seed: int = 0):
+                 sample_seed: int = 0,
+                 mesh=None, shard_policy: str = "serve"):
         if cfg.attn_kind != "mla":
             raise NotImplementedError("PagedMLAEngine requires an MLA model")
         if scheme == "auto" and platform is None:
             raise ValueError("scheme='auto' needs a PlatformPoint")
         if prefill_mode not in ("chunked", "per_request"):
             raise ValueError(f"unknown prefill_mode {prefill_mode!r}")
+        if mesh is not None and prefill_mode != "chunked":
+            # the per-request path jits an UNSHARDED contiguous prefill and
+            # scatters into the (replicated) pool — keep the A/B baseline
+            # single-host rather than half-shard it
+            raise NotImplementedError(
+                "mesh serving requires prefill_mode='chunked' (the "
+                "per-request A/B path is single-host)")
         if impl == "pallas":        # alias: the kernel impl IS Pallas
             impl = "kernel"
         if prefill_impl in ("auto", ""):
@@ -118,11 +134,30 @@ class PagedMLAEngine:
             enable_prefix_cache = False
         self.cfg = cfg
         self.mla = cfg.mla_config()
+        self.mesh = mesh
+        self.shard_policy = shard_policy
+        # DP shard count: the batch dim (token/table/length rows) shards
+        # over ('pod', 'data'); 'model' shards heads and replicates the
+        # pool (see steps.cache_pspecs paged=).
+        self._dp = 1
+        if mesh is not None:
+            sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+            for a in ("pod", "data"):
+                self._dp *= sizes.get(a, 1)
+            # pad the slot count to a DP multiple so PS(dp) divides the
+            # batch dim.  Free: the extra slots are ordinary empty slots
+            # (length 0, null block table) until the scheduler admits
+            # into them — and more slots never hurts admission.
+            max_batch = -(-max_batch // self._dp) * self._dp
         # 'ru' streams the precomputed absorbed weights; attach them once
         # so every scheme's jitted step sees the same param tree.  A fixed
         # non-ru scheme never reads them — skip the compute and memory.
         self.params = mlalib.attach_absorbed_tree(params, self.mla) \
             if scheme in ("auto", "ru") else params
+        if mesh is not None:
+            from .steps import commit_params
+            self.params = commit_params(self.params, cfg, mesh,
+                                        shard_policy)
         self.compute_dtype = compute_dtype
         self.impl = impl
         self.scheme = scheme
@@ -150,6 +185,14 @@ class PagedMLAEngine:
             enable_prefix_cache=enable_prefix_cache)
         self.pool = models.init_paged_cache(cfg, num_blocks, block_size,
                                             compute_dtype)
+        if mesh is not None:
+            # the pool replicates over every mesh axis (host-global block
+            # tables may point any DP shard at any block); committing it
+            # here keeps the donated in/out shardings copy-free.
+            from jax.sharding import NamedSharding, PartitionSpec as PS
+            self.pool = jax.device_put(
+                self.pool, jax.tree.map(
+                    lambda _: NamedSharding(mesh, PS()), self.pool))
         self.pending = np.zeros((max_batch,), np.int32)   # next token to feed
         self._decode_steps: Dict[str, object] = {}
         self._prefills: Dict[int, object] = {}     # per_request: cap -> fn
@@ -164,8 +207,8 @@ class PagedMLAEngine:
     def _decode_step(self, scheme: str):
         if scheme not in self._decode_steps:
             self._decode_steps[scheme] = make_paged_serve_step(
-                self.cfg, None, compute_dtype=self.compute_dtype,
-                impl=self.impl, scheme=scheme)
+                self.cfg, self.mesh, compute_dtype=self.compute_dtype,
+                impl=self.impl, scheme=scheme, policy=self.shard_policy)
         return self._decode_steps[scheme]
 
     def _prefill(self, cap: int):
@@ -189,8 +232,8 @@ class PagedMLAEngine:
             scheme = self.scheme if self.scheme in ("seq", "rc", "ru") \
                 else "seq"
             self._chunk_steps[chunk] = make_chunked_prefill_step(
-                self.cfg, None, compute_dtype=self.compute_dtype,
-                impl=impl, scheme=scheme)
+                self.cfg, self.mesh, compute_dtype=self.compute_dtype,
+                impl=impl, scheme=scheme, policy=self.shard_policy)
         return self._chunk_steps[chunk]
 
     @property
@@ -207,7 +250,8 @@ class PagedMLAEngine:
         cache_len = int(self.sched.lengths[active].max()) + 1 if active else 1
         s = auto_dispatch(self.mla, self.platform, cache_len=cache_len,
                           batch=max(len(active), 1),
-                          paged_block=self.block_size)
+                          paged_block=self.block_size,
+                          dp_shards=self._dp)
         if self._last_scheme is not None and s != self._last_scheme:
             self.stats.scheme_switches += 1
         self._last_scheme = s
@@ -230,6 +274,15 @@ class PagedMLAEngine:
         if self.temperature <= 0.0:
             arg = np.asarray(jnp.argmax(rows, axis=-1))
             return {s: int(arg[i]) for i, s in enumerate(slots)}
+        if self.mesh is not None:
+            # Gather the (few-KB) logits rows to the host and re-feed them
+            # as a single-device array: under the pre-0.5 jax default
+            # (threefry_partitionable=False) the SAME random op lowered
+            # over a sharded operand draws DIFFERENT bits than unsharded,
+            # so sampling straight from the vocab-sharded logits would
+            # silently fork the PRNG stream from the single-host engine.
+            # Host-side rows make the sampled stream topology-invariant.
+            rows = jnp.asarray(np.asarray(rows))
         rids, poss = [], []
         for s in slots:
             req = self.sched.slots[s]

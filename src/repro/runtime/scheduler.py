@@ -30,6 +30,13 @@ The scheduler is deliberately model-agnostic: it hands out numpy block
 tables / lengths / copy-on-write block pairs; ``runtime.engine`` owns
 params, jitted steps, the chunked prefill -> pool scatter, and the device
 side of every CoW copy (``cow_pending``).
+
+It is also topology-agnostic: under sharded serving (PR 4) these host
+structures stay GLOBAL — one block table / length array covering every
+slot, addressing one logical pool — and only their device placement
+changes (runtime.steps shards the row dim over DP and replicates the
+pool; the engine pads ``max_batch`` to a DP multiple before constructing
+the scheduler, which just sees a few more ordinary slots).
 """
 from __future__ import annotations
 

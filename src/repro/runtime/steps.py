@@ -175,7 +175,8 @@ def make_train_step(cfg: ModelConfig, mesh: Optional[Mesh], opt_cfg: AdamWConfig
 
 
 def cache_pspecs(cache_tree, rules, *, family: str = "dense",
-                 batch_spec=None, seq_spec=None, seq_len: int = 0):
+                 batch_spec=None, seq_spec=None, seq_len: int = 0,
+                 paged: bool = False):
     """PartitionSpec tree for a decode cache.
 
     Path-aware: leaves named 'kv'/'k'/'v' carry a sequence dim right after
@@ -189,8 +190,23 @@ def cache_pspecs(cache_tree, rules, *, family: str = "dense",
                  partial softmax with small all-reduces).  Applied only to
                  leaves whose seq dim equals ``seq_len`` (whisper's cross
                  cache keeps its n_frames dim whole).
+    paged      — the tree is a PAGED latent block pool (init_paged_cache):
+                 leaves are (num_blocks, block_size, D) — there is no batch
+                 dim to shard.  The pool replicates over 'model' exactly
+                 like the contiguous latent cache (the MQA structure of
+                 absorbed MLA: head shards re-read the same compact pool)
+                 AND over the DP axes, because per-request block tables map
+                 any slot to any pool block — a DP shard of the batch may
+                 read/write anywhere in the pool.  The compact latent
+                 layout is what makes full replication affordable (the
+                 paper's ~16x bytes/token saving); what DP buys is
+                 per-device TRAFFIC, not capacity: each device only
+                 streams the blocks its local batch rows reference (see
+                 hwmodel.attention_costs.mla_decode_cost(dp_shards=)).
     """
     from jax.tree_util import DictKey, tree_map_with_path
+    if paged:
+        return jax.tree.map(lambda _: PS(), cache_tree)
     seq_leaves = {"kv", "k", "v", "ckv", "krope"}
 
     def spec_of(path, a):
@@ -226,8 +242,12 @@ def _batch_spec(mesh: Mesh, rules, batch: int):
 def make_prefill_step(cfg: ModelConfig, mesh: Optional[Mesh],
                       *, batch: int, capacity: int, compute_dtype=jnp.bfloat16,
                       impl: str = "ref", scheme: str = "seq",
-                      policy: str = "serve"):
-    """Returns jitted fn(params, tokens[, embeds]) -> (last_logits, cache)."""
+                      policy: str = "serve", params_template=None):
+    """Returns jitted fn(params, tokens[, embeds]) -> (last_logits, cache).
+
+    ``params_template``: pass the ACTUAL params tree when it carries
+    engine-attached ``w_absorb`` leaves (scheme 'ru'; see
+    :func:`paged_param_shardings`) so the mesh in_shardings match it."""
     rules = shd.make_rules(mesh, mode=policy, cfg=cfg) if mesh is not None else None
 
     def run(params, tokens, embeds=None):
@@ -239,8 +259,10 @@ def make_prefill_step(cfg: ModelConfig, mesh: Optional[Mesh],
     if mesh is None:
         return jax.jit(run)
     defs = models.model_defs(cfg)
-    p_shard = jax.tree.map(lambda s: NamedSharding(mesh, s),
-                           shd.param_specs(defs, rules))
+    p_shard = paged_param_shardings(params_template, cfg, mesh, rules) \
+        if params_template is not None else \
+        jax.tree.map(lambda s: NamedSharding(mesh, s),
+                     shd.param_specs(defs, rules))
     dp = _batch_spec(mesh, rules, batch)
     in_sh = [p_shard, NamedSharding(mesh, PS(dp, None))]
     if cfg.family in ("vlm", "encdec"):
@@ -259,12 +281,13 @@ def make_prefill_step(cfg: ModelConfig, mesh: Optional[Mesh],
 def make_serve_step(cfg: ModelConfig, mesh: Optional[Mesh],
                     *, compute_dtype=jnp.bfloat16, impl: str = "ref",
                     scheme: str = "seq", shard_cache_seq: bool = False,
-                    policy: str = "serve"):
+                    policy: str = "serve", params_template=None):
     """One-token decode step:  fn(params, token, cache, index) ->
     (logits, cache).  Cache is donated (updated in place on device).
 
     With a mesh this returns ``jit_with_cache(cache_template, batch) ->
-    step_fn`` (the cache pytree's shardings depend on its structure).
+    step_fn`` (the cache pytree's shardings depend on its structure);
+    ``params_template`` as in :func:`make_prefill_step`.
 
     policy='serve_2dtp' additionally shards the cache SEQ dim over 'model'
     (rules['cache_seq']) — distributed flash-decode; 'shard_cache_seq'
@@ -280,8 +303,10 @@ def make_serve_step(cfg: ModelConfig, mesh: Optional[Mesh],
         return jax.jit(run, donate_argnums=(2,))
 
     defs = models.model_defs(cfg)
-    p_shard = jax.tree.map(lambda s: NamedSharding(mesh, s),
-                           shd.param_specs(defs, rules))
+    p_shard = paged_param_shardings(params_template, cfg, mesh, rules) \
+        if params_template is not None else \
+        jax.tree.map(lambda s: NamedSharding(mesh, s),
+                     shd.param_specs(defs, rules))
 
     def jit_with_cache(cache_template, batch: int, seq_len: int = 0):
         dp = _batch_spec(mesh, rules, batch)
@@ -306,9 +331,59 @@ def make_serve_step(cfg: ModelConfig, mesh: Optional[Mesh],
 # ------------------------------------------------------- paged serving -----
 
 
+def commit_params(params, cfg: ModelConfig, mesh: Mesh,
+                  policy: str = "serve"):
+    """Commit a (possibly absorb-carrying) param tree to ``policy``'s
+    layout once, so jitted steps that leave the params slot unspecified
+    inherit the placement with no per-call resharding.  The single source
+    of truth for the engine and the serve CLI."""
+    rules = shd.make_rules(mesh, mode=policy, cfg=cfg)
+    return jax.device_put(params,
+                          paged_param_shardings(params, cfg, mesh, rules))
+
+
+def paged_param_shardings(params, cfg: ModelConfig, mesh: Mesh, rules):
+    """NamedSharding tree matching ``params``' ACTUAL structure.
+
+    The engine attaches precomputed ``w_absorb`` leaves (core.mla
+    .attach_absorbed_tree) that model_defs does not know about, so the
+    defs-driven spec tree cannot be handed to device_put directly.  Walk
+    the params tree: defs-declared weights take their rule spec, absorbed
+    leaves shard over heads ('model') like the factors they absorb."""
+    specs = shd.param_specs(models.model_defs(cfg), rules)
+    heads = rules.get("heads")
+
+    def graft(spec_node, param_node):
+        if isinstance(param_node, dict):
+            out = {}
+            for k, v in param_node.items():
+                if k == "w_absorb":
+                    # (H, Q, K) or stacked (layers, H, Q, K)
+                    lead = (None,) * (v.ndim - 3)
+                    out[k] = PS(*lead, heads, None, None)
+                else:
+                    out[k] = graft(spec_node[k], v)
+            return out
+        return spec_node
+
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        graft(specs, params))
+
+
+def _paged_pool_shardings(cfg: ModelConfig, mesh: Mesh, rules,
+                          compute_dtype):
+    """Replicated NamedSharding tree for the paged latent pool.  Only the
+    tree STRUCTURE matters (every leaf is PS()), so a dummy-sized
+    eval_shape stands in for the real pool."""
+    pool_t = jax.eval_shape(
+        lambda: models.init_paged_cache(cfg, 2, 1, compute_dtype))
+    cspecs = cache_pspecs(pool_t, rules, family=cfg.family, paged=True)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), cspecs)
+
+
 def make_paged_serve_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
                           *, compute_dtype=jnp.bfloat16, impl: str = "ref",
-                          scheme: str = "seq"):
+                          scheme: str = "seq", policy: str = "serve"):
     """Continuous-batching decode step over the paged latent pool:
 
         fn(params, token (B,), pool_tree, block_tables (B, nb),
@@ -318,28 +393,55 @@ def make_paged_serve_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
     null block table (their logits are garbage the scheduler discards).
     The pool is donated — in-place scatter of the B new latent entries.
 
-    Multi-host sharding of the pool is a ROADMAP follow-up; mesh must be
-    None for now (the per-request block tables make the batch dim trivially
-    shardable once cache_pspecs learns the pool layout).
+    With a mesh the batch dim — token, block tables, lengths — shards over
+    the DP axes (``rules['batch']``; B must be a DP multiple: the engine
+    pads ``max_batch`` up, which is free because inactive rows carry
+    length 0 and null tables) while the pool replicates over EVERY mesh
+    axis (see :func:`cache_pspecs` ``paged=``): block tables are
+    host-global, so any DP shard may address any pool block, and the
+    compact latent layout keeps n_model x n_dp replicas affordable —
+    per-device cache TRAFFIC still shrinks by the DP factor because each
+    device only streams the blocks its local rows reference.
+    ``impl='kernel'``/'pallas' routes through the shard_map kernel path
+    (kernels.ops.mla_decode_paged_attention: batch over DP, heads over
+    'model', pool replicated); 'ref' lets GSPMD partition the gather
+    reference.  ``policy`` picks the weight-sharding rules
+    (nn.sharding.make_rules mode; params should be device_put with
+    :func:`paged_param_shardings` for these same rules).
     """
-    if mesh is not None:
-        raise NotImplementedError("paged serving is single-host for now "
-                                  "(ROADMAP: multi-host sharded paged cache)")
     if cfg.attn_kind != "mla":
         raise NotImplementedError("paged serving requires attn_kind='mla'")
 
     def run(params, token, pool, block_tables, lengths):
         return models.decode_step(params, cfg, token, pool, None,
                                   compute_dtype=compute_dtype, impl=impl,
-                                  scheme=scheme, block_tables=block_tables,
+                                  mesh=mesh, scheme=scheme,
+                                  shard_mode=policy,
+                                  block_tables=block_tables,
                                   lengths=lengths)
 
-    return jax.jit(run, donate_argnums=(2,))
+    if mesh is None:
+        return jax.jit(run, donate_argnums=(2,))
+    rules = shd.make_rules(mesh, mode=policy, cfg=cfg)
+    dp = rules["batch"]
+    pool_shard = _paged_pool_shardings(cfg, mesh, rules, compute_dtype)
+    return jax.jit(
+        run,
+        # params slot is UNSPECIFIED: committed shardings (device_put via
+        # paged_param_shardings) propagate, and the same jitted step
+        # serves trees with or without attached w_absorb leaves.
+        in_shardings=(None, NamedSharding(mesh, PS(dp)), pool_shard,
+                      NamedSharding(mesh, PS(dp, None)),
+                      NamedSharding(mesh, PS(dp))),
+        out_shardings=(None, pool_shard),
+        donate_argnums=(2,),
+    )
 
 
 def make_chunked_prefill_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
                               *, compute_dtype=jnp.bfloat16,
-                              impl: str = "ref", scheme: str = "seq"):
+                              impl: str = "ref", scheme: str = "seq",
+                              policy: str = "serve"):
     """Batched chunked prefill straight into the paged pool:
 
         fn(params, tokens (B, C), pool_tree, block_tables (B, nb),
@@ -358,13 +460,16 @@ def make_chunked_prefill_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
     ``scheme`` picks the query-absorption ordering (seq/rc/ru — all
     compute the same function; 'naive' falls back to the gather view).
 
+    With a mesh the batch dim — tokens, block tables, lengths, n_valid —
+    shards over the DP axes and the pool replicates over every axis,
+    exactly like :func:`make_paged_serve_step` (idle rows make the DP
+    padding free); ``impl='kernel'``/'pallas' routes through the
+    shard_map prefill-kernel path in kernels.ops.
+
     This replaces the per-request contiguous prefill + scatter detour:
     one compiled step shape per (batch, chunk) pair — NOT one retrace per
     prompt length — and every admitted request prefills as a batch.
     """
-    if mesh is not None:
-        raise NotImplementedError("chunked paged prefill is single-host "
-                                  "(ROADMAP: multi-host sharded paged cache)")
     if cfg.attn_kind != "mla":
         raise NotImplementedError("paged serving requires attn_kind='mla'")
 
@@ -372,9 +477,23 @@ def make_chunked_prefill_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
         return models.prefill_chunk_paged(params, cfg, tokens, pool,
                                           block_tables, lengths, n_valid,
                                           compute_dtype=compute_dtype,
-                                          impl=impl, scheme=scheme)
+                                          impl=impl, mesh=mesh,
+                                          scheme=scheme, shard_mode=policy)
 
-    return jax.jit(run, donate_argnums=(2,))
+    if mesh is None:
+        return jax.jit(run, donate_argnums=(2,))
+    rules = shd.make_rules(mesh, mode=policy, cfg=cfg)
+    dp = rules["batch"]
+    pool_shard = _paged_pool_shardings(cfg, mesh, rules, compute_dtype)
+    return jax.jit(
+        run,
+        in_shardings=(None, NamedSharding(mesh, PS(dp, None)), pool_shard,
+                      NamedSharding(mesh, PS(dp, None)),
+                      NamedSharding(mesh, PS(dp)),
+                      NamedSharding(mesh, PS(dp))),
+        out_shardings=(None, pool_shard),
+        donate_argnums=(2,),
+    )
 
 
 def _scatter_entries(pool_leaf, contig_leaf, pages, block_size: int):

@@ -17,6 +17,13 @@ def pytest_configure(config):
         "kernel: Pallas kernel oracle-parity tests — execute (not skip) on "
         "CPU via pl.pallas_call(interpret=True); ci.yml runs them as a "
         "dedicated step (`make test-kernels`)")
+    config.addinivalue_line(
+        "markers",
+        "mesh: multi-device sharded-serving parity tests — execute (not "
+        "skip) on CPU-only boxes: the CI `mesh` job and `make test-mesh` "
+        "force XLA_FLAGS=--xla_force_host_platform_device_count=8, and "
+        "the suites' subprocess drivers force it themselves so plain "
+        "`make test` covers them too")
 
 
 @pytest.fixture
