@@ -1,36 +1,59 @@
 # Tier-1 verification (ROADMAP.md).  -x fails fast; pytest exits non-zero
 # on collection errors, so import-time breakage cannot hide behind a
 # passing subset.  `make test` runs EVERYTHING and remains the union of
-# what CI runs (ci.yml partitions it into not-kernel/not-mesh + kernel +
-# mesh steps so each class of regression is visible at a glance).
+# what CI runs: ci.yml calls the lane targets below (test-lane-fast +
+# test-kernels + test-mesh), whose marker expressions all derive from the
+# single KERNEL_MARKER/MESH_MARKER variables — so the CI union stays
+# provably equal to `make test` instead of drifting in two files.
 PY ?= python
+# extra pytest flags (CI threads --junitxml=... through here)
+PYTEST_FLAGS ?=
 
-.PHONY: test test-fast test-kernels test-mesh bench-serving bench-smoke
+# ---- single source of truth for the test-lane markers -------------------
+KERNEL_MARKER := kernel
+MESH_MARKER := mesh
+FAST_LANE_EXPR := not $(KERNEL_MARKER) and not $(MESH_MARKER)
+
+.PHONY: test test-fast test-lane-fast test-kernels test-mesh lint \
+	bench-serving bench-smoke bench-gate
 
 test:
-	PYTHONPATH=src $(PY) -m pytest -x -q
+	PYTHONPATH=src $(PY) -m pytest -x -q $(PYTEST_FLAGS)
 
-# Pallas kernel oracle-parity suites alone (pl.pallas_call(interpret=True)
-# on CPU — they EXECUTE in CI, not skip).  Fast inner loop for kernel work.
+# CI lane 1: everything minus the kernel/mesh suites (their union with
+# the two lanes below == `make test`).
+test-lane-fast:
+	PYTHONPATH=src $(PY) -m pytest -x -q -m "$(FAST_LANE_EXPR)" \
+		$(PYTEST_FLAGS)
+
+# CI lane 2: Pallas kernel oracle-parity suites alone
+# (pl.pallas_call(interpret=True) on CPU — they EXECUTE, not skip).
 test-kernels:
-	PYTHONPATH=src $(PY) -m pytest -q -m kernel
+	PYTHONPATH=src $(PY) -m pytest -q -m "$(KERNEL_MARKER)" $(PYTEST_FLAGS)
 
-# Multi-device sharded-serving parity suites (tests/test_mesh_paged.py).
-# The forced host-platform device count makes the sharded paths EXECUTE on
-# a CPU-only box; the suites' subprocess drivers also force it themselves,
-# so they pass under plain `make test` too — this target is the fast inner
-# loop + the dedicated CI `mesh` job.
+# CI lane 3: multi-device sharded-serving parity suites.  The forced
+# host-platform device count makes the sharded paths EXECUTE on a
+# CPU-only box; the suites' subprocess drivers also force it themselves,
+# so they pass under plain `make test` too.
 test-mesh:
 	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
-		PYTHONPATH=src $(PY) -m pytest -q -m mesh
+		PYTHONPATH=src $(PY) -m pytest -q -m "$(MESH_MARKER)" \
+		$(PYTEST_FLAGS)
 
-# Inner-loop development: skip the slow dry-run compile cells AND the
-# kernel/mesh suites (interpret-mode Pallas and the 8-virtual-device
-# subprocess sweeps are slow inner loops — they belong in `make test` /
-# `make test-kernels` / `make test-mesh`).
+# Inner-loop development: the fast lane minus the slow dry-run compile
+# cells on top.
 test-fast:
-	PYTHONPATH=src $(PY) -m pytest -x -q -m "not kernel and not mesh" \
-		--ignore=tests/test_dryrun_small.py
+	PYTHONPATH=src $(PY) -m pytest -x -q -m "$(FAST_LANE_EXPR)" \
+		--ignore=tests/test_dryrun_small.py $(PYTEST_FLAGS)
+
+# Lint gate (CI `lint` job; ruff ships via requirements-dev.txt).
+# `ruff check` runs the error-class rules everywhere; `ruff format
+# --check` is a RATCHET — FORMAT_PATHS lists the files already
+# formatted, grow it file by file as they are cleaned up.
+FORMAT_PATHS := benchmarks/check_regression.py scripts/junit_summary.py
+lint:
+	ruff check .
+	ruff format --check $(FORMAT_PATHS)
 
 bench-serving:
 	PYTHONPATH=src $(PY) benchmarks/bench_serving.py --requests 12 --steps 200
@@ -38,8 +61,16 @@ bench-serving:
 # Tiny CPU config wired into CI (exits non-zero if any serving check
 # regresses: prefix hit rate, prefill-token/block savings, bounded
 # prefill compiles, utilization vs the contiguous baseline, sharded-row
-# token parity + per-device paged-byte scaling).
+# token parity + per-device paged-byte scaling, spec-decode parity +
+# acceptance + modeled amortization).
 bench-smoke:
 	PYTHONPATH=src $(PY) benchmarks/bench_serving.py --requests 6 \
 		--max-batch 2 --block-size 8 --prefill-chunk 8 \
 		--shared-prefix-len 16 --steps 300
+
+# CI `bench-gate` job: run the smoke bench, then diff its JSON artifacts
+# against the committed baselines (benchmarks/baselines/) with
+# per-metric tolerances.  Refresh after an intentional perf change with
+# `python benchmarks/check_regression.py --update`.
+bench-gate: bench-smoke
+	$(PY) benchmarks/check_regression.py

@@ -30,6 +30,15 @@ jax initializes) and gates on token-identical outputs plus the modeled
 per-device paged-byte shrink (hwmodel dp_shards) — the Stream-analysis
 claim that DP scales the batch while per-device cache traffic stays flat.
 
+The speculative rows (PR 5) re-serve the same stream with --spec-k
+drafting: the identity-draft oracle (acceptance MUST be 100%, the
+validity gate), a shallow:2 self-speculation draft (rejections + rewind
+exercised), and the shallow draft on the 2x2 mesh.  All three must emit
+token-identical outputs to the plain paged row; the modeled
+mla_verify_cost break-even is printed next to the measured mean emitted
+length and gated (accepted-length >= 1 amortization of cache-read bytes
+per emitted token).
+
     PYTHONPATH=src python benchmarks/bench_serving.py --requests 12
     PYTHONPATH=src python benchmarks/bench_serving.py --shared-prefix-len 0
 """
@@ -146,16 +155,22 @@ def run_contiguous(cfg, params, reqs, max_batch):
 
 
 def run_paged(cfg, params, reqs, args, *, prefix: bool,
-              prefill_impl=None, mesh=None):
+              prefill_impl=None, mesh=None, spec_k=0, draft=None):
     """Paged runtime; ``prefix=False`` reproduces PR-1 (per-request
     prefill, no block sharing); ``prefill_impl='pallas'`` swaps the
     chunked prefill's gather view for the fused Pallas kernel; ``mesh``
     serves the same stream sharded (batch over 'data', heads over
-    'model', pool replicated — runtime.steps)."""
+    'model', pool replicated — runtime.steps); ``spec_k``/``draft`` turn
+    on speculative decoding ('self' identity oracle or 'shallow:N'
+    self-speculation — runtime.spec)."""
     bs = args.block_size
     num_blocks = 1 + sum(blocks_for(r.plen + r.max_new + 1, bs)
                          for r in reqs) // 2   # force block reuse
     per_req = max(blocks_for(r.plen + r.max_new + 1, bs) for r in reqs)
+    draft_cfg = draft_params = None
+    if spec_k:
+        from repro.runtime.spec import parse_draft_spec
+        draft_cfg, draft_params = parse_draft_spec(draft, cfg, params)
     eng = PagedMLAEngine(
         cfg, params, num_blocks=num_blocks, block_size=bs,
         max_batch=args.max_batch, max_blocks_per_req=per_req,
@@ -164,7 +179,8 @@ def run_paged(cfg, params, reqs, args, *, prefix: bool,
         enable_prefix_cache=prefix,
         prefill_mode="chunked" if prefix else "per_request",
         prefill_impl=prefill_impl,
-        prefill_chunk=args.prefill_chunk, mesh=mesh)
+        prefill_chunk=args.prefill_chunk, mesh=mesh,
+        spec_k=spec_k, draft_cfg=draft_cfg, draft_params=draft_params)
     out = eng.run([Request(rid=r.rid, prompt=r.prompt.copy(),
                            max_new=r.max_new, arrival=r.arrival)
                    for r in reqs], max_steps=args.steps)
@@ -230,6 +246,8 @@ def main():
                     help="tokens of common system preamble (0 disables)")
     ap.add_argument("--steps", type=int, default=400,
                     help="paged-engine step budget")
+    ap.add_argument("--spec-k", type=int, default=2,
+                    help="draft window of the speculative-decode rows")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -293,6 +311,54 @@ def main():
           f"directional), {pm['prefill_tokens']:.0f} prefilled, "
           f"{pm['prefill_compiles']:.0f} prefill compile")
 
+    print("== paged + prefix + SPECULATIVE decode (PR 5) ==")
+    sk = args.spec_k
+    ss = run_paged(cfg, params, reqs, args, prefix=True, spec_k=sk,
+                   draft="self")
+    print(f"  self-draft oracle : {ss['decode_tokens']:.0f} decode tokens "
+          f"in {ss['spec_rounds']:.0f} rounds "
+          f"({ss['spec_mean_emitted']:.2f} tok/round, accept rate "
+          f"{ss['spec_accept_rate']:.2f})")
+    sh = run_paged(cfg, params, reqs, args, prefix=True, spec_k=sk,
+                   draft="shallow:2")
+    print(f"  shallow:2 draft   : {sh['decode_tokens']:.0f} decode tokens "
+          f"in {sh['spec_rounds']:.0f} rounds "
+          f"({sh['spec_mean_emitted']:.2f} tok/round, accept rate "
+          f"{sh['spec_accept_rate']:.2f})")
+    sm = run_paged(cfg, params, reqs, args, prefix=True, spec_k=sk,
+                   draft="shallow:2", mesh=make_mesh((2, 2),
+                                                     ("data", "model")))
+    print(f"  shallow:2 (2x2)   : {sm['decode_tokens']:.0f} decode tokens "
+          f"in {sm['spec_rounds']:.0f} rounds "
+          f"({sm['spec_mean_emitted']:.2f} tok/round)")
+    # modeled amortization at the measured accepted length (full scale).
+    # The draft is NOT modeled as free: a shallow:2 self-speculation draft
+    # runs k sequential 2-layer decode steps per round, so each drafted
+    # token costs ~(draft layers / target layers) of a full decode step —
+    # the break-even E* the gate compares against includes that.
+    from repro.hwmodel.attention_costs import mla_verify_cost, spec_break_even
+    full_cfg = configs.full("deepseek-v2-236b")
+    mla_full = full_cfg.mla_config()
+    draft_frac = 2 / full_cfg.n_layers
+    be = spec_break_even(mla_full, scheme="seq", cache_len=4096, k=sk,
+                         batch=args.max_batch, paged_block=128,
+                         draft_bytes_frac=draft_frac)
+    e_meas = sh["spec_mean_emitted"]
+    vc = mla_verify_cost(mla_full, scheme="seq", cache_len=4096, k=sk,
+                         batch=args.max_batch, paged_block=128)
+    rd_per_tok = vc.breakdown["B:cache_read"] / max(e_meas, 1e-9)
+    from repro.hwmodel.attention_costs import mla_decode_cost as _mdc
+    dc = _mdc(mla_full, scheme="seq", cache_len=4096 + sk + 1,
+              batch=args.max_batch, paged_block=128)
+    print(f"  modeled (1 layer, L=4096, k={sk}): verify round = "
+          f"{vc.bytes / 1e6:.1f} MB vs decode step "
+          f"{dc.bytes / 1e6:.1f} MB -> break-even E* = "
+          f"{be['break_even_emitted']:.2f} tokens/round (incl. draft at "
+          f"{draft_frac:.3f} of a decode step per drafted token); "
+          f"measured E = {e_meas:.2f} -> cache-read "
+          f"{rd_per_tok / 1e6:.1f} MB/token vs "
+          f"{dc.breakdown['B:cache_read'] / 1e6:.1f} plain")
+
     print("== prefill-kernel step: gather view vs in-place Pallas ==")
     kb = bench_prefill_kernel(cfg, params, args)
     for name in ("gather", "pallas"):
@@ -336,11 +402,32 @@ def main():
          int(pm["prefill_tokens"]), int(pm["total_blocks_allocated"]),
          int(pm["prefill_compiles"]), f"{pm['cache_utilization']:.3f}",
          f"{pm['prefix_hit_rate']:.2f}"],
+        [f"paged+prefix+spec k={sk} (self)", int(ss["decode_tokens"]),
+         int(ss["prefill_tokens"]), int(ss["total_blocks_allocated"]),
+         int(ss["prefill_compiles"]), f"{ss['cache_utilization']:.3f}",
+         f"{ss['prefix_hit_rate']:.2f}"],
+        [f"paged+prefix+spec k={sk} (shallow:2)",
+         int(sh["decode_tokens"]), int(sh["prefill_tokens"]),
+         int(sh["total_blocks_allocated"]), int(sh["prefill_compiles"]),
+         f"{sh['cache_utilization']:.3f}", f"{sh['prefix_hit_rate']:.2f}"],
     ]
+    md_s = common.table(
+        ["spec row", "rounds", "tok/round", "accept rate", "drafted",
+         "spec compiles"],
+        [["self oracle", int(ss["spec_rounds"]),
+          f"{ss['spec_mean_emitted']:.2f}", f"{ss['spec_accept_rate']:.2f}",
+          int(ss["spec_drafted"]), int(ss["spec_compiles"])],
+         ["shallow:2", int(sh["spec_rounds"]),
+          f"{sh['spec_mean_emitted']:.2f}", f"{sh['spec_accept_rate']:.2f}",
+          int(sh["spec_drafted"]), int(sh["spec_compiles"])],
+         ["shallow:2 (2x2 mesh)", int(sm["spec_rounds"]),
+          f"{sm['spec_mean_emitted']:.2f}", f"{sm['spec_accept_rate']:.2f}",
+          int(sm["spec_drafted"]), int(sm["spec_compiles"])]])
     md = common.table(
         ["runtime", "decode tok", "prefill tok", "blocks alloc",
          "prefill compiles", "cache util", "hit rate"], rows)
     print("\n" + md)
+    print(md_s)
     md_k = common.table(
         ["prefill path", "step ms (CPU)", "modeled MB/layer",
          "attn OI (FLOP/B)", "compiles"],
@@ -415,6 +502,44 @@ def main():
         dp_ok and c2.breakdown["B:w_common"] == c1.breakdown["B:w_common"],
         f"cache_read {c1.breakdown['B:cache_read'] / 1e6:.1f} -> "
         f"{c2.breakdown['B:cache_read'] / 1e6:.1f} MB/step/device at dp=2")
+    # ---- speculative-decode gates (ISSUE 5 acceptance) -----------------
+    ok &= common.check(
+        "spec decode (self oracle) outputs token-identical to plain paged",
+        ss["outputs"] == pp["outputs"])
+    ok &= common.check(
+        "spec decode (shallow draft) outputs token-identical to plain",
+        sh["outputs"] == pp["outputs"])
+    ok &= common.check(
+        "spec decode (shallow, 2x2 mesh) outputs token-identical to plain",
+        sm["outputs"] == pp["outputs"])
+    ok &= common.check(
+        "identity draft is fully accepted (the machinery oracle)",
+        ss["spec_accept_rate"] == 1.0 and ss["spec_mean_emitted"] > 2.0,
+        f"accept {ss['spec_accept_rate']:.2f}, "
+        f"{ss['spec_mean_emitted']:.2f} tok/round")
+    ok &= common.check(
+        "accepted length clears the modeled break-even (amortization)",
+        sh["spec_mean_emitted"] >= 1.0
+        and sh["spec_mean_emitted"] >= be["break_even_emitted"],
+        f"measured E {sh['spec_mean_emitted']:.2f} vs modeled E* "
+        f"{be['break_even_emitted']:.2f}")
+    ok &= common.check(
+        "verify round amortizes cache-read bytes per emitted token",
+        rd_per_tok <= dc.breakdown["B:cache_read"] + 1e-6,
+        f"{rd_per_tok / 1e6:.1f} vs "
+        f"{dc.breakdown['B:cache_read'] / 1e6:.1f} MB/token")
+    ok &= common.check(
+        "spec rounds emit more tokens per engine step than plain decode",
+        ss["spec_mean_emitted"] > 1.0
+        and ss["steps"] < pp["steps"],
+        f"{ss['steps']:.0f} vs {pp['steps']:.0f} steps")
+    ok &= common.check(
+        "spec compiles stay bounded (1 verify + 1 draft step; "
+        "2 prefill chunk shapes: target + draft)",
+        ss["spec_compiles"] <= 2 and sh["spec_compiles"] <= 2
+        and sh["prefill_compiles"] == 2, f"{sh['spec_compiles']:.0f} spec"
+        f" / {sh['prefill_compiles']:.0f} prefill")
+
     pp_save = {k: v for k, v in pp.items() if k != "outputs"}
     pr1_save = {k: v for k, v in pr1.items() if k != "outputs"}
     pk_save = {k: v for k, v in pk.items() if k != "outputs"}
@@ -428,10 +553,28 @@ def main():
     }
     kb_save = {n: {k: v for k, v in kb[n].items() if k != "logits"}
                for n in kb}
+    spec_save = {}
+    for name, row in (("self", ss), ("shallow", sh), ("shallow_mesh", sm)):
+        spec_save[name] = {k: row[k] for k in
+                           ("spec_rounds", "spec_drafted", "spec_accepted",
+                            "spec_accept_rate", "spec_mean_emitted",
+                            "spec_compiles", "decode_tokens", "steps",
+                            "prefill_compiles")}
+    spec_save["model"] = {
+        "k": sk,
+        "verify_bytes": vc.bytes,
+        "decode_bytes": dc.bytes,
+        "draft_bytes_frac": draft_frac,
+        "break_even_emitted": be["break_even_emitted"],
+        "amortization_at_full_accept": be["amortization_at_full_accept"],
+        "cache_read_per_token_at_measured_E": rd_per_tok,
+        "cache_read_per_token_plain": dc.breakdown["B:cache_read"],
+    }
     common.save("bench_serving.json", {"contiguous": base, "paged": pr1_save,
                                        "paged_prefix": pp_save,
                                        "paged_prefix_pallas": pk_save,
                                        "paged_mesh": pm_save,
+                                       "paged_spec": spec_save,
                                        "util_gain": gain,
                                        "jax_device_count": jax.device_count()})
     common.save("bench_prefill_kernel.json", kb_save)

@@ -52,6 +52,36 @@ PR 4 lifts the single-host restriction — the same engine serves sharded:
                          Tokens are identical to single-host serving
                          (tests/test_mesh_paged.py).  On CPU this script
                          forces the virtual device count for you.
+
+PR 5 adds speculative decoding on top of all of it — the paper's
+compute-bound-decode finding turned into throughput: a cheap draft
+proposes k tokens, the target scores all k+1 positions in ONE forward
+(the chunked-prefill machinery at chunk k+1), and rejections are a pure
+host-side length rewind.  Emitted tokens are identical to plain decode
+under greedy and seeded sampling; only the tokens-per-step ratio moves:
+
+  --spec-k K             draft window (0 = off; composes with --mesh,
+                         --prefill-impl, the prefix cache, preemption)
+  --draft SPEC           'shallow:N' = self-speculation on the target's
+                         own first N layers (weights shared by
+                         reference) | 'self' = identity-draft oracle
+                         (acceptance is exactly 100%)
+
+Serving-flags summary (all compose):
+
+  flag              default   effect
+  --max-batch       4         decode slots (continuous batching)
+  --block-size      8         tokens per pool block
+  --num-blocks      48        pool capacity
+  --no-prefix-cache off       disable radix block sharing
+  --prefill-chunk   16        batched prefill chunk (0 = per-request)
+  --prefill-impl    auto      'gather' view vs 'pallas' in-place kernel
+  --impl            ref       decode attention: 'ref' | 'kernel'
+  --temperature     0.0       0 = greedy; else seeded sampling
+  --top-k           0         top-k filter when sampling
+  --mesh            ''        'DPxMP' sharded serving
+  --spec-k          0         speculative decoding draft window
+  --draft           shallow:2 draft spec ('shallow:N' | 'self')
 """
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -108,6 +138,10 @@ ap.add_argument("--top-k", type=int, default=0)
 ap.add_argument("--mesh", default="",
                 help="device mesh 'DPxMP' (e.g. '2x2' = data x model); "
                      "'' = single host")
+ap.add_argument("--spec-k", type=int, default=0,
+                help="speculative decoding draft window (0 = off)")
+ap.add_argument("--draft", default="shallow:2",
+                help="draft under --spec-k: 'shallow:N' | 'self'")
 ap.add_argument("--seed", type=int, default=0)
 args = ap.parse_args()
 
@@ -149,6 +183,12 @@ for i in range(args.requests):
                         arrival=int(arrivals[i])))
 
 per_req = max(blocks_for(r.plen + r.max_new + 1, bs) for r in reqs)
+draft_cfg = draft_params = None
+if args.spec_k:
+    from repro.runtime.spec import parse_draft_spec
+    draft_cfg, draft_params = parse_draft_spec(args.draft, cfg, params)
+    print(f"speculative decoding: k={args.spec_k}, draft={args.draft} "
+          f"({draft_cfg.n_layers} of {cfg.n_layers} layers)")
 engine = PagedMLAEngine(cfg, params, num_blocks=args.num_blocks,
                         block_size=bs, max_batch=args.max_batch,
                         max_blocks_per_req=per_req,
@@ -160,7 +200,9 @@ engine = PagedMLAEngine(cfg, params, num_blocks=args.num_blocks,
                         prefill_impl=args.prefill_impl,
                         prefill_chunk=args.prefill_chunk or 32,
                         temperature=args.temperature, top_k=args.top_k,
-                        sample_seed=args.seed, mesh=mesh)
+                        sample_seed=args.seed, mesh=mesh,
+                        spec_k=args.spec_k, draft_cfg=draft_cfg,
+                        draft_params=draft_params)
 total_need = sum(blocks_for(r.plen + r.max_new + 1, bs) for r in reqs)
 print(f"\n{args.requests} requests (prompts 8-32, gen 4-19), pool "
       f"{args.num_blocks - 1} usable blocks x {bs} tokens "
@@ -188,6 +230,13 @@ print(f"  prefilled tokens / chunks : {summary['prefill_tokens']:.0f} / "
       f"({summary['prefill_compiles']:.0f} compiled prefill shapes)")
 print(f"  cache evictions / CoW     : {summary['prefix_evictions']:.0f} / "
       f"{summary['prefix_cow_copies']:.0f}")
+if args.spec_k:
+    print(f"  spec accept / emit rate   : "
+          f"{summary['spec_accept_rate']:.2f} "
+          f"({summary['spec_accepted']:.0f}/"
+          f"{summary['spec_drafted']:.0f} drafts), "
+          f"{summary['spec_mean_emitted']:.2f} tokens/round over "
+          f"{summary['spec_rounds']:.0f} rounds")
 print(f"  latency steps p50/max     : {int(np.median(lat))}/{int(max(lat))}")
 first = min(engine.sched.finished, key=lambda r: r.rid)
 print("first request's tokens:", np.asarray(first.output)[:16])

@@ -1,0 +1,81 @@
+"""Summarize pytest junit XML files into a markdown table (the CI job
+summary): one row per test lane (fast / kernel / mesh), with suite-size
+counts, so a shrinking suite is visible straight in the PR UI instead of
+hiding behind a green check.
+
+    python scripts/junit_summary.py reports/junit-*.xml
+
+Appends to $GITHUB_STEP_SUMMARY when set (the Actions job-summary file),
+always prints to stdout.  The lane name is parsed from the file name
+(junit-<lane>.xml).  Exits non-zero if any parsed lane reports failures
+or errors, or if a named file is missing — a lane whose XML vanished is
+a lane that silently stopped running.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import xml.etree.ElementTree as ET
+
+
+def lane_name(path):
+    stem = os.path.splitext(os.path.basename(path))[0]
+    return stem[len("junit-") :] if stem.startswith("junit-") else stem
+
+
+def parse(path):
+    root = ET.parse(path).getroot()
+    suites = [root] if root.tag == "testsuite" else list(root)
+    out = {"tests": 0, "failures": 0, "errors": 0, "skipped": 0, "time": 0.0}
+    for s in suites:
+        for key in ("tests", "failures", "errors", "skipped"):
+            out[key] += int(s.get(key, 0))
+        out["time"] += float(s.get("time", 0.0))
+    out["passed"] = out["tests"] - out["failures"] - out["errors"] - out["skipped"]
+    return out
+
+
+def main(paths):
+    if not paths:
+        print("usage: junit_summary.py <junit-*.xml> [...]", file=sys.stderr)
+        return 2
+    rows, bad = [], 0
+    for path in paths:
+        if not os.path.exists(path):
+            rows.append([lane_name(path), "-", "-", "-", "-", "-", "MISSING"])
+            bad += 1
+            continue
+        r = parse(path)
+        broken = r["failures"] + r["errors"]
+        bad += broken
+        rows.append(
+            [
+                lane_name(path),
+                str(r["tests"]),
+                str(r["passed"]),
+                str(r["failures"]),
+                str(r["errors"]),
+                str(r["skipped"]),
+                f"{r['time']:.0f}s",
+            ]
+        )
+    header = ["lane", "tests", "passed", "failures", "errors", "skipped", "time"]
+    lines = [
+        "### Test suite per lane",
+        "",
+        "| " + " | ".join(header) + " |",
+        "|" + "|".join("---" for _ in header) + "|",
+    ]
+    lines += ["| " + " | ".join(r) + " |" for r in rows]
+    md = "\n".join(lines) + "\n"
+    print(md)
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as f:
+            f.write(md + "\n")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

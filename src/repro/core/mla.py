@@ -213,6 +213,15 @@ def mla_prefill_chunk_paged(params, cfg: MLAConfig, x, pool: Dict[str, Any],
     garbage the engine discards; their latents scatter to the null
     block).  Returns (out (B, C, D), new_pool).
 
+    This is ALSO the speculative-decode verify forward (models.lm
+    .verify_chunk_paged / runtime.steps.make_verify_step): with C = k + 1
+    the chunk is [last sampled token, k drafts] and each request's
+    resident latent prefix streams once for all k + 1 query positions —
+    the cache-read amortization hwmodel.attention_costs.mla_verify_cost
+    prices.  Nothing changes here: multi-query paged attention over the
+    block table is the same problem whether the C tokens are prompt
+    suffix or draft window.
+
     The chunk's latents are scattered FIRST, then the queries attend the
     resident prefix THROUGH the block table — shared prefix blocks,
     earlier chunks and the in-chunk causal triangle all ride the same

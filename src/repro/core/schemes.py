@@ -42,6 +42,22 @@ def step_time(scheme: str, cfg: MLAConfig, platform: PlatformPoint,
     return max(c.flops / platform.peak_flops, c.bytes / platform.hbm_bw)
 
 
+def verify_time(scheme: str, cfg: MLAConfig, platform: PlatformPoint,
+                cache_len: int, k: int, batch: int = 1,
+                paged_block: int = 0, dp_shards: int = 1) -> float:
+    """Roofline time of one SPECULATIVE verify step (k + 1 query
+    positions against the resident cache in one forward — see
+    hwmodel.attention_costs.mla_verify_cost).  The spec-decode engine
+    dispatches its verify scheme on this instead of :func:`step_time`:
+    the k-token window amortizes weight and cache streams, which moves
+    the rc/ru/seq crossover points relative to single-token decode."""
+    from ..hwmodel import attention_costs as ac  # local import: no cycle
+    c = ac.mla_verify_cost(cfg, scheme=scheme, cache_len=cache_len, k=k,
+                           batch=batch, dtype_bytes=platform.dtype_bytes,
+                           paged_block=paged_block, dp_shards=dp_shards)
+    return max(c.flops / platform.peak_flops, c.bytes / platform.hbm_bw)
+
+
 def prefill_time(cfg: MLAConfig, platform: PlatformPoint, seq_len: int,
                  batch: int = 1, cached_prefix: int = 0,
                  chunk: int = 0, paged_block: int = 0,
@@ -73,7 +89,8 @@ def prefill_time(cfg: MLAConfig, platform: PlatformPoint, seq_len: int,
 
 def auto_dispatch(cfg: MLAConfig, platform: PlatformPoint, cache_len: int,
                   batch: int = 1, candidates=("seq", "rc", "ru"),
-                  paged_block: int = 0, dp_shards: int = 1) -> str:
+                  paged_block: int = 0, dp_shards: int = 1,
+                  verify_k: int = 0) -> str:
     """Return the fastest scheme for this (platform, cache, batch) point.
 
     The continuous-batching runtime calls this EVERY step on the live
@@ -82,7 +99,19 @@ def auto_dispatch(cfg: MLAConfig, platform: PlatformPoint, cache_len: int,
     made dynamically").  Under data-parallel serving the engine passes
     ``dp_shards`` so the decision is made on the PER-DEVICE point (the
     local batch is what each device's roofline sees — a dispatch computed
-    on the global batch would over-weight the batch-shared terms)."""
+    on the global batch would over-weight the batch-shared terms).
+
+    ``verify_k > 0`` dispatches a SPECULATIVE verify step instead: the
+    k + 1-query window amortizes the weight/cache streams all schemes
+    share but multiplies the per-query FLOP terms, so the best verify
+    scheme can differ from the best decode scheme at the same
+    (batch, cache) point (:func:`verify_time`)."""
+    if verify_k > 0:
+        return min(candidates,
+                   key=lambda s: verify_time(s, cfg, platform, cache_len,
+                                             verify_k, batch,
+                                             paged_block=paged_block,
+                                             dp_shards=dp_shards))
     return min(candidates, key=lambda s: step_time(s, cfg, platform,
                                                    cache_len, batch,
                                                    paged_block=paged_block,

@@ -139,6 +139,121 @@ def mla_decode_cost(cfg: MLAConfig, *, scheme: str, cache_len: int,
     return Cost(sum(fl.values()), sum(by.values()), {**fl, **{f"B:{k}": v for k, v in by.items()}})
 
 
+def mla_verify_cost(cfg: MLAConfig, *, scheme: str, cache_len: int,
+                    k: int, batch: int = 1, dtype_bytes: int = 2,
+                    rope: bool = False, include_io: bool = False,
+                    paged_block: int = 0, table_entry_bytes: int = 4,
+                    dp_shards: int = 1) -> Cost:
+    """One SPECULATIVE-DECODE verify step of one MLA layer: q = k + 1
+    query positions (the last sampled token + k draft tokens) scored
+    against the same resident cache in one forward
+    (runtime.steps.make_verify_step — the chunked-prefill machinery with
+    chunk = k + 1).
+
+    The amortization speculative decoding exists for, in MLA terms: the
+    latent-cache read and every weight stream are paid ONCE for the whole
+    window instead of once per token, while the per-token projections and
+    scores scale with q.  ``cache_len`` counts the resident tokens BEFORE
+    the window (query j attends cache_len + j + 1 positions); k = 0
+    degrades to :func:`mla_decode_cost` up to the in-window causal terms.
+    ``paged_block`` / ``dp_shards`` behave exactly as in
+    :func:`mla_decode_cost` (whole-block reads + table traffic; per-device
+    batch under data-parallel serving).  See also
+    :func:`spec_break_even` for the accepted-length break-even this
+    implies."""
+    if k < 0:
+        raise ValueError(f"k must be >= 0, got {k}")
+    D, H, Q, K, dn, dr, dv = _dims(cfg, rope)
+    if dp_shards < 1:
+        raise ValueError(f"dp_shards must be >= 1, got {dp_shards}")
+    B, w, q = -(-batch // dp_shards), dtype_bytes, k + 1
+    # mean attended length over the in-window causal ramp
+    Lbar = cache_len + (q + 1) / 2
+    L_end = cache_len + q                   # resident extent after the step
+    fl: Dict[str, float] = {}
+    by: Dict[str, float] = {}
+
+    # ---- per-token projections: scale with the window ------------------
+    fl["q_down"] = 2 * B * q * D * Q
+    fl["kv_down"] = 2 * B * q * D * (K + dr)
+    fl["attn_scores"] = 2 * B * H * q * Lbar * (K + dr)
+    fl["attn_out"] = 2 * B * H * q * Lbar * K
+    fl["v_up"] = 2 * B * q * H * K * dv
+    fl["o_proj"] = 2 * B * q * H * dv * D
+    # ---- batch- AND window-shared streams: paid once per round ----------
+    by["w_common"] = (D * Q + D * (K + dr) + K * H * dv + H * dv * D) * w
+    by["cache_read"] = B * cache_len * (K + dr) * w
+    by["cache_write"] = B * q * (K + dr) * w
+    if paged_block:
+        n_blk = -(-L_end // paged_block)
+        by["cache_read"] = B * n_blk * paged_block * (K + dr) * w
+        by["block_table"] = B * n_blk * table_entry_bytes
+
+    if scheme == "seq":
+        fl["q_up"] = 2 * B * q * Q * H * (dn + dr)
+        fl["q_latent"] = 2 * B * q * H * dn * K
+        by["w_scheme"] = (Q * H * (dn + dr) + K * H * dn) * w
+    elif scheme == "rc":
+        fl["q_up_rope"] = 2 * B * q * Q * H * dr
+        fl["absorb_recompute"] = 2 * H * Q * dn * K   # batch/window-shared
+        fl["q_latent"] = 2 * B * q * H * Q * K
+        by["w_scheme"] = (Q * H * (dn + dr) + K * H * dn) * w
+    elif scheme == "ru":
+        fl["q_up_rope"] = 2 * B * q * Q * H * dr
+        fl["q_latent"] = 2 * B * q * H * Q * K
+        by["w_scheme"] = (H * Q * K + Q * H * dr) * w
+    elif scheme == "naive":
+        fl["q_up"] = 2 * B * q * Q * H * (dn + dr)
+        fl["k_up"] = 2 * B * Lbar * K * H * dn
+        fl["v_up_cache"] = 2 * B * Lbar * K * H * dv
+        fl["attn_scores"] = 2 * B * H * q * Lbar * (dn + dr)
+        fl["attn_out"] = 2 * B * H * q * Lbar * dv
+        fl["v_up"] = 0.0
+        by["w_scheme"] = (Q * H * (dn + dr) + K * H * dn) * w
+        by["kv_spill"] = 2 * B * Lbar * H * (dn + dr + dv) * w
+    else:
+        raise ValueError(scheme)
+
+    if include_io:
+        by["io"] = 2 * B * q * D * w
+    return Cost(sum(fl.values()), sum(by.values()),
+                {**fl, **{f"B:{n}": v for n, v in by.items()}})
+
+
+def spec_break_even(cfg: MLAConfig, *, scheme: str, cache_len: int, k: int,
+                    batch: int = 1, dtype_bytes: int = 2,
+                    paged_block: int = 0, dp_shards: int = 1,
+                    draft_bytes_frac: float = 0.0) -> Dict[str, float]:
+    """Expected-accepted-length break-even of speculative decoding, on
+    the bandwidth axis (the regime the paper places large-batch MLA
+    decode in): one verify round emits E in [1, k+1] tokens for one
+    verify step's bytes (+ the draft's, as ``draft_bytes_frac`` of a
+    plain decode step per drafted token).  Spec wins when
+
+        E  >  (verify.bytes + k * draft_frac * decode.bytes) / decode.bytes
+
+    Returns the break-even E*, the per-emitted-token byte ratios at the
+    extremes, and the raw byte counts — bench_serving reports E* next to
+    the measured mean accepted length so the runtime row and the model
+    agree on when drafting pays."""
+    verify = mla_verify_cost(cfg, scheme=scheme, cache_len=cache_len, k=k,
+                             batch=batch, dtype_bytes=dtype_bytes,
+                             paged_block=paged_block, dp_shards=dp_shards)
+    decode = mla_decode_cost(cfg, scheme=scheme, cache_len=cache_len,
+                             batch=batch, dtype_bytes=dtype_bytes,
+                             paged_block=paged_block, dp_shards=dp_shards)
+    round_bytes = verify.bytes + k * draft_bytes_frac * decode.bytes
+    return {
+        "verify_bytes": verify.bytes,
+        "decode_bytes": decode.bytes,
+        "round_bytes": round_bytes,
+        "break_even_emitted": round_bytes / decode.bytes,
+        "bytes_per_token_best": round_bytes / (k + 1),
+        "bytes_per_token_worst": round_bytes,
+        "amortization_at_full_accept": decode.bytes * (k + 1) / round_bytes,
+    }
+
+
 def mla_prefill_cost(cfg: MLAConfig, *, seq_len: int, batch: int = 1,
                      dtype_bytes: int = 2, rope: bool = False, causal: bool = True,
                      include_io: bool = True, cached_prefix: int = 0) -> Cost:

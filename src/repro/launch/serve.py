@@ -58,6 +58,38 @@ Sharded serving (PR 4) — composes with --paged:
                       XLA_FLAGS=--xla_force_host_platform_device_count=N.
   --policy            weight-sharding rules for the mesh
                       (nn.sharding.make_rules mode; default 'serve').
+
+Speculative decoding (PR 5) — composes with --paged and --mesh:
+
+  --spec-k K          draft K tokens per tick and verify them in ONE
+                      k+1-query target forward (the prefill-chunk
+                      machinery at chunk K+1; runtime.steps
+                      .make_verify_step).  Rejected drafts are a pure
+                      host-side length rewind.  Outputs are
+                      token-identical to plain paged decode under greedy
+                      AND seeded sampling (tests/test_spec_decode.py);
+                      draft quality only moves throughput.
+  --draft SPEC        draft model: 'shallow:N' (self-speculation — the
+                      target's own first N layers, weights shared by
+                      reference; default shallow:2) or 'self' (identity
+                      draft, the 100%-acceptance oracle).
+
+Serving-flags summary (the paged runtime; all compose):
+
+  flag              default   effect
+  --paged           off       continuous batching over the block pool
+  --block-size      16        tokens per pool block
+  --num-blocks      sized     pool capacity
+  --no-prefix-cache off       disable radix block sharing
+  --prefill-chunk   32        batched prefill chunk (0 = per-request)
+  --prefill-impl    auto      'gather' view vs 'pallas' in-place kernel
+  --impl            ref       decode attention: 'ref' | 'kernel'
+  --temperature     0.0       0 = greedy; else seeded sampling
+  --top-k           0         top-k filter when sampling
+  --mesh            ''        'DPxMP' sharded serving
+  --policy          serve     weight-sharding rules under --mesh
+  --spec-k          0         speculative decoding draft window
+  --draft           shallow:2 draft spec ('shallow:N' | 'self')
 """
 from __future__ import annotations
 
@@ -118,6 +150,15 @@ def main():
                     choices=("serve", "serve_2dtp", "dp", "tp"),
                     help="weight-sharding rules under --mesh "
                          "(nn.sharding.make_rules mode)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding: draft K tokens per tick "
+                         "and verify them in one K+1-query forward "
+                         "(0 = off; requires --paged, composes with "
+                         "--mesh; token-identical to plain decode)")
+    ap.add_argument("--draft", default="shallow:2",
+                    help="draft model under --spec-k: 'shallow:N' = the "
+                         "target's own first N layers (self-speculation) "
+                         "| 'self' = identity draft (acceptance oracle)")
     args = ap.parse_args()
 
     cfg = configs.smoke(args.arch) if args.smoke else configs.full(args.arch)
@@ -128,6 +169,9 @@ def main():
 
     if args.paged:
         return _serve_paged(args, cfg, params, dtype, mesh)
+    if args.spec_k:
+        raise SystemExit("--spec-k requires --paged (the draft/verify "
+                         "phases run on the paged runtime)")
 
     scheme = args.scheme
     if scheme == "auto":
@@ -221,6 +265,12 @@ def _serve_paged(args, cfg, params, dtype, mesh=None):
     bs = args.block_size
     per_req = blocks_for(args.prompt_len + args.gen + 1, bs)
     num_blocks = args.num_blocks or (1 + args.batch * per_req)
+    draft_cfg = draft_params = None
+    if args.spec_k:
+        from repro.runtime.spec import parse_draft_spec
+        draft_cfg, draft_params = parse_draft_spec(args.draft, cfg, params)
+        print(f"[serve] speculative decoding: k={args.spec_k}, "
+              f"draft={args.draft} ({draft_cfg.n_layers} layers)")
     engine = PagedMLAEngine(
         cfg, params, num_blocks=num_blocks, block_size=bs,
         max_batch=args.batch, max_blocks_per_req=per_req,
@@ -231,7 +281,8 @@ def _serve_paged(args, cfg, params, dtype, mesh=None):
         prefill_impl=args.prefill_impl,
         prefill_chunk=args.prefill_chunk or 32,
         temperature=args.temperature, top_k=args.top_k,
-        sample_seed=args.seed, mesh=mesh, shard_policy=args.policy)
+        sample_seed=args.seed, mesh=mesh, shard_policy=args.policy,
+        spec_k=args.spec_k, draft_cfg=draft_cfg, draft_params=draft_params)
     rng = np.random.default_rng(args.seed + 1)
     reqs = [Request(rid=i,
                     prompt=rng.integers(0, cfg.vocab,
@@ -253,6 +304,13 @@ def _serve_paged(args, cfg, params, dtype, mesh=None):
           f"{summary['prefill_tokens']:.0f} prefilled in "
           f"{summary['prefill_chunks']:.0f} chunks, "
           f"{summary['prefill_compiles']:.0f} prefill compiles")
+    if args.spec_k:
+        print(f"[serve] spec decode: {summary['spec_rounds']:.0f} rounds, "
+              f"accept rate {summary['spec_accept_rate']:.2f} "
+              f"({summary['spec_accepted']:.0f}/"
+              f"{summary['spec_drafted']:.0f} drafts), "
+              f"{summary['spec_mean_emitted']:.2f} tokens/round, "
+              f"{summary['spec_compiles']:.0f} spec compiles")
     first = min(engine.sched.finished, key=lambda r: r.rid)
     print("[serve] sample:", np.asarray(first.output[:16]))
 

@@ -53,6 +53,16 @@ def prefill_chunk_paged(params, cfg: ModelConfig, tokens, pool, block_tables,
                                   lengths, n_valid, **kw)
 
 
+def verify_chunk_paged(params, cfg: ModelConfig, tokens, pool, block_tables,
+                       lengths, n_valid, **kw):
+    """Speculative-decode verify step: chunked paged prefill returning
+    logits at every position (see models.lm.verify_chunk_paged)."""
+    if cfg.family == "encdec":
+        raise NotImplementedError("paged serving targets decoder-only MLA")
+    return lm.verify_chunk_paged(params, cfg, tokens, pool, block_tables,
+                                 lengths, n_valid, **kw)
+
+
 def init_cache(cfg: ModelConfig, batch: int, capacity: int, dtype=None):
     import jax.numpy as jnp
     dtype = dtype if dtype is not None else jnp.bfloat16

@@ -137,15 +137,19 @@ class ModelConfig:
             import math
             plen = self.attn_period * self.moe_period // math.gcd(
                 self.attn_period, self.moe_period)
+        # NOTE: the unrolled fallbacks return prefix + rest — dropping the
+        # first_dense prefix here silently shed layers for short stacks
+        # (e.g. the shallow self-speculation drafts of runtime.spec, which
+        # truncate deepseek's 1-dense + N-MoE plan below one full period).
         if not self.scan_layers:
-            return rest, [], 0, []
+            return prefix + rest, [], 0, []
         n_periods = len(rest) // plen
         period = rest[:plen] if n_periods > 0 else []
         # verify periodicity; if broken, fall back to unrolled
         for p in range(n_periods):
             if rest[p * plen:(p + 1) * plen] != period:
-                return rest, [], 0, []
+                return prefix + rest, [], 0, []
         suffix = rest[n_periods * plen:]
         if n_periods <= 1:
-            return rest, [], 0, []
+            return prefix + rest, [], 0, []
         return prefix, period, n_periods, suffix

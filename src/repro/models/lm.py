@@ -178,15 +178,56 @@ def prefill_chunk_paged(params, cfg: ModelConfig, tokens, pool,
     the kernel path runs under shard_map (batch over DP, heads over
     'model', pool replicated — kernels.ops.mla_prefill_paged_attention);
     the gather path is partitioned by GSPMD."""
-    x = _embed(params, cfg, tokens, None, compute_dtype)
-    ctx = Ctx(mode="prefill_chunk", positions=None, impl=impl, mesh=mesh,
-              scheme=scheme, shard_mode=shard_mode,
-              block_tables=block_tables, lengths=lengths, n_valid=n_valid)
-    x, caches, _ = _run_stack(params, cfg, x, ctx, pool)
+    x, caches = _chunk_paged_hidden(params, cfg, tokens, pool, block_tables,
+                                    lengths, n_valid,
+                                    compute_dtype=compute_dtype, impl=impl,
+                                    mesh=mesh, scheme=scheme,
+                                    shard_mode=shard_mode)
     B = x.shape[0]
     last = jnp.maximum(jnp.asarray(n_valid, jnp.int32) - 1, 0)
     h = x[jnp.arange(B), last]                    # (B, D) last valid hidden
     return _logits(params, cfg, h), caches
+
+
+def verify_chunk_paged(params, cfg: ModelConfig, tokens, pool,
+                       block_tables, lengths, n_valid, *,
+                       compute_dtype=jnp.bfloat16, impl: str = "ref",
+                       mesh=None, scheme: str = "seq",
+                       shard_mode: str = "serve") -> Tuple[jax.Array, Dict]:
+    """Multi-token VERIFY step for speculative decoding: the chunked
+    paged prefill with logits at EVERY chunk position.
+
+    tokens: (B, C) int32 — row b carries [last sampled token, draft_1 ..
+    draft_{n_valid[b]-1}] at absolute positions lengths[b].. (the verify
+    window; C = k + 1).  Same attention math and same pool scatter as
+    :func:`prefill_chunk_paged` — scoring k + 1 positions re-reads each
+    request's resident latent prefix exactly ONCE, which is the cache-read
+    amortization speculative decoding exists for (hwmodel.attention_costs
+    .mla_verify_cost) — but the head returns (B, C, V): position j's
+    logits row is the target's next-token distribution after draft j,
+    which the engine samples with the same fold(rid, position) keys plain
+    decode uses, so accepted streams are token-identical to plain decode.
+    Rows/positions past ``n_valid`` scatter to the null block and their
+    logits are garbage the engine never reads."""
+    x, caches = _chunk_paged_hidden(params, cfg, tokens, pool, block_tables,
+                                    lengths, n_valid,
+                                    compute_dtype=compute_dtype, impl=impl,
+                                    mesh=mesh, scheme=scheme,
+                                    shard_mode=shard_mode)
+    return _logits(params, cfg, x), caches
+
+
+def _chunk_paged_hidden(params, cfg: ModelConfig, tokens, pool,
+                        block_tables, lengths, n_valid, *,
+                        compute_dtype, impl, mesh, scheme, shard_mode):
+    """Shared body of prefill_chunk_paged / verify_chunk_paged: run one
+    (B, C) chunk through the stack against the paged pool; returns the
+    pre-norm hidden states (B, C, D) and the updated pool."""
+    x = _embed(params, cfg, tokens, None, compute_dtype)
+    ctx = Ctx(mode="prefill_chunk", positions=None, impl=impl, mesh=mesh,
+              scheme=scheme, shard_mode=shard_mode,
+              block_tables=block_tables, lengths=lengths, n_valid=n_valid)
+    return _run_stack(params, cfg, x, ctx, pool)[:2]
 
 
 def decode_step(params, cfg: ModelConfig, token, cache, index, *,

@@ -52,9 +52,11 @@ from ..core import cache as cachelib
 from ..core import mla as mlalib
 from ..core.schemes import PlatformPoint, auto_dispatch
 from ..models.common import ModelConfig
+from . import spec as speclib
 from .scheduler import ContinuousScheduler, Request, blocks_for
 from .steps import (make_chunked_prefill_step, make_paged_serve_step,
-                    make_prefill_step, scatter_prefill_to_paged)
+                    make_prefill_step, make_verify_step,
+                    scatter_prefill_to_paged)
 
 
 @dataclasses.dataclass
@@ -68,6 +70,10 @@ class EngineStats:
     mid_gen_admissions: int = 0     # admitted while other slots were decoding
     preemptions: int = 0
     scheme_switches: int = 0
+    spec_rounds: int = 0            # speculative draft+verify ticks
+    spec_slot_rounds: int = 0       # per-slot verify rows across rounds
+    spec_drafted: int = 0           # draft tokens proposed
+    spec_accepted: int = 0          # draft tokens accepted by the target
     util_valid_sum: float = 0.0     # time-avg of valid/allocated
     util_pool_sum: float = 0.0
     util_samples: int = 0
@@ -88,6 +94,15 @@ class EngineStats:
             "scheme_switches": self.scheme_switches,
             "tokens_per_s": (self.decode_tokens / self.wall)
             if self.wall > 0 else 0.0,
+            "spec_rounds": self.spec_rounds,
+            "spec_drafted": self.spec_drafted,
+            "spec_accepted": self.spec_accepted,
+            "spec_accept_rate": self.spec_accepted / self.spec_drafted
+            if self.spec_drafted else 0.0,
+            # per-REQUEST tokens per verify: the quantity the hwmodel
+            # break-even E* is stated in (1 <= E <= k + 1)
+            "spec_mean_emitted": self.decode_tokens / self.spec_slot_rounds
+            if self.spec_slot_rounds else 0.0,
             "cache_utilization": self.util_valid_sum / n,
             "pool_occupancy": self.util_pool_sum / n,
             "schemes_used": dict(self.schemes_used),
@@ -107,7 +122,9 @@ class PagedMLAEngine:
                  prefill_impl: Optional[str] = None,
                  temperature: float = 0.0, top_k: int = 0,
                  sample_seed: int = 0,
-                 mesh=None, shard_policy: str = "serve"):
+                 mesh=None, shard_policy: str = "serve",
+                 spec_k: int = 0, draft_cfg: Optional[ModelConfig] = None,
+                 draft_params=None):
         if cfg.attn_kind != "mla":
             raise NotImplementedError("PagedMLAEngine requires an MLA model")
         if scheme == "auto" and platform is None:
@@ -132,6 +149,23 @@ class PagedMLAEngine:
             # the per-request path recomputes + rewrites WHOLE prompts,
             # which would scatter over read-only shared blocks
             enable_prefix_cache = False
+        if spec_k < 0:
+            raise ValueError(f"spec_k must be >= 0, got {spec_k}")
+        if spec_k:
+            if prefill_mode != "chunked":
+                raise NotImplementedError(
+                    "speculative decoding requires prefill_mode='chunked' "
+                    "(the draft pool is filled by the same chunked path)")
+            if draft_cfg is None or draft_params is None:
+                raise ValueError(
+                    "spec_k > 0 needs draft_cfg + draft_params — build "
+                    "them with runtime.spec.shallow_draft / identity_draft")
+            if draft_cfg.vocab != cfg.vocab:
+                raise ValueError(
+                    f"draft vocab {draft_cfg.vocab} != target {cfg.vocab}")
+            if draft_cfg.attn_kind != "mla":
+                raise NotImplementedError("drafts must be MLA models "
+                                          "(they share the paged runtime)")
         self.cfg = cfg
         self.mla = cfg.mla_config()
         self.mesh = mesh
@@ -182,21 +216,57 @@ class PagedMLAEngine:
         self.sched = ContinuousScheduler(
             num_blocks=num_blocks, block_size=block_size,
             max_batch=max_batch, max_blocks_per_req=max_blocks_per_req,
-            enable_prefix_cache=enable_prefix_cache)
+            enable_prefix_cache=enable_prefix_cache,
+            decode_window=spec_k + 1)
         self.pool = models.init_paged_cache(cfg, num_blocks, block_size,
                                             compute_dtype)
+        # -- speculative decoding: draft model + its own paged pool -------
+        # The draft pool shares the scheduler's GEOMETRY (block size, block
+        # ids, tables) with the target pool — one host-side allocator and
+        # one block table serve both — so accept/reject is a shared length
+        # rewind and every block-level op (CoW copies, eviction reuse)
+        # applies to both pools in lockstep.
+        self.spec_k = int(spec_k)
+        self.draft_cfg = draft_cfg
+        self.draft_params = draft_params
+        self.draft_pool = None
+        # drafts always decode with 'seq' (all schemes compute the same
+        # function; 'seq' needs no absorbed leaves, so shallow drafts
+        # sliced from an un-absorbed tree work for every engine scheme)
+        self._draft_scheme = "seq"
+        if spec_k:
+            self.draft_pool = models.init_paged_cache(
+                draft_cfg, num_blocks, block_size, compute_dtype)
+            if mesh is not None and draft_params is not params:
+                # shallow drafts alias embed/ln_f/first-N-layer leaves of
+                # the target: reuse the committed buffers instead of
+                # device_put-ing a second copy of each shared weight
+                from .steps import commit_draft_params
+                self.draft_params = commit_draft_params(
+                    draft_params, draft_cfg, mesh, shard_policy,
+                    target_host=params, target_committed=self.params)
         if mesh is not None:
             # the pool replicates over every mesh axis (host-global block
             # tables may point any DP shard at any block); committing it
             # here keeps the donated in/out shardings copy-free.
             from jax.sharding import NamedSharding, PartitionSpec as PS
-            self.pool = jax.device_put(
-                self.pool, jax.tree.map(
-                    lambda _: NamedSharding(mesh, PS()), self.pool))
+            repl = lambda tree: jax.device_put(
+                tree, jax.tree.map(lambda _: NamedSharding(mesh, PS()),
+                                   tree))
+            self.pool = repl(self.pool)
+            if self.draft_pool is not None:
+                self.draft_pool = repl(self.draft_pool)
+        if spec_k and self.draft_params is params:
+            # identity draft ('self'): share the engine's prepared tree
+            # (absorbed leaves attached / mesh-committed above)
+            self.draft_params = self.params
         self.pending = np.zeros((max_batch,), np.int32)   # next token to feed
         self._decode_steps: Dict[str, object] = {}
         self._prefills: Dict[int, object] = {}     # per_request: cap -> fn
         self._chunk_steps: Dict[int, object] = {}  # chunked: chunk size -> fn
+        self._verify_steps: Dict[str, object] = {}  # spec: scheme -> fn
+        self._draft_decode_step = None
+        self._draft_chunk_steps: Dict[int, object] = {}
         self._copy_block = jax.jit(cachelib.copy_block_paged,
                                    donate_argnums=(0,))
         self._last_scheme: Optional[str] = None
@@ -220,10 +290,14 @@ class PagedMLAEngine:
                 compute_dtype=self.compute_dtype, impl=self.impl)
         return self._prefills[cap]
 
+    def _chunk_impl(self) -> str:
+        """Chunk-attention impl of the prefill AND verify steps: follows
+        ``prefill_impl`` when overridden, else the engine ``impl``."""
+        return {"gather": "ref", "pallas": "kernel",
+                None: self.impl}[self.prefill_impl]
+
     def _chunk_step(self, chunk: int):
         if chunk not in self._chunk_steps:
-            impl = {"gather": "ref", "pallas": "kernel",
-                    None: self.impl}[self.prefill_impl]
             # a FIXED engine scheme prefills with the same absorption
             # ordering (all schemes compute the same function); 'auto'
             # pins prefill to 'seq' so the per-step decode dispatch does
@@ -233,16 +307,50 @@ class PagedMLAEngine:
                 else "seq"
             self._chunk_steps[chunk] = make_chunked_prefill_step(
                 self.cfg, self.mesh, compute_dtype=self.compute_dtype,
-                impl=impl, scheme=scheme, policy=self.shard_policy)
+                impl=self._chunk_impl(), scheme=scheme,
+                policy=self.shard_policy)
         return self._chunk_steps[chunk]
+
+    def _draft_chunk_step(self, chunk: int):
+        """Draft-model sibling of :meth:`_chunk_step`: keeps the draft
+        pool prompt-complete so drafting can start right after prefill."""
+        if chunk not in self._draft_chunk_steps:
+            self._draft_chunk_steps[chunk] = make_chunked_prefill_step(
+                self.draft_cfg, self.mesh,
+                compute_dtype=self.compute_dtype, impl=self._chunk_impl(),
+                scheme=self._draft_scheme, policy=self.shard_policy)
+        return self._draft_chunk_steps[chunk]
+
+    def _draft_step(self):
+        if self._draft_decode_step is None:
+            self._draft_decode_step = make_paged_serve_step(
+                self.draft_cfg, self.mesh,
+                compute_dtype=self.compute_dtype, impl=self.impl,
+                scheme=self._draft_scheme, policy=self.shard_policy)
+        return self._draft_decode_step
+
+    def _verify_step(self, scheme: str):
+        if scheme not in self._verify_steps:
+            self._verify_steps[scheme] = make_verify_step(
+                self.cfg, self.mesh, compute_dtype=self.compute_dtype,
+                impl=self._chunk_impl(), scheme=scheme,
+                policy=self.shard_policy)
+        return self._verify_steps[scheme]
 
     @property
     def prefill_compiles(self) -> int:
         """Distinct prefill step shapes built so far: bounded by the number
         of chunk sizes (chunked mode) instead of prompt-length buckets."""
-        return len(self._chunk_steps) + len(self._prefills)
+        return (len(self._chunk_steps) + len(self._prefills)
+                + len(self._draft_chunk_steps))
 
-    def _pick_scheme(self) -> str:
+    @property
+    def spec_compiles(self) -> int:
+        """Distinct speculative step shapes: verify steps (<= one per
+        scheme, all at chunk k+1) + the single draft decode step."""
+        return len(self._verify_steps) + (self._draft_decode_step is not None)
+
+    def _pick_scheme(self, verify_k: int = 0) -> str:
         if self.scheme != "auto":
             self._last_scheme = self.scheme
             return self.scheme
@@ -251,7 +359,7 @@ class PagedMLAEngine:
         s = auto_dispatch(self.mla, self.platform, cache_len=cache_len,
                           batch=max(len(active), 1),
                           paged_block=self.block_size,
-                          dp_shards=self._dp)
+                          dp_shards=self._dp, verify_k=verify_k)
         if self._last_scheme is not None and s != self._last_scheme:
             self.stats.scheme_switches += 1
         self._last_scheme = s
@@ -274,6 +382,19 @@ class PagedMLAEngine:
         if self.temperature <= 0.0:
             arg = np.asarray(jnp.argmax(rows, axis=-1))
             return {s: int(arg[i]) for i, s in enumerate(slots)}
+        rids, poss = [], []
+        for s in slots:
+            req = self.sched.slots[s]
+            rids.append(req.rid)
+            poss.append(req.plen + len(req.tokens))
+        toks = self._sample_rows(rows, rids, poss)
+        return {s: int(toks[i]) for i, s in enumerate(slots)}
+
+    def _sample_rows(self, rows, rids, poss) -> np.ndarray:
+        """Temperature / top-k sample one token per logits row with the
+        fold(fold(seed, rid), position) key stream (see _sample_tokens;
+        also the verify positions of a speculative round — same keys, so
+        spec-decode emits the exact tokens plain decode would)."""
         if self.mesh is not None:
             # Gather the (few-KB) logits rows to the host and re-feed them
             # as a single-device array: under the pre-0.5 jax default
@@ -283,15 +404,9 @@ class PagedMLAEngine:
             # silently fork the PRNG stream from the single-host engine.
             # Host-side rows make the sampled stream topology-invariant.
             rows = jnp.asarray(np.asarray(rows))
-        rids, poss = [], []
-        for s in slots:
-            req = self.sched.slots[s]
-            rids.append(req.rid)
-            poss.append(req.plen + len(req.tokens))
-        toks = np.asarray(self._sample_fn(
+        return np.asarray(self._sample_fn(
             rows, jnp.asarray(rids, jnp.uint32),
             jnp.asarray(poss, jnp.uint32)))
-        return {s: int(toks[i]) for i, s in enumerate(slots)}
 
     @functools.cached_property
     def _sample_fn(self):
@@ -339,6 +454,15 @@ class PagedMLAEngine:
                 self.params, jnp.asarray(tokens), self.pool,
                 jnp.asarray(self.sched.block_table), jnp.asarray(lens),
                 jnp.asarray(nv))
+            if self.spec_k:
+                # the draft prefills the SAME chunk into its own pool, so
+                # a request can start drafting the moment it is admitted
+                # (prefix-cache hits skip both pools symmetrically: shared
+                # block ids carry valid latents in each)
+                _, self.draft_pool = self._draft_chunk_step(C)(
+                    self.draft_params, jnp.asarray(tokens),
+                    self.draft_pool, jnp.asarray(self.sched.block_table),
+                    jnp.asarray(lens), jnp.asarray(nv))
             self.stats.prefill_tokens += int(nv.sum())
             self.stats.prefill_chunks += 1
             for slot, req in finishing:
@@ -384,6 +508,11 @@ class PagedMLAEngine:
             self.pool = self._copy_block(self.pool,
                                          jnp.asarray(src, jnp.int32),
                                          jnp.asarray(dst, jnp.int32))
+            if self.draft_pool is not None:
+                # block-level ops track both pools (same geometry/tables)
+                self.draft_pool = self._copy_block(
+                    self.draft_pool, jnp.asarray(src, jnp.int32),
+                    jnp.asarray(dst, jnp.int32))
 
         admitted = self.sched.try_admit(step_i)
         for _, req in admitted:
@@ -398,7 +527,9 @@ class PagedMLAEngine:
                 self._run_per_request_prefill(admitted, step_i)
 
         active = self.sched.active_slots
-        if active:
+        if active and self.spec_k:
+            self._spec_round(active, step_i)
+        elif active:
             scheme = self._pick_scheme()
             self.stats.schemes_used[scheme] = \
                 self.stats.schemes_used.get(scheme, 0) + 1
@@ -419,6 +550,122 @@ class PagedMLAEngine:
         self.stats.util_samples += 1
         self.stats.steps += 1
         self.stats.wall += time.perf_counter() - t0
+
+    # ------------------------------------------------ speculative round ----
+
+    def _spec_round(self, active, step_i: int) -> None:
+        """One draft + verify + accept tick over all active slots.
+
+        1. DRAFT: the draft model proposes up to k tokens per slot by
+           plain paged decode against its own pool.  Proposals use the
+           SAME decision rule as the target — greedy argmax, or
+           temperature/top-k with the shared fold(rid, absolute position)
+           key stream — so an identity draft proposes exactly what the
+           target will sample (100% acceptance, the oracle property)
+           under seeded sampling too, not just greedy.  The loop runs
+           each slot's full write window (budget-clipped nv[s] = min(k+1,
+           remaining)) so the LAST draft's latent is written too — the
+           final iteration's proposal is discarded but its write is what
+           keeps the draft pool complete when all k drafts are accepted.
+           Slots whose window is exhausted freeze (same token re-written
+           at the same position — idempotent), so one fixed step shape
+           serves ragged windows.
+        2. VERIFY: one chunked multi-query forward of the TARGET over
+           [pending, d_1 .. d_{nv-1}] (runtime.steps.make_verify_step,
+           chunk = k+1): the resident latent prefix streams from HBM once
+           for all positions.  The target's own token at every position
+           comes from the same greedy argmax / fold(rid, position) key
+           stream plain decode uses.
+        3. ACCEPT: leading drafts equal to the target's tokens are
+           accepted; the round emits the accepted run plus one bonus /
+           correction token (exactly what plain decode would have
+           produced — runtime.spec.accept_length).  Rejection is a pure
+           host-side length rewind: advance_multi moves ``lengths`` past
+           the accepted run only; stale latents beyond it are masked by
+           every attention path and overwritten before they can become
+           visible.  Topology-independent: lengths are host numpy under
+           any mesh (PR 4).
+        """
+        k = self.spec_k
+        B = self.sched.max_batch
+        nv = np.zeros((B,), np.int32)
+        for s in active:
+            nv[s] = self.sched._window(self.sched.slots[s])
+        # ---- 1. draft ---------------------------------------------------
+        drafts = np.zeros((B, k), np.int32)
+        d_pending = self.pending.copy()
+        d_lens = self.sched.lengths.copy()
+        bt = jnp.asarray(self.sched.block_table)
+        d_step = self._draft_step()
+        for j in range(int(nv.max())):
+            d_logits, self.draft_pool = d_step(
+                self.draft_params, jnp.asarray(d_pending),
+                self.draft_pool, bt, jnp.asarray(d_lens))
+            if self.temperature <= 0.0:
+                prop = np.asarray(jnp.argmax(d_logits, axis=-1))
+            else:
+                # proposal at absolute position d_lens + 1 draws the same
+                # fold(rid, position) key the target uses to sample THAT
+                # position in verify — identical models propose identical
+                # tokens under seeded sampling
+                live = [s for s in active if j < nv[s] - 1]
+                prop = np.zeros((B,), np.int64)
+                if live:
+                    toks = self._sample_rows(
+                        d_logits[jnp.asarray(live)],
+                        [self.sched.slots[s].rid for s in live],
+                        [int(d_lens[s]) + 1 for s in live])
+                    for i, s in enumerate(live):
+                        prop[s] = toks[i]
+            for s in active:
+                if j < nv[s] - 1:
+                    drafts[s, j] = prop[s]
+                    self.stats.spec_drafted += 1
+                if j + 1 < nv[s]:        # still drafting next iteration
+                    d_pending[s] = prop[s]
+                    d_lens[s] += 1
+        # ---- 2. verify --------------------------------------------------
+        tokens_v = np.zeros((B, k + 1), np.int32)
+        for s in active:
+            tokens_v[s, 0] = self.pending[s]
+            tokens_v[s, 1:nv[s]] = drafts[s, :nv[s] - 1]
+        scheme = self._pick_scheme(verify_k=k)
+        self.stats.schemes_used[scheme] = \
+            self.stats.schemes_used.get(scheme, 0) + 1
+        logits_v, self.pool = self._verify_step(scheme)(
+            self.params, jnp.asarray(tokens_v), self.pool, bt,
+            jnp.asarray(self.sched.lengths), jnp.asarray(nv))
+        if self.temperature <= 0.0:
+            target = np.asarray(jnp.argmax(logits_v, axis=-1))   # (B, k+1)
+        else:
+            flat, rids, poss = [], [], []
+            for s in active:
+                req = self.sched.slots[s]
+                base = req.plen + len(req.tokens)  # abs pos of next sample
+                for j in range(int(nv[s])):
+                    flat.append((s, j))
+                    rids.append(req.rid)
+                    poss.append(base + j)
+            rows = logits_v[jnp.asarray([s for s, _ in flat]),
+                            jnp.asarray([j for _, j in flat])]
+            toks = self._sample_rows(rows, rids, poss)
+            target = np.zeros((B, k + 1), np.int64)
+            for i, (s, j) in enumerate(flat):
+                target[s, j] = toks[i]
+        # ---- 3. accept + host-side length rewind ------------------------
+        emitted = {}
+        for s in active:
+            t_s = target[s, :nv[s]]
+            n_acc = speclib.accept_length(drafts[s, :nv[s] - 1], t_s)
+            emitted[s] = [int(t) for t in t_s[:n_acc + 1]]
+            self.stats.spec_accepted += n_acc
+        self.sched.advance_multi(emitted, step_i)
+        for s, toks in emitted.items():
+            if self.sched.slots[s] is not None:
+                self.pending[s] = toks[-1]
+        self.stats.decode_tokens += sum(len(t) for t in emitted.values())
+        self.stats.spec_rounds += 1
+        self.stats.spec_slot_rounds += len(active)
 
     def run(self, requests: List[Request], *, max_steps: int = 100_000,
             log_every: int = 0, log=print) -> Dict[str, float]:
@@ -452,4 +699,5 @@ class PagedMLAEngine:
         out["total_blocks_allocated"] = float(
             self.sched.allocator.total_allocs)
         out["prefill_compiles"] = float(self.prefill_compiles)
+        out["spec_compiles"] = float(self.spec_compiles)
         return out

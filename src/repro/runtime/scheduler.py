@@ -176,11 +176,23 @@ def blocks_for(n_tokens: int, block_size: int) -> int:
 
 
 class ContinuousScheduler:
+    """``decode_window`` is the number of cache positions one decode tick
+    may WRITE per request: 1 for plain decode, ``spec_k + 1`` for
+    speculative decoding (the verify step scatters the last sampled token
+    plus up to k drafts).  Admission and per-step block growth reserve the
+    window (clipped to each request's remaining budget), so a verify
+    scatter can never hit the silent table-clamp overwrite that
+    :meth:`_require_table_room` guards."""
+
     def __init__(self, *, num_blocks: int, block_size: int, max_batch: int,
                  max_blocks_per_req: Optional[int] = None,
-                 enable_prefix_cache: bool = True):
+                 enable_prefix_cache: bool = True,
+                 decode_window: int = 1):
+        if decode_window < 1:
+            raise ValueError(f"decode_window must be >= 1, {decode_window}")
         self.allocator = BlockAllocator(num_blocks)
         self.block_size = block_size
+        self.decode_window = decode_window
         self.prefix = PrefixCache(self.allocator, block_size,
                                   enabled=enable_prefix_cache)
         self.max_batch = max_batch
@@ -233,7 +245,7 @@ class ContinuousScheduler:
             if self.slots[slot] is not None:
                 continue
             req = self.waiting[0]
-            need = blocks_for(req.plen + 1, self.block_size)
+            need = blocks_for(req.plen + self._window(req), self.block_size)
             if need > self.max_blocks:
                 raise ValueError(
                     f"request {req.rid}: prompt {req.plen} needs {need} "
@@ -274,6 +286,13 @@ class ContinuousScheduler:
 
     # ----------------------------------------------------- decode cycle ---
 
+    def _window(self, req: Request) -> int:
+        """Write window of the next decode tick for ``req``: the verify
+        window clipped to the remaining generation budget (a request about
+        to finish never writes — or needs blocks for — the full k + 1)."""
+        return max(1, min(self.decode_window,
+                          req.max_new - len(req.tokens)))
+
     def _require_table_room(self, slot: int, n_tokens: int) -> None:
         """Raise if ``n_tokens`` total tokens would overflow slot's block
         table.  ``core.cache.update_latent_paged`` cannot detect this —
@@ -290,21 +309,24 @@ class ContinuousScheduler:
                 f"overwrite it (raise max_blocks_per_req or max_new)")
 
     def ensure_step_capacity(self) -> List[Request]:
-        """Grow each active request's allocation so the next decode token
-        (written at position lengths[slot]) has a block.  Oldest admissions
-        grow first; on pool exhaustion the cache is LRU-evicted, then the
-        YOUNGEST running request is preempted (recompute-style) so the
-        oldest always make progress.  If the write-target block turns out
-        shared (prefix-forked or trie-registered), the share is broken
-        copy-on-write: a private block is allocated and the (src, dst)
-        device copy is queued on ``cow_pending`` for the engine.
-        Returns the preempted requests."""
+        """Grow each active request's allocation so the next decode tick's
+        write window (positions lengths[slot] .. lengths[slot] + window-1;
+        window = ``decode_window`` budget-clipped) has blocks.  Oldest
+        admissions grow first; on pool exhaustion the cache is
+        LRU-evicted, then the YOUNGEST running request is preempted
+        (recompute-style) so the oldest always make progress.  If a
+        write-target block turns out shared (prefix-forked or
+        trie-registered), the share is broken copy-on-write: a private
+        block is allocated and the (src, dst) device copy is queued on
+        ``cow_pending`` for the engine.  Returns the preempted requests."""
         preempted: List[Request] = []
         for slot in list(self._admit_order):          # oldest first
             if self.slots[slot] is None:              # already preempted
                 continue
-            self._require_table_room(slot, int(self.lengths[slot]) + 1)
-            need = blocks_for(int(self.lengths[slot]) + 1, self.block_size)
+            window = self._window(self.slots[slot])
+            self._require_table_room(slot, int(self.lengths[slot]) + window)
+            need = blocks_for(int(self.lengths[slot]) + window,
+                              self.block_size)
             while need > len(self.blocks_of[slot]):
                 got = self.prefix.alloc(1)
                 if got is None:
@@ -320,31 +342,32 @@ class ContinuousScheduler:
                 self.blocks_of[slot].extend(got)
                 self.block_table[slot, len(self.blocks_of[slot]) - 1] = got[0]
             if self.slots[slot] is not None:
-                self._cow_write_target(slot)
+                self._cow_write_target(slot, window)
         return preempted
 
-    def _cow_write_target(self, slot: int) -> None:
-        """Copy-on-write: if the block about to receive this slot's next
-        token is shared, swap in a private copy.  Structurally this does
-        not arise from prefix sharing alone (shared blocks cover only
-        full prompt prefixes, writes land strictly after the prompt) —
-        it guards external forks and future decode-block registration."""
-        widx = int(self.lengths[slot]) // self.block_size
-        if widx >= len(self.blocks_of[slot]):
-            return                          # preempted mid-growth
-        old = self.blocks_of[slot][widx]
-        if not self.prefix.is_write_shared(old):
-            return
-        got = self.prefix.alloc(1)
-        if got is None:
-            raise RuntimeError(
-                f"pool exhausted breaking a copy-on-write share of block "
-                f"{old} (slot {slot}); increase num_blocks")
-        self.blocks_of[slot][widx] = got[0]
-        self.block_table[slot, widx] = got[0]
-        self.prefix.release([old])
-        self.prefix.count_cow()
-        self.cow_pending.append((old, got[0]))
+    def _cow_write_target(self, slot: int, window: int = 1) -> None:
+        """Copy-on-write: if any block about to receive one of this slot's
+        next ``window`` tokens is shared, swap in a private copy.
+        Structurally this does not arise from prefix sharing alone (shared
+        blocks cover only full prompt prefixes, writes land strictly after
+        the prompt) — it guards external forks and future decode-block
+        registration."""
+        lo = int(self.lengths[slot]) // self.block_size
+        hi = (int(self.lengths[slot]) + window - 1) // self.block_size
+        for widx in range(lo, min(hi, len(self.blocks_of[slot]) - 1) + 1):
+            old = self.blocks_of[slot][widx]
+            if not self.prefix.is_write_shared(old):
+                continue
+            got = self.prefix.alloc(1)
+            if got is None:
+                raise RuntimeError(
+                    f"pool exhausted breaking a copy-on-write share of "
+                    f"block {old} (slot {slot}); increase num_blocks")
+            self.blocks_of[slot][widx] = got[0]
+            self.block_table[slot, widx] = got[0]
+            self.prefix.release([old])
+            self.prefix.count_cow()
+            self.cow_pending.append((old, got[0]))
 
     def drain_cow(self) -> List[Tuple[int, int]]:
         """Hand the queued (src, dst) copy-on-write block copies to the
@@ -387,13 +410,30 @@ class ContinuousScheduler:
         the cache (lengths += 1).  Finished requests are evicted and their
         blocks released (trie-registered ones stay LRU-evictable).
         Returns the requests finished this step."""
+        return self.advance_multi({s: [t] for s, t in sampled.items()}, step)
+
+    def advance_multi(self, emitted: Dict[int, List[int]],
+                      step: int = 0) -> List[Request]:
+        """Account one SPECULATIVE round: ``emitted[slot]`` is the ordered
+        list of tokens the verify step produced for that slot (accepted
+        drafts + one bonus/correction token, at most the slot's write
+        window).  The cache gained the fed token plus every accepted draft
+        — lengths += len(emitted); the LAST emitted token is the new
+        pending token (not yet written; rejected drafts' latents sit past
+        ``lengths`` and are overwritten before they can ever be attended).
+        Len-1 lists degrade to plain :meth:`advance`.  Returns the
+        requests finished this round."""
         done: List[Request] = []
-        for slot, tok in sampled.items():
+        for slot, toks in emitted.items():
             req = self.slots[slot]
-            if req is None:
+            if req is None or not toks:
                 continue
-            self.lengths[slot] += 1
-            req.tokens.append(int(tok))
+            if len(toks) > self._window(req):
+                raise ValueError(
+                    f"slot {slot}: {len(toks)} emitted tokens exceed the "
+                    f"write window {self._window(req)}")
+            self.lengths[slot] += len(toks)
+            req.tokens.extend(int(t) for t in toks)
             if req.done:
                 req.finished_step = step
                 self._release_slot(slot)

@@ -1,0 +1,146 @@
+"""Speculative-decoding support for the paged MLA runtime: draft-model
+construction + host-side acceptance.
+
+The paper's core finding is that MLA's compact latent cache pushes decode
+toward the compute-bound regime — exactly where speculative decoding pays
+off: verifying k draft tokens re-uses the same latent-cache read a
+single-token step already pays for (the k+1-query verify step is the
+prefill-chunk machinery with chunk = k+1; see TransMLA, arXiv:2502.07864,
+for the same argument made for latent attention at large).
+
+Pieces (all host-side; the device steps live in runtime.steps):
+
+  * :func:`shallow_draft` — SELF-speculation: the draft model is the
+    target's own first ``n_layers`` (embedding / final norm / unembedding
+    shared by reference, layer weights sliced out of the target tree, re-
+    stacked to match the draft's own scan plan).  No second checkpoint,
+    no tokenizer mismatch by construction.
+  * :func:`identity_draft` — the degenerate draft == target.  Every draft
+    token matches the target's choice, so the engine must accept all k
+    per round — the end-to-end validity oracle for the accept/rewind
+    machinery (tests/test_spec_decode.py, bench_serving's spec row).
+  * :func:`parse_draft_spec` — CLI surface: 'self' | 'shallow:N'.
+  * :func:`accept_length` — the token-exact acceptance rule.  The target
+    samples its OWN token at every verify position with the same
+    fold(rid, absolute position) keys plain decode uses, and a draft
+    token is accepted iff it EQUALS that token.  Emitted tokens are
+    therefore byte-identical to plain paged decode under greedy AND
+    seeded sampling — draft quality only moves throughput, never tokens.
+
+Rollback needs no device work beyond the natural overwrite: lengths are
+host-global numpy on every topology (PR 4), so rejecting drafts is a
+length rewind — stale pool entries sit beyond ``lengths``, are never
+attended, and are overwritten by the very next writes at those positions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.common import ModelConfig
+
+
+# ------------------------------------------------------------ acceptance ---
+
+
+def accept_length(drafts: np.ndarray, targets: np.ndarray) -> int:
+    """Number of leading draft tokens equal to the target's own choices.
+
+    drafts: (k,) proposed tokens d_1..d_k; targets: (nv,) the target
+    model's sampled token at each verify position (nv <= k + 1).  The
+    round emits ``targets[:accept_length + 1]`` — the accepted drafts ARE
+    the target's tokens, plus one bonus/correction token, so the emitted
+    stream is exactly what plain decode would have produced."""
+    n = 0
+    for j in range(min(len(drafts), len(targets) - 1)):
+        if int(drafts[j]) != int(targets[j]):
+            break
+        n += 1
+    return n
+
+
+# ----------------------------------------------------------- draft models --
+
+
+def identity_draft(cfg: ModelConfig, params) -> Tuple[ModelConfig, object]:
+    """Draft == target.  Proposals always match, acceptance is exactly k
+    every round — the validity oracle (and an upper bound on speedup)."""
+    return cfg, params
+
+
+def shallow_draft(cfg: ModelConfig, params, n_layers: int
+                  ) -> Tuple[ModelConfig, object]:
+    """Self-speculation draft: the target's first ``n_layers`` layers.
+
+    Returns (draft_cfg, draft_params) where draft_params REUSES the
+    target's leaves (no copies beyond re-stacking scanned layers):
+    embed / ln_f by reference, layer weights sliced from the target's
+    prefix/period/suffix tree and reassembled to match
+    ``lm_defs(draft_cfg)``'s own layer plan.  Requires an MLA decoder-only
+    target (the paged runtime's precondition anyway)."""
+    if not 1 <= n_layers < cfg.n_layers:
+        raise ValueError(
+            f"shallow draft needs 1 <= n_layers < {cfg.n_layers}, "
+            f"got {n_layers}")
+    if cfg.family == "encdec":
+        raise NotImplementedError("shallow drafts target decoder-only LMs")
+    draft_cfg = dataclasses.replace(
+        cfg, name=f"{cfg.name}-draft{n_layers}", n_layers=n_layers)
+    layers = _flat_layer_params(params, cfg)[:n_layers]
+    draft_params = {"embed": params["embed"], "ln_f": params["ln_f"]}
+    draft_params.update(_assemble_layer_params(layers, draft_cfg))
+    return draft_cfg, draft_params
+
+
+def _flat_layer_params(params, cfg: ModelConfig) -> List[dict]:
+    """The per-layer param dicts of an lm tree, in layer order (scanned
+    periods unstacked)."""
+    prefix, period, n_periods, suffix = cfg.layer_plan()
+    out = [params["prefix"][f"l{i}"] for i in range(len(prefix))]
+    for p in range(n_periods):
+        for i in range(len(period)):
+            out.append(jax.tree.map(lambda a, p=p: a[p],
+                                    params["period"][f"s{i}"]))
+    out.extend(params["suffix"][f"l{i}"] for i in range(len(suffix)))
+    return out
+
+
+def _assemble_layer_params(layers: List[dict], cfg: ModelConfig) -> dict:
+    """Inverse of :func:`_flat_layer_params` for ``cfg``'s own plan."""
+    prefix, period, n_periods, suffix = cfg.layer_plan()
+    it = iter(layers)
+    out = {"prefix": {f"l{i}": next(it) for i in range(len(prefix))}}
+    if n_periods:
+        slices = [[next(it) for _ in range(len(period))]
+                  for _ in range(n_periods)]
+        out["period"] = {
+            f"s{i}": jax.tree.map(lambda *xs: jnp.stack(xs),
+                                  *[s[i] for s in slices])
+            for i in range(len(period))}
+    out["suffix"] = {f"l{i}": next(it) for i in range(len(suffix))}
+    try:
+        next(it)
+    except StopIteration:
+        return out
+    raise ValueError(f"{len(layers)} layer param dicts for a "
+                     f"{cfg.n_layers}-layer plan")
+
+
+def parse_draft_spec(spec: str, cfg: ModelConfig, params
+                     ) -> Tuple[ModelConfig, object]:
+    """CLI draft spec: 'self' (identity oracle) or 'shallow:N' (first N
+    layers of the target, self-speculation)."""
+    if spec == "self":
+        return identity_draft(cfg, params)
+    if spec.startswith("shallow:"):
+        try:
+            n = int(spec.split(":", 1)[1])
+        except ValueError:
+            raise SystemExit(f"--draft shallow:N needs an int, got {spec!r}")
+        return shallow_draft(cfg, params, n)
+    raise SystemExit(f"unknown --draft spec {spec!r} "
+                     "(expected 'self' or 'shallow:N')")

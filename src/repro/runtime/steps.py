@@ -342,6 +342,42 @@ def commit_params(params, cfg: ModelConfig, mesh: Mesh,
                           paged_param_shardings(params, cfg, mesh, rules))
 
 
+def commit_draft_params(draft_params, draft_cfg: ModelConfig, mesh: Mesh,
+                        policy: str = "serve", *, target_host=None,
+                        target_committed=None):
+    """Commit a DRAFT model's param tree to the mesh, reusing the
+    target's already-committed device buffers for every leaf the draft
+    shares (by object identity) with the target's HOST tree.
+
+    Shallow self-speculation drafts (runtime.spec.shallow_draft) alias
+    the target's embed / final norm / first-N layer dicts by reference;
+    committing them independently would duplicate those weights on every
+    device — the (vocab x d_model) embedding twice per replica.  Reuse is
+    sharding-sound because identically-named weights take identical rule
+    specs under the same (mesh, policy).  Leaves the draft owns privately
+    (the re-stacked scan periods) are device_put under the draft's own
+    rules like :func:`commit_params` would."""
+    rules = shd.make_rules(mesh, mode=policy, cfg=draft_cfg)
+    shardings = paged_param_shardings(draft_params, draft_cfg, mesh, rules)
+    reuse = {}
+    if target_host is not None and target_committed is not None:
+        from jax.tree_util import tree_flatten_with_path
+        for path, leaf in tree_flatten_with_path(target_host)[0]:
+            node = target_committed
+            try:
+                for key in path:
+                    node = node[key.key]
+            except (KeyError, TypeError, AttributeError):
+                continue        # structure diverged: just re-commit
+            reuse[id(leaf)] = node
+
+    def commit(leaf, sh):
+        return reuse[id(leaf)] if id(leaf) in reuse \
+            else jax.device_put(leaf, sh)
+
+    return jax.tree.map(commit, draft_params, shardings)
+
+
 def paged_param_shardings(params, cfg: ModelConfig, mesh: Mesh, rules):
     """NamedSharding tree matching ``params``' ACTUAL structure.
 
@@ -479,6 +515,54 @@ def make_chunked_prefill_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
                                           compute_dtype=compute_dtype,
                                           impl=impl, mesh=mesh,
                                           scheme=scheme, shard_mode=policy)
+
+    if mesh is None:
+        return jax.jit(run, donate_argnums=(2,))
+    rules = shd.make_rules(mesh, mode=policy, cfg=cfg)
+    dp = rules["batch"]
+    pool_shard = _paged_pool_shardings(cfg, mesh, rules, compute_dtype)
+    return jax.jit(
+        run,
+        in_shardings=(None, NamedSharding(mesh, PS(dp, None)), pool_shard,
+                      NamedSharding(mesh, PS(dp, None)),
+                      NamedSharding(mesh, PS(dp)),
+                      NamedSharding(mesh, PS(dp))),
+        out_shardings=(None, pool_shard),
+        donate_argnums=(2,),
+    )
+
+
+def make_verify_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
+                     *, compute_dtype=jnp.bfloat16, impl: str = "ref",
+                     scheme: str = "seq", policy: str = "serve"):
+    """Speculative-decode verify step over the paged latent pool:
+
+        fn(params, tokens (B, C), pool_tree, block_tables (B, nb),
+           lengths (B,), n_valid (B,)) -> (logits (B, C, V), pool_tree)
+
+    The multi-token sibling of :func:`make_paged_serve_step` built on the
+    chunked-prefill machinery with C = k + 1: row b scores its last
+    sampled token plus ``n_valid[b] - 1`` draft tokens against its
+    resident latent prefix in ONE batched forward — the prefix streams
+    from HBM once for all k + 1 query positions instead of once per token
+    (the amortization hwmodel.attention_costs.mla_verify_cost prices).
+    Unlike the prefill step it returns logits for EVERY position, so the
+    engine can sample the target's token at each verify position and
+    accept/reject drafts host-side.  ``impl``/``scheme``/``mesh`` behave
+    exactly as in :func:`make_chunked_prefill_step` (same shardings:
+    batch rows over DP, heads over 'model', pool replicated + donated);
+    the (B, C, V) logits are left unspecified for GSPMD — the engine
+    host-gathers the few rows it samples anyway.
+    """
+    if cfg.attn_kind != "mla":
+        raise NotImplementedError("paged serving requires attn_kind='mla'")
+
+    def run(params, tokens, pool, block_tables, lengths, n_valid):
+        return models.verify_chunk_paged(params, cfg, tokens, pool,
+                                         block_tables, lengths, n_valid,
+                                         compute_dtype=compute_dtype,
+                                         impl=impl, mesh=mesh,
+                                         scheme=scheme, shard_mode=policy)
 
     if mesh is None:
         return jax.jit(run, donate_argnums=(2,))
