@@ -2,9 +2,18 @@
 # on collection errors, so import-time breakage cannot hide behind a
 # passing subset.  `make test` runs EVERYTHING and remains the union of
 # what CI runs: ci.yml calls the lane targets below (test-lane-fast +
-# test-kernels + test-mesh), whose marker expressions all derive from the
-# single KERNEL_MARKER/MESH_MARKER variables — so the CI union stays
-# provably equal to `make test` instead of drifting in two files.
+# test-kernels + test-mesh + test-audit), whose marker expressions all
+# derive from the single KERNEL_MARKER/MESH_MARKER/AUDIT_MARKER variables
+# — so the CI union stays provably equal to `make test` instead of
+# drifting in two files.
+#
+# `make audit` runs the static hot-path auditor standalone (no pytest):
+# compiles every serve-step cell (single-device + forced-8-device mesh),
+# checks donation aliasing / pallas gather budget / dtype discipline /
+# roofline conformance on the optimized HLO, and jaxlints src/repro.
+# Exits non-zero on any unsuppressed finding.  The CI `audit` job runs
+# the pytest lane (`make test-audit`), which drives the same matrix plus
+# the injected-violation regression suite.
 PY ?= python
 # extra pytest flags (CI threads --junitxml=... through here)
 PYTEST_FLAGS ?=
@@ -12,10 +21,12 @@ PYTEST_FLAGS ?=
 # ---- single source of truth for the test-lane markers -------------------
 KERNEL_MARKER := kernel
 MESH_MARKER := mesh
-FAST_LANE_EXPR := not $(KERNEL_MARKER) and not $(MESH_MARKER)
+AUDIT_MARKER := audit
+FAST_LANE_EXPR := not $(KERNEL_MARKER) and not $(MESH_MARKER) \
+	and not $(AUDIT_MARKER)
 
-.PHONY: test test-fast test-lane-fast test-kernels test-mesh lint \
-	bench-serving bench-smoke bench-gate
+.PHONY: test test-fast test-lane-fast test-kernels test-mesh test-audit \
+	audit lint bench-serving bench-smoke bench-gate
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q $(PYTEST_FLAGS)
@@ -40,6 +51,16 @@ test-mesh:
 		PYTHONPATH=src $(PY) -m pytest -q -m "$(MESH_MARKER)" \
 		$(PYTEST_FLAGS)
 
+# CI lane 4: the static hot-path auditor suite (compile-only conformance
+# checks + injected-violation regressions; the mesh cells run through a
+# subprocess that forces 8 host devices itself).
+test-audit:
+	PYTHONPATH=src $(PY) -m pytest -q -m "$(AUDIT_MARKER)" $(PYTEST_FLAGS)
+
+# Standalone auditor run (same checks, direct CLI output, no pytest).
+audit:
+	$(PY) scripts/audit_steps.py --matrix all
+
 # Inner-loop development: the fast lane minus the slow dry-run compile
 # cells on top.
 test-fast:
@@ -50,7 +71,27 @@ test-fast:
 # `ruff check` runs the error-class rules everywhere; `ruff format
 # --check` is a RATCHET — FORMAT_PATHS lists the files already
 # formatted, grow it file by file as they are cleaned up.
-FORMAT_PATHS := benchmarks/check_regression.py scripts/junit_summary.py
+# Remaining outside the ratchet: benchmarks/bench_serving.py, tests/,
+# and src/repro/ outside analysis/.
+FORMAT_PATHS := \
+	benchmarks/bench_fig2_ordering.py \
+	benchmarks/bench_fig3_ops_mem.py \
+	benchmarks/bench_fig4_oi.py \
+	benchmarks/bench_fig5_throughput.py \
+	benchmarks/bench_fig6_energy.py \
+	benchmarks/bench_kernels.py \
+	benchmarks/bench_table1_params.py \
+	benchmarks/check_regression.py \
+	benchmarks/common.py \
+	benchmarks/roofline_report.py \
+	benchmarks/run.py \
+	scripts/audit_steps.py \
+	scripts/junit_summary.py \
+	src/repro/analysis/__init__.py \
+	src/repro/analysis/audit.py \
+	src/repro/analysis/audit_allowlist.py \
+	src/repro/analysis/hlo.py \
+	src/repro/analysis/jaxlint.py
 lint:
 	ruff check .
 	ruff format --check $(FORMAT_PATHS)

@@ -25,24 +25,31 @@ def run() -> bool:
     rows = []
     for L in LENGTHS:
         costs = {o: ac.score_chain_ops(ac.DSV3_MLA, o, L) for o in ORDERS}
-        rows.append([L] + [f"{costs[o]:.3g}" for o in ORDERS]
-                    + [min(costs, key=costs.get)])
-    md = "# Fig 2 — score-chain op counts by multiplication order (B=1)\n\n" \
-        + table(["cache len L"] + ORDERS + ["argmin"], rows)
+        rows.append(
+            [L] + [f"{costs[o]:.3g}" for o in ORDERS] + [min(costs, key=costs.get)]
+        )
+    md = "# Fig 2 — score-chain op counts by multiplication order (B=1)\n\n" + table(
+        ["cache len L"] + ORDERS + ["argmin"], rows
+    )
     save("fig2_ordering.md", md)
     print(md)
     ok = True
     for L in (8192, 65536, 524288):
         costs = {o: ac.score_chain_ops(ac.DSV3_MLA, o, L) for o in ORDERS}
-        ok &= check(f"L={L}: naive(132) worst",
-                    costs["132"] == max(costs.values()))
+        ok &= check(f"L={L}: naive(132) worst", costs["132"] == max(costs.values()))
     big = {o: ac.score_chain_ops(ac.DSV3_MLA, o, 4_000_000) for o in ORDERS}
-    ok &= check("absorbed orders converge at large L",
-                abs(big["123"] - big["213"]) / big["123"] < 0.05)
-    ok &= check("seq (123) <= rc (213) in pure ops [documented discrepancy]",
-                all(ac.score_chain_ops(ac.DSV3_MLA, "123", L)
-                    <= ac.score_chain_ops(ac.DSV3_MLA, "213", L)
-                    for L in LENGTHS))
+    ok &= check(
+        "absorbed orders converge at large L",
+        abs(big["123"] - big["213"]) / big["123"] < 0.05,
+    )
+    ok &= check(
+        "seq (123) <= rc (213) in pure ops [documented discrepancy]",
+        all(
+            ac.score_chain_ops(ac.DSV3_MLA, "123", L)
+            <= ac.score_chain_ops(ac.DSV3_MLA, "213", L)
+            for L in LENGTHS
+        ),
+    )
     return ok
 
 

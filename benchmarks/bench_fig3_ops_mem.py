@@ -17,34 +17,38 @@ LENGTHS = [256, 2048, 16384, 131072]
 def run() -> bool:
     rows_d, rows_p = [], []
     for L in LENGTHS:
-        d = {m: R.decode_cost(m, cache_len=L, with_softmax=False)
-             for m in METHODS}
+        d = {m: R.decode_cost(m, cache_len=L, with_softmax=False) for m in METHODS}
         p = {m: R.prefill_cost(m, seq_len=L) for m in METHODS}
-        rows_d.append([L] + [f"{d[m].flops:.3g} / {d[m].bytes:.3g}"
-                             for m in METHODS])
-        rows_p.append([L] + [f"{p[m].flops:.3g} / {p[m].bytes:.3g}"
-                             for m in METHODS])
-    md = ("# Fig 3 — ops / off-chip bytes per layer (B=1)\n\n## decode\n\n"
-          + table(["cache L"] + METHODS, rows_d)
-          + "\n## prefill\n\n" + table(["seq L"] + METHODS, rows_p))
+        rows_d.append([L] + [f"{d[m].flops:.3g} / {d[m].bytes:.3g}" for m in METHODS])
+        rows_p.append([L] + [f"{p[m].flops:.3g} / {p[m].bytes:.3g}" for m in METHODS])
+    md = (
+        "# Fig 3 — ops / off-chip bytes per layer (B=1)\n\n## decode\n\n"
+        + table(["cache L"] + METHODS, rows_d)
+        + "\n## prefill\n\n"
+        + table(["seq L"] + METHODS, rows_p)
+    )
     save("fig3_ops_mem.md", md)
     print(md)
 
     ok = True
-    small = {m: R.decode_cost(m, cache_len=256, with_softmax=False)
-             for m in METHODS}
-    big = {m: R.decode_cost(m, cache_len=131072, with_softmax=False)
-           for m in METHODS}
+    small = {m: R.decode_cost(m, cache_len=256, with_softmax=False) for m in METHODS}
+    big = {m: R.decode_cost(m, cache_len=131072, with_softmax=False) for m in METHODS}
     growth_mha = big["mha_l"].bytes - small["mha_l"].bytes
     growth_rc = big["mla_rc"].bytes - small["mla_rc"].bytes
-    ok &= check("MLA_rc byte growth << MHA byte growth (smaller cache dim)",
-                growth_rc < growth_mha / 20,
-                f"{growth_rc:.3g} vs {growth_mha:.3g}")
-    ok &= check("MLA_rc: more flops, fewer bytes than MLA_ru",
-                big["mla_rc"].flops > big["mla_ru"].flops
-                and big["mla_rc"].bytes < big["mla_ru"].bytes)
-    ok &= check("decode accesses comparable at small L (MHA vs MLA_rc)",
-                0.1 < small["mla_rc"].bytes / small["mha_s"].bytes < 10)
+    ok &= check(
+        "MLA_rc byte growth << MHA byte growth (smaller cache dim)",
+        growth_rc < growth_mha / 20,
+        f"{growth_rc:.3g} vs {growth_mha:.3g}",
+    )
+    ok &= check(
+        "MLA_rc: more flops, fewer bytes than MLA_ru",
+        big["mla_rc"].flops > big["mla_ru"].flops
+        and big["mla_rc"].bytes < big["mla_ru"].bytes,
+    )
+    ok &= check(
+        "decode accesses comparable at small L (MHA vs MLA_rc)",
+        0.1 < small["mla_rc"].bytes / small["mha_s"].bytes < 10,
+    )
     return ok
 
 

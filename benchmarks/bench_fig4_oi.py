@@ -7,7 +7,6 @@ Reproduced claims:
     (weight cost amortizes); MLA_rc high OI, mildly cache-sensitive;
   * platform ridge points separate the methods (Edge TPU vs A17 Pro).
 """
-from repro.core.schemes import PlatformPoint
 from repro.hwmodel import roofline as R
 from repro.hwmodel.platforms import PLATFORMS
 
@@ -24,29 +23,40 @@ def run() -> bool:
         p = R.prefill_cost("mla_rc", seq_len=min(L, 32768)).oi
         rows.append([L] + [f"{d[m]:.1f}" for m in METHODS] + [f"{p:.0f}"])
     ridge = {n: f"{pl.ridge_oi:.0f}" for n, pl in PLATFORMS.items()}
-    md = ("# Fig 4 — decode operational intensity (ops/B) vs cache length\n\n"
-          + table(["cache L"] + METHODS + ["(prefill mla)"], rows)
-          + "\nPlatform ridge OIs (roofline corners): "
-          + ", ".join(f"{k}={v}" for k, v in ridge.items()) + "\n")
+    md = (
+        "# Fig 4 — decode operational intensity (ops/B) vs cache length\n\n"
+        + table(["cache L"] + METHODS + ["(prefill mla)"], rows)
+        + "\nPlatform ridge OIs (roofline corners): "
+        + ", ".join(f"{k}={v}" for k, v in ridge.items())
+        + "\n"
+    )
     save("fig4_oi.md", md)
     print(md)
 
-    oi = lambda m, L: R.decode_cost(m, cache_len=L).oi
-    ok = check("MHA OI flat and low",
-               max(oi("mha_l", L) for L in LENGTHS) < 2)
-    ok &= check("MLA_ru OI cache-dependent (x>20 over sweep)",
-                oi("mla_ru", 524288) / oi("mla_ru", 512) > 20)
-    ok &= check("MLA_rc OI high & stable (<3x over sweep)",
-                oi("mla_rc", 524288) / oi("mla_rc", 512) < 3
-                and oi("mla_rc", 512) > 50)
+    oi = lambda m, L: R.decode_cost(m, cache_len=L).oi  # noqa: E731
+    ok = check("MHA OI flat and low", max(oi("mha_l", L) for L in LENGTHS) < 2)
+    ok &= check(
+        "MLA_ru OI cache-dependent (x>20 over sweep)",
+        oi("mla_ru", 524288) / oi("mla_ru", 512) > 20,
+    )
+    ok &= check(
+        "MLA_rc OI high & stable (<3x over sweep)",
+        oi("mla_rc", 524288) / oi("mla_rc", 512) < 3 and oi("mla_rc", 512) > 50,
+    )
     edge = PLATFORMS["edge_tpu"]
     a17 = PLATFORMS["a17_pro"]
-    ok &= check("MLA_rc near Edge-TPU ridge, below A17 ridge (paper text)",
-                oi("mla_rc", 8192) > 0.15 * edge.ridge_oi
-                and oi("mla_rc", 8192) < a17.ridge_oi)
-    ok &= check("prefill OI high for all methods",
-                all(R.prefill_cost(m, seq_len=4096).oi > 500
-                    for m in ("mha_l", "mha_s", "mla_rc")))
+    ok &= check(
+        "MLA_rc near Edge-TPU ridge, below A17 ridge (paper text)",
+        oi("mla_rc", 8192) > 0.15 * edge.ridge_oi
+        and oi("mla_rc", 8192) < a17.ridge_oi,
+    )
+    ok &= check(
+        "prefill OI high for all methods",
+        all(
+            R.prefill_cost(m, seq_len=4096).oi > 500
+            for m in ("mha_l", "mha_s", "mla_rc")
+        ),
+    )
     return ok
 
 

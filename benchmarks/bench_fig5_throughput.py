@@ -18,7 +18,7 @@ from repro.hwmodel import roofline as R
 from .common import check, save, table
 
 BW = 400e9
-RATIOS = [0.5, 2, 8, 32, 128, 512, 2048]     # FLOP/s per B/s (ridge OI)
+RATIOS = [0.5, 2, 8, 32, 128, 512, 2048]  # FLOP/s per B/s (ridge OI)
 CACHES = [1024, 16384, 262144]
 METHODS = ["mha_l", "mha_s", "mla_ru", "mla_rc"]
 
@@ -29,14 +29,21 @@ def throughput(method: str, ratio: float, L: int) -> float:
 
 
 def run() -> bool:
-    md_parts = ["# Fig 5 — layer throughput vs compute/bandwidth ratio "
-                "(400 GB/s, B=1)\n"]
+    md_parts = [
+        "# Fig 5 — layer throughput vs compute/bandwidth ratio "
+        "(400 GB/s, B=1)\n"
+    ]
     for L in CACHES:
-        rows = [[r] + [f"{throughput(m, r, L):.3g}" for m in METHODS]
-                + [max(METHODS, key=lambda m: throughput(m, r, L))]
-                for r in RATIOS]
-        md_parts.append(f"\n## cache = {L}\n\n"
-                        + table(["ratio (FLOP/B)"] + METHODS + ["best"], rows))
+        rows = [
+            [r]
+            + [f"{throughput(m, r, L):.3g}" for m in METHODS]
+            + [max(METHODS, key=lambda m: throughput(m, r, L))]
+            for r in RATIOS
+        ]
+        md_parts.append(
+            f"\n## cache = {L}\n\n"
+            + table(["ratio (FLOP/B)"] + METHODS + ["best"], rows)
+        )
     md = "".join(md_parts)
     save("fig5_throughput.md", md)
     print(md)
@@ -44,28 +51,36 @@ def run() -> bool:
     ok = True
     for L in CACHES:
         best_hi = max(METHODS, key=lambda m: throughput(m, 2048, L))
-        ok &= check(f"L={L}: MLA_rc best on compute-rich platforms",
-                    best_hi == "mla_rc")
+        ok &= check(
+            f"L={L}: MLA_rc best on compute-rich platforms", best_hi == "mla_rc"
+        )
     # ru > rc at sufficiently low ratio (paper's "uncommon case")
     lo = min(RATIOS)
-    ok &= check("MLA_ru beats rc at low compute/BW ratio",
-                throughput("mla_ru", lo, 16384) >
-                throughput("mla_rc", lo, 16384))
+    ok &= check(
+        "MLA_ru beats rc at low compute/BW ratio",
+        throughput("mla_ru", lo, 16384) > throughput("mla_rc", lo, 16384),
+    )
     # crossover exists and auto_dispatch flips there
     ratios = np.geomspace(0.25, 4096, 200)
-    flips = [auto_dispatch(ac.DSV3_MLA,
-                           PlatformPoint("x", r * BW, BW), 16384,
-                           candidates=("rc", "ru")) for r in ratios]
-    ok &= check("auto_dispatch crossover ru->rc",
-                "ru" in flips and "rc" in flips and
-                flips.index("rc") > 0)
+    flips = [
+        auto_dispatch(
+            ac.DSV3_MLA, PlatformPoint("x", r * BW, BW), 16384, candidates=("rc", "ru")
+        )
+        for r in ratios
+    ]
+    ok &= check(
+        "auto_dispatch crossover ru->rc",
+        "ru" in flips and "rc" in flips and flips.index("rc") > 0,
+    )
     # MHA cache-sensitivity vs MLA stability at a typical ratio
     r = 128
     mha_spread = throughput("mha_s", r, 1024) / throughput("mha_s", r, 262144)
     mla_spread = throughput("mla_rc", r, 1024) / throughput("mla_rc", r, 262144)
-    ok &= check("MHA throughput cache-sensitive, MLA stable",
-                mha_spread > 10 * mla_spread,
-                f"mha x{mha_spread:.0f} vs mla x{mla_spread:.1f}")
+    ok &= check(
+        "MHA throughput cache-sensitive, MLA stable",
+        mha_spread > 10 * mla_spread,
+        f"mha x{mha_spread:.0f} vs mla x{mla_spread:.1f}",
+    )
     return ok
 
 

@@ -22,19 +22,26 @@ def energy(method: str, tw: float, L: int) -> float:
 
 
 def run() -> bool:
-    md_parts = ["# Fig 6 — layer energy (pJ) vs on-chip TOPS/W "
-                "(E_DRAM,bit = 8 pJ, B=1)\n"]
+    md_parts = [
+        "# Fig 6 — layer energy (pJ) vs on-chip TOPS/W "
+        "(E_DRAM,bit = 8 pJ, B=1)\n"
+    ]
     for L in CACHES:
-        rows = [[tw] + [f"{energy(m, tw, L):.4g}" for m in METHODS]
-                + [min(METHODS, key=lambda m: energy(m, tw, L))]
-                for tw in TOPS_W]
-        md_parts.append(f"\n## cache = {L}\n\n"
-                        + table(["TOPS/W"] + METHODS + ["best"], rows))
+        rows = [
+            [tw]
+            + [f"{energy(m, tw, L):.4g}" for m in METHODS]
+            + [min(METHODS, key=lambda m: energy(m, tw, L))]
+            for tw in TOPS_W
+        ]
+        md_parts.append(
+            f"\n## cache = {L}\n\n" + table(["TOPS/W"] + METHODS + ["best"], rows)
+        )
     md = "".join(md_parts)
     save("fig6_energy.md", md)
     print(md)
 
     ok = True
+
     # ru robustness: smaller energy spread than rc across the TOPS/W sweep
     # (paper: "MLA_ru is much more resistant to changes in the hardware
     # characteristics" — the comparison is against MLA_rc, whose recompute
@@ -43,25 +50,37 @@ def run() -> bool:
     def spread(m, L):
         es = [energy(m, tw, L) for tw in TOPS_W]
         return max(es) / min(es)
-    ok &= check("MLA_ru more TOPS/W-robust than MLA_rc",
-                spread("mla_ru", 262144) < spread("mla_rc", 262144),
-                f"ru {spread('mla_ru', 262144):.2f} vs "
-                f"rc {spread('mla_rc', 262144):.2f}")
+
+    ok &= check(
+        "MLA_ru more TOPS/W-robust than MLA_rc",
+        spread("mla_ru", 262144) < spread("mla_rc", 262144),
+        f"ru {spread('mla_ru', 262144):.2f} vs " f"rc {spread('mla_rc', 262144):.2f}",
+    )
     # rc best-throughput does not imply best-energy at low efficiency
-    ok &= check("MLA_rc not universally best energy",
-                any(energy("mla_rc", tw, 16384) > energy("mla_ru", tw, 16384)
-                    for tw in TOPS_W))
+    ok &= check(
+        "MLA_rc not universally best energy",
+        any(
+            energy("mla_rc", tw, 16384) > energy("mla_ru", tw, 16384) for tw in TOPS_W
+        ),
+    )
     # MHA_s can win at small cache for some design points...
-    ok &= check("MHA_s can win at small caches",
-                any(min(METHODS, key=lambda m: energy(m, tw, 1024)) == "mha_s"
-                    for tw in TOPS_W))
+    ok &= check(
+        "MHA_s can win at small caches",
+        any(
+            min(METHODS, key=lambda m: energy(m, tw, 1024)) == "mha_s" for tw in TOPS_W
+        ),
+    )
+
     # ...but its spread across cache sizes is much larger than MLA's
     def cache_spread(m, tw=8):
         es = [energy(m, tw, L) for L in CACHES]
         return max(es) / min(es)
-    ok &= check("MHA cache-size energy spread >> MLA_rc's",
-                cache_spread("mha_s") > 5 * cache_spread("mla_rc"),
-                f"{cache_spread('mha_s'):.1f} vs {cache_spread('mla_rc'):.1f}")
+
+    ok &= check(
+        "MHA cache-size energy spread >> MLA_rc's",
+        cache_spread("mha_s") > 5 * cache_spread("mla_rc"),
+        f"{cache_spread('mha_s'):.1f} vs {cache_spread('mla_rc'):.1f}",
+    )
     return ok
 
 

@@ -6,7 +6,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels import ref
 from repro.kernels.mla_decode import mla_decode_kernel
@@ -33,25 +32,30 @@ def run() -> bool:
     ckv = jax.random.normal(ks[1], (B, S, Dl), jnp.float32)
     krope = jax.random.normal(ks[2], (B, S, Dr), jnp.float32)
     t0 = time.time()
-    out = mla_decode_kernel(q, ckv, krope, S - 1, block_k=512,
-                            interpret=True)
+    out = mla_decode_kernel(q, ckv, krope, S - 1, block_k=512, interpret=True)
     dt = time.time() - t0
     want = ref.mla_decode_ref(q, ckv, krope, S - 1)
     err = float(jnp.max(jnp.abs(out - want)))
-    ok = check("mla_decode kernel == oracle at DeepSeek dims",
-               err < 1e-4, f"max err {err:.2e} ({dt:.1f}s interpret)")
+    ok = check(
+        "mla_decode kernel == oracle at DeepSeek dims",
+        err < 1e-4,
+        f"max err {err:.2e} ({dt:.1f}s interpret)",
+    )
 
     fp = mla_vmem_footprint()
     total = sum(fp.values())
     rows = [[k, f"{v/2**10:.0f} KiB"] for k, v in fp.items()]
     rows.append(["TOTAL", f"{total/2**20:.2f} MiB"])
-    md = ("# Kernel VMEM budgets (TPU v5e: ~128 MiB VMEM/core)\n\n"
-          "## mla_decode (grid (B, nk), block_k=512)\n\n"
-          + table(["buffer", "bytes"], rows))
+    md = (
+        "# Kernel VMEM budgets (TPU v5e: ~128 MiB VMEM/core)\n\n"
+        "## mla_decode (grid (B, nk), block_k=512)\n\n"
+        + table(["buffer", "bytes"], rows)
+    )
     save("kernel_vmem.md", md)
     print(md)
-    ok &= check("mla_decode VMEM fits v5e", total < 100 * 2 ** 20,
-                f"{total/2**20:.2f} MiB")
+    ok &= check(
+        "mla_decode VMEM fits v5e", total < 100 * 2**20, f"{total/2**20:.2f} MiB"
+    )
     return ok
 
 

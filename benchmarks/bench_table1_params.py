@@ -21,12 +21,18 @@ def run() -> bool:
     mla_rope = M.param_count(ac.DSV3_MLA, rope=True)
     mha_l = ac.MHA_L.param_count()
     mha_s = ac.MHA_S.param_count()
-    rows.append(["#params (paper, no RoPE)", f"{mla/1e6:.1f}M",
-                 f"{mha_l/1e6:.1f}M", f"{mha_s/1e6:.1f}M"])
-    rows.append(["#params (deployed, +RoPE head)", f"{mla_rope/1e6:.1f}M",
-                 "-", "-"])
+    rows.append(
+        [
+            "#params (paper, no RoPE)",
+            f"{mla/1e6:.1f}M",
+            f"{mha_l/1e6:.1f}M",
+            f"{mha_s/1e6:.1f}M",
+        ]
+    )
+    rows.append(["#params (deployed, +RoPE head)", f"{mla_rope/1e6:.1f}M", "-", "-"])
     md = "# Table 1 — params per attention layer\n\n" + table(
-        ["Parameter", "MLA", "MHA (derived)", "MHA (scaled)"], rows)
+        ["Parameter", "MLA", "MHA (derived)", "MHA (scaled)"], rows
+    )
     save("table1_params.md", md)
     print(md)
     ok = check("MLA = 174M", round(mla / 1e6) == 174, f"{mla/1e6:.3f}M")

@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import json
 import os
-from typing import Dict, List
+from typing import List
 
 ART = os.path.join(os.path.dirname(__file__), "artifacts")
 
@@ -21,12 +21,16 @@ def save(name: str, payload) -> str:
 
 def table(headers: List[str], rows: List[List]) -> str:
     """Markdown table."""
+
     def fmt(x):
         if isinstance(x, float):
             return f"{x:.4g}"
         return str(x)
-    out = ["| " + " | ".join(headers) + " |",
-           "|" + "|".join("---" for _ in headers) + "|"]
+
+    out = [
+        "| " + " | ".join(headers) + " |",
+        "|" + "|".join("---" for _ in headers) + "|",
+    ]
     for r in rows:
         out.append("| " + " | ".join(fmt(x) for x in r) + " |")
     return "\n".join(out) + "\n"

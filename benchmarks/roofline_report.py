@@ -26,8 +26,7 @@ def active_params(cfg) -> float:
         return total
     # routed expert params NOT active: (E - top_k)/E of the routed bank
     plan = cfg.layer_plan()
-    n_moe = sum(1 for s in (plan[0] + plan[1] * plan[2] + plan[3])
-                if s.ffn == "moe")
+    n_moe = sum(1 for s in (plan[0] + plan[1] * plan[2] + plan[3]) if s.ffn == "moe")
     routed = n_moe * cfg.n_experts * 3 * cfg.d_model * cfg.moe_d_ff
     active_routed = routed * cfg.top_k / cfg.n_experts
     return total - routed + active_routed
@@ -42,7 +41,7 @@ def model_flops(arch: str, shape_name: str) -> float:
         return 6.0 * n * tokens
     if sh.kind == "prefill":
         return 2.0 * n * sh.global_batch * sh.seq_len
-    return 2.0 * n * sh.global_batch      # decode: 1 token/seq
+    return 2.0 * n * sh.global_batch  # decode: 1 token/seq
 
 
 def load_cells(mesh_tag: str):
@@ -57,34 +56,59 @@ def load_cells(mesh_tag: str):
 def run(mesh_tag: str = "16x16") -> bool:
     cells = load_cells(mesh_tag)
     if not cells:
-        print(f"[roofline] no dry-run artifacts for mesh {mesh_tag}; run "
-              "PYTHONPATH=src python -m repro.launch.dryrun first")
+        print(
+            f"[roofline] no dry-run artifacts for mesh {mesh_tag}; run "
+            "PYTHONPATH=src python -m repro.launch.dryrun first"
+        )
         return True
     rows = []
     for (arch, shape, scheme, pol), d in sorted(cells.items()):
         mf = model_flops(arch, shape)
         hlo = d["hlo_flops_per_chip"] * d["chips"]
-        rows.append([
-            arch, shape, scheme or "-", pol,
-            f"{d['t_compute']:.3e}", f"{d['t_memory']:.3e}",
-            f"{d['t_collective']:.3e}", d["bound"],
-            f"{d['roofline_fraction']:.3f}",
-            f"{mf / max(hlo, 1):.2f}",
-            d.get("hbm_residency_gib", "-"),
-        ])
-    md = (f"# Roofline — per (arch x shape), mesh {mesh_tag}, TPU v5e "
-          "(197 TF/s bf16, 819 GB/s HBM, 50 GB/s ICI)\n\n"
-          + table(["arch", "shape", "scheme", "policy", "t_compute",
-                   "t_memory", "t_collective", "bound", "roofline frac",
-                   "model/HLO flops", "HBM res GiB"], rows))
+        rows.append(
+            [
+                arch,
+                shape,
+                scheme or "-",
+                pol,
+                f"{d['t_compute']:.3e}",
+                f"{d['t_memory']:.3e}",
+                f"{d['t_collective']:.3e}",
+                d["bound"],
+                f"{d['roofline_fraction']:.3f}",
+                f"{mf / max(hlo, 1):.2f}",
+                d.get("hbm_residency_gib", "-"),
+            ]
+        )
+    md = (
+        f"# Roofline — per (arch x shape), mesh {mesh_tag}, TPU v5e "
+        "(197 TF/s bf16, 819 GB/s HBM, 50 GB/s ICI)\n\n"
+        + table(
+            [
+                "arch",
+                "shape",
+                "scheme",
+                "policy",
+                "t_compute",
+                "t_memory",
+                "t_collective",
+                "bound",
+                "roofline frac",
+                "model/HLO flops",
+                "HBM res GiB",
+            ],
+            rows,
+        )
+    )
     # skipped cells
     skip_rows = []
     for arch in configs.ARCHS:
         for s, why in configs.skip_shapes(arch).items():
             skip_rows.append([arch, s, why])
     if skip_rows:
-        md += "\n## Skipped cells\n\n" + table(["arch", "shape", "reason"],
-                                               skip_rows)
+        md += "\n## Skipped cells\n\n" + table(
+            ["arch", "shape", "reason"], skip_rows
+        )
     save(f"roofline_{mesh_tag}.md", md)
     print(md)
     return True
@@ -92,5 +116,6 @@ def run(mesh_tag: str = "16x16") -> bool:
 
 if __name__ == "__main__":
     import sys
+
     tag = sys.argv[1] if len(sys.argv) > 1 else "16x16"
     raise SystemExit(0 if run(tag) else 1)

@@ -6,9 +6,16 @@ Exit status is non-zero if any paper-claim check fails.
 """
 import sys
 
-from . import (bench_fig2_ordering, bench_fig3_ops_mem, bench_fig4_oi,
-               bench_fig5_throughput, bench_fig6_energy, bench_kernels,
-               bench_table1_params, roofline_report)
+from . import (
+    bench_fig2_ordering,
+    bench_fig3_ops_mem,
+    bench_fig4_oi,
+    bench_fig5_throughput,
+    bench_fig6_energy,
+    bench_kernels,
+    bench_table1_params,
+    roofline_report,
+)
 
 SUITES = [
     ("Table 1 — attention-layer param counts", bench_table1_params.run),
@@ -18,10 +25,8 @@ SUITES = [
     ("Fig 5 — throughput vs compute/BW ratio", bench_fig5_throughput.run),
     ("Fig 6 — energy vs TOPS/W", bench_fig6_energy.run),
     ("Pallas kernels — oracle agreement + VMEM budgets", bench_kernels.run),
-    ("Roofline report (single-pod artifacts)",
-     lambda: roofline_report.run("16x16")),
-    ("Roofline report (multi-pod artifacts)",
-     lambda: roofline_report.run("2x16x16")),
+    ("Roofline report (single-pod artifacts)", lambda: roofline_report.run("16x16")),
+    ("Roofline report (multi-pod artifacts)", lambda: roofline_report.run("2x16x16")),
 ]
 
 
@@ -31,8 +36,9 @@ def main() -> int:
         print(f"\n{'='*72}\n{name}\n{'='*72}")
         try:
             ok = fn()
-        except Exception as e:  # noqa: BLE001
+        except Exception:  # noqa: BLE001
             import traceback
+
             traceback.print_exc()
             ok = False
         if not ok:

@@ -1,6 +1,6 @@
 """Summarize pytest junit XML files into a markdown table (the CI job
-summary): one row per test lane (fast / kernel / mesh), with suite-size
-counts, so a shrinking suite is visible straight in the PR UI instead of
+summary): one row per test lane (fast / kernel / mesh / audit), with
+suite-size counts, so a shrinking suite is visible in the PR UI instead of
 hiding behind a green check.
 
     python scripts/junit_summary.py reports/junit-*.xml

@@ -1,0 +1,4 @@
+"""Static analysis over compiled artifacts: the while-loop-aware HLO cost
+parser (``hlo``), the compile-time hot-path auditor (``audit``), and the
+JAX-footgun AST linter (``jaxlint``).  Driven by ``scripts/audit_steps.py``
+and the ``make audit`` CI lane."""

@@ -1,0 +1,729 @@
+"""Static hot-path auditor: compile-time conformance checks for the serve
+runtime.
+
+The paper's thesis (arxiv 2506.02523) is a bytes-vs-FLOPs argument: MLA's
+compact latent cache shifts decode toward the compute-bound regime, and
+``hwmodel/`` prices exactly that claim.  Nothing in the test suite verifies
+that the executables XLA actually compiles HONOR the properties those
+numbers assume — one silently dropped pool donation (a full pool copy per
+step), one materialized (B, S) gather on a 'pallas' path, or one bf16->f32
+promotion on a pool-sized buffer invalidates every modeled crossover
+without failing a single numeric test.  This module compiles (never
+executes) every hot-path step factory and asserts those invariants on the
+optimized HLO / jaxpr:
+
+  donation   — every ``donate_argnums`` buffer has real input-output
+               aliasing in the compiled executable (``input_output_alias``
+               in the HLO module header).  A dropped donation (sharding /
+               layout / dtype mismatch) fails loudly instead of silently
+               doubling pool traffic.
+  gather     — 'pallas' executables contain no gather/scatter/slice op
+               that moves more than a block-size-derived element budget
+               out of a POOL-shaped buffer (the "no (B, S) gather ever
+               materialized" claim of the fused kernels, checked
+               statically).  Weight streaming and scan layer-slicing are
+               exempt by shape, not by allowlist.
+  dtype      — no f64 anywhere, and no f32 intermediate with a pool
+               (leaf) shape when the config says bf16.  Checked on the
+               JAXPR (platform-independent) because the CPU lowering
+               legally rewrites bf16 ops into f32 convert sandwiches that
+               do not exist in the TPU executable.
+  roofline   — ``analysis.hlo``-extracted bytes/FLOPs must agree with the
+               ``hwmodel.attention_costs`` prediction for the same
+               (step kind, impl, scheme) point within the committed
+               per-metric tolerance table (``TOLERANCES``), turning the
+               cost model from documentation into a CI-gated contract.
+
+``scripts/audit_steps.py`` is the CLI; ``make audit`` runs the pytest lane
+(tests/test_audit.py) that drives the full matrix plus the jaxlint AST
+pass (``analysis.jaxlint``).  Known, documented exceptions live in
+``analysis.audit_allowlist`` and are reported as suppressed, never hidden.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+import warnings
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..hwmodel import attention_costs as ac
+from ..models.common import ModelConfig
+from . import hlo as hloa
+from .audit_allowlist import ALLOWLIST
+
+# --------------------------------------------------------------- findings --
+
+
+@dataclasses.dataclass
+class Finding:
+    """One audit violation: ``rule`` is the check that fired, ``where`` the
+    step-matrix cell or file:line, ``detail`` the human-readable evidence."""
+
+    rule: str
+    where: str
+    detail: str
+
+    def __str__(self) -> str:
+        return f"[{self.rule}] {self.where}: {self.detail}"
+
+
+def split_allowlisted(
+    findings: Sequence[Finding],
+) -> Tuple[List[Finding], List[Finding]]:
+    """(kept, suppressed): a finding is suppressed when an allowlist entry
+    matches its rule exactly and its ``where`` + ``detail`` by substring."""
+    kept, suppressed = [], []
+    for f in findings:
+        hit = any(
+            a.rule == f.rule and a.where in f.where and a.match in (f.detail or "")
+            for a in ALLOWLIST
+        )
+        (suppressed if hit else kept).append(f)
+    return kept, suppressed
+
+
+# ---------------------------------------------------------- audit fixture --
+
+# The canonical audit model: a small dense MLA decoder with the same
+# structural knobs as the deepseek configs (scanned layers, latent cache,
+# rope split).  Small enough to compile in seconds on CPU, large enough
+# that weights and cache dominate the byte count over per-op activation
+# noise (d_model * vocab and the S=128-token table extent).
+AUDIT_CFG = ModelConfig(
+    name="audit-mla-dense",
+    family="dense",
+    n_layers=2,
+    d_model=128,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=256,
+    vocab=512,
+    attn_kind="mla",
+    q_lora_rank=64,
+    kv_lora_rank=32,
+    qk_nope_dim=16,
+    qk_rope_dim=8,
+    v_head_dim=16,
+    max_seq=256,
+    remat=False,
+)
+
+BLOCK_SIZE = 8
+TABLE_BLOCKS = 16  # block-table width nb; static table extent S = 128
+NUM_BLOCKS = 1 + TABLE_BLOCKS * 8  # pool capacity (block 0 = null)
+CHUNK = 4  # prefill chunk C == verify window k + 1
+COMPUTE_DTYPE = jnp.bfloat16
+# Roofline conformance compiles a SECOND, f32 variant of each cell: the CPU
+# backend rewrites bf16 arithmetic into f32 with convert materializations
+# that neither exist on TPU nor in the cost model, so measuring the bf16
+# executable would force uselessly wide tolerance bands.  The f32 program
+# has identical structure (same gathers, same donation, same loops) with
+# no normalization artifacts; the model prices it with dtype_bytes=4.
+ROOFLINE_DTYPE = jnp.float32
+
+# Element budget for pool-indexed data movement on 'pallas' paths: the
+# fused kernels touch at most one block per (row, grid step), so any
+# pool-sourced op moving more than GATHER_SLACK x batch x one block of
+# elements is a materialized view, not a block walk.
+GATHER_SLACK = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class StepSpec:
+    """One cell of the audit matrix."""
+
+    kind: str  # decode | prefill | verify
+    impl: str  # gather | pallas
+    scheme: str  # seq | rc | ru | naive
+    mesh_shape: Optional[Tuple[int, int]] = None  # (data, model) or None
+
+    @property
+    def topo(self) -> str:
+        if self.mesh_shape is None:
+            return "1dev"
+        return f"mesh{self.mesh_shape[0]}x{self.mesh_shape[1]}"
+
+    @property
+    def where(self) -> str:
+        return f"{self.kind}/{self.impl}/{self.scheme}/{self.topo}"
+
+
+def single_device_matrix() -> List[StepSpec]:
+    """decode/prefill/verify x {gather, pallas} x schemes, single device.
+    'naive' has no kernel path by design (it up-projects the cache), so it
+    appears under 'gather' only."""
+    specs = []
+    for kind in ("decode", "prefill", "verify"):
+        for scheme in ("seq", "rc", "ru"):
+            for impl in ("gather", "pallas"):
+                specs.append(StepSpec(kind, impl, scheme))
+        specs.append(StepSpec(kind, "gather", "naive"))
+    return specs
+
+
+def mesh_matrix() -> List[StepSpec]:
+    """Forced-8-device matrix.  The (8, 1) DP-only mesh carries the full
+    audit including roofline conformance (weights replicate, so the
+    closed-form per-device model applies via dp_shards); the (2, 2)
+    DP x MP mesh additionally checks donation/gather/dtype under head
+    sharding (roofline is skipped there — the closed-form model does not
+    price model-parallel weight sharding)."""
+    specs = []
+    for kind in ("decode", "prefill", "verify"):
+        for scheme in ("seq", "ru"):
+            for impl in ("gather", "pallas"):
+                specs.append(StepSpec(kind, impl, scheme, (8, 1)))
+        specs.append(StepSpec(kind, "pallas", "seq", (2, 2)))
+    return specs
+
+
+def _dp_size(mesh_shape: Optional[Tuple[int, int]]) -> int:
+    return 1 if mesh_shape is None else mesh_shape[0]
+
+
+def _batch_of(spec: StepSpec) -> int:
+    # batch must be a DP multiple (the engine pads max_batch the same way)
+    return max(2, _dp_size(spec.mesh_shape))
+
+
+@dataclasses.dataclass
+class CompiledStep:
+    spec: StepSpec
+    compiled: object  # jax compiled executable
+    jaxpr: object
+    pool_tree: Dict
+    batch: int
+    donation_warnings: List[str]
+    dtype: object = COMPUTE_DTYPE
+
+
+def _build_mesh(mesh_shape: Optional[Tuple[int, int]]):
+    if mesh_shape is None:
+        return None
+    from ..launch.mesh import make_mesh
+
+    need = mesh_shape[0] * mesh_shape[1]
+    if jax.device_count() < need:
+        raise RuntimeError(
+            f"mesh {mesh_shape} needs {need} devices, found "
+            f"{jax.device_count()} — force them BEFORE jax init: "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={need}"
+        )
+    return make_mesh(mesh_shape, ("data", "model"))
+
+
+def compile_step(
+    spec: StepSpec, cfg: ModelConfig = AUDIT_CFG, dtype=COMPUTE_DTYPE
+) -> CompiledStep:
+    """Build, lower and compile one step-matrix cell — never executed."""
+    from .. import models
+    from ..core import mla as mlalib
+    from ..nn import module as nnm
+    from ..runtime import steps as rsteps
+
+    mesh = _build_mesh(spec.mesh_shape)
+    params = nnm.init_params(jax.random.PRNGKey(0), models.model_defs(cfg), dtype)
+    if spec.scheme == "ru":
+        params = mlalib.attach_absorbed_tree(params, cfg.mla_config())
+    if mesh is not None:
+        params = rsteps.commit_params(params, cfg, mesh)
+    pool = models.init_paged_cache(cfg, NUM_BLOCKS, BLOCK_SIZE, dtype)
+
+    impl = {"gather": "ref", "pallas": "kernel"}[spec.impl]
+    B = _batch_of(spec)
+    tables = jnp.zeros((B, TABLE_BLOCKS), jnp.int32)
+    lengths = jnp.zeros((B,), jnp.int32)
+    if spec.kind == "decode":
+        step = rsteps.make_paged_serve_step(
+            cfg, mesh, compute_dtype=dtype, impl=impl, scheme=spec.scheme
+        )
+        args = (params, jnp.zeros((B,), jnp.int32), pool, tables, lengths)
+    else:
+        maker = {
+            "prefill": rsteps.make_chunked_prefill_step,
+            "verify": rsteps.make_verify_step,
+        }[spec.kind]
+        step = maker(cfg, mesh, compute_dtype=dtype, impl=impl, scheme=spec.scheme)
+        args = (
+            params,
+            jnp.zeros((B, CHUNK), jnp.int32),
+            pool,
+            tables,
+            lengths,
+            jnp.zeros((B,), jnp.int32),
+        )
+
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        compiled = step.lower(*args).compile()
+    donation_warnings = [
+        str(w.message) for w in caught if "donated" in str(w.message).lower()
+    ]
+    jaxpr = jax.make_jaxpr(lambda *a: step(*a))(*args)
+    return CompiledStep(spec, compiled, jaxpr, pool, B, donation_warnings, dtype)
+
+
+# ---------------------------------------------------------------- helpers --
+
+_JNP_TO_HLO = {
+    "bfloat16": "bf16",
+    "float16": "f16",
+    "float32": "f32",
+    "float64": "f64",
+    "int32": "s32",
+    "int64": "s64",
+    "uint32": "u32",
+    "bool": "pred",
+}
+
+
+def _hlo_leaf_types(tree) -> List[Tuple[str, Tuple[int, ...]]]:
+    return [
+        (_JNP_TO_HLO.get(str(x.dtype), str(x.dtype)), tuple(x.shape))
+        for x in jax.tree.leaves(tree)
+    ]
+
+
+def _pool_core_shapes(pool_tree) -> Dict[Tuple[int, ...], int]:
+    """Map pool-leaf CORE shape (num_blocks, block_size, D) — stacked layer
+    dims stripped — to its trailing feature dim.  Used to recognize ops
+    whose source buffer is (a per-layer view of) the pool."""
+    out: Dict[Tuple[int, ...], int] = {}
+    for x in jax.tree.leaves(pool_tree):
+        core = tuple(x.shape[-3:])
+        out[core] = core[-1]
+    return out
+
+
+# --------------------------------------------------------- donation audit --
+
+_ALIAS_RE = re.compile(r"\{([\d,\s]*)\}:\s*\((\d+)")
+
+
+def _entry_param_types(header: str) -> List[str]:
+    m = re.search(r"entry_computation_layout=\{\(", header)
+    if not m:
+        return []
+    depth, out, cur = 1, [], []
+    for ch in header[m.end() :]:
+        if ch in "({[":
+            depth += 1
+        elif ch in ")}]":
+            depth -= 1
+            if depth == 0:
+                break
+        if ch == "," and depth == 1:
+            out.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur).strip())
+    return [t.split("*/")[-1].strip() for t in out]
+
+
+def audit_donation(compiled, donated_tree, where: str, warns=()) -> List[Finding]:
+    """Every leaf of ``donated_tree`` must be input-output aliased in the
+    compiled module header — XLA drops unusable donations silently (plus a
+    python warning the engine never surfaces), which turns the in-place
+    pool update into a full pool copy per step."""
+    header = compiled.as_text().split("\n", 1)[0]
+    findings = [
+        Finding("donation", where, f"compile warned: {w.splitlines()[0]}")
+        for w in warns
+    ]
+    # _ALIAS_RE's "{out}: (param" shape only occurs inside the
+    # input_output_alias block, so scanning the whole header is safe
+    entries = _ALIAS_RE.findall(header) if "input_output_alias" in header else []
+    aliased_params = [int(p) for _, p in entries]
+    param_types = _entry_param_types(header)
+    aliased_types: List[str] = []
+    for i in aliased_params:
+        if i < len(param_types):
+            aliased_types.append(param_types[i])
+    leaves = _hlo_leaf_types(donated_tree)
+    for dt, shape in leaves:
+        want = dt + "[" + ",".join(str(d) for d in shape) + "]"
+        hit = next((t for t in aliased_types if t.startswith(want)), None)
+        if hit is None:
+            findings.append(
+                Finding(
+                    "donation",
+                    where,
+                    f"donated leaf {want} has no input_output_alias entry "
+                    f"({len(entries)} aliased of {len(leaves)} donated leaves)"
+                    " — the pool is being copied, not updated in place",
+                )
+            )
+        else:
+            aliased_types.remove(hit)
+    return findings
+
+
+# ----------------------------------------------------------- gather audit --
+
+_MOVERS = ("gather", "scatter", "dynamic-slice", "dynamic-update-slice", "slice")
+
+
+def _elems(dims: Sequence[int]) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+def audit_gather(
+    compiled, pool_tree, batch: int, where: str, slack: int = GATHER_SLACK
+) -> List[Finding]:
+    """No pool-sourced gather/scatter/slice may move more elements than
+    ``slack * batch * block_size * feature`` — the block-walk budget of the
+    fused kernels.  Scan plumbing (leading-dim-1 layer slices / writes that
+    keep the (num_blocks, block_size) dims whole) is exempt by shape."""
+    core = _pool_core_shapes(pool_tree)
+    findings = []
+    comps = hloa.parse_computations(compiled.as_text())
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.opcode not in _MOVERS:
+                continue
+            src_name = op.operands[0] if op.operands else ""
+            _, src_dims = hloa._shape_dims(comp.shapes.get(src_name, ""))
+            pool_feature = None
+            for cshape, feat in core.items():
+                if tuple(src_dims[-3:]) == cshape or tuple(src_dims[-4:-1]) == cshape:
+                    pool_feature = feat
+                    break
+            if pool_feature is None:
+                continue
+            if op.opcode in ("gather", "dynamic-slice", "slice"):
+                _, moved_dims = hloa._shape_dims(op.type_str)
+            elif op.opcode == "dynamic-update-slice":
+                upd = op.operands[1] if len(op.operands) > 1 else ""
+                _, moved_dims = hloa._shape_dims(comp.shapes.get(upd, ""))
+            else:  # scatter: the updates operand
+                upd = op.operands[-1] if op.operands else ""
+                _, moved_dims = hloa._shape_dims(comp.shapes.get(upd, ""))
+            if (
+                op.opcode in ("dynamic-slice", "slice", "dynamic-update-slice")
+                and len(moved_dims) == len(src_dims)
+                and moved_dims[0] == 1
+                and tuple(moved_dims[1:]) == tuple(src_dims[1:])
+            ):
+                continue  # layer select / single-block access: scan plumbing
+            moved = _elems(moved_dims)
+            budget = slack * batch * BLOCK_SIZE * pool_feature
+            if moved > budget:
+                findings.append(
+                    Finding(
+                        "gather",
+                        where,
+                        f"{op.opcode} %{op.name} moves {moved} elements "
+                        f"from pool-shaped {src_dims} (budget {budget}) — "
+                        "a materialized block-table view on a pallas path",
+                    )
+                )
+    return findings
+
+
+# ------------------------------------------------------------ dtype audit --
+
+
+def _walk_jaxpr(jaxpr, seen: set, visit):
+    if id(jaxpr) in seen:
+        return
+    seen.add(id(jaxpr))
+    for eqn in jaxpr.eqns:
+        for v in list(eqn.invars) + list(eqn.outvars):
+            aval = getattr(v, "aval", None)
+            if aval is not None and hasattr(aval, "dtype"):
+                visit(eqn, aval)
+        for p in eqn.params.values():
+            for child in p if isinstance(p, (tuple, list)) else [p]:
+                inner = getattr(child, "jaxpr", None)
+                if inner is not None and hasattr(inner, "eqns"):
+                    _walk_jaxpr(inner, seen, visit)
+                elif hasattr(child, "eqns"):
+                    _walk_jaxpr(child, seen, visit)
+
+
+def audit_dtypes(
+    jaxpr, pool_tree, where: str, compute_dtype=COMPUTE_DTYPE, hlo_text: str = ""
+) -> List[Finding]:
+    """No f64 anywhere; no f32 value with a pool(-leaf) shape when the
+    config says bf16.  Runs on the jaxpr: the CPU backend legally rewrites
+    bf16 arithmetic into f32 convert sandwiches in the HLO, so the HLO is
+    only scanned for f64 (which no backend introduces)."""
+    findings = []
+    pool_shapes = set()
+    for x in jax.tree.leaves(pool_tree):
+        pool_shapes.add(tuple(x.shape))
+        pool_shapes.add(tuple(x.shape[-3:]))
+    want_promotion_check = compute_dtype in (jnp.bfloat16, jnp.float16)
+
+    def visit(eqn, aval):
+        if aval.dtype == jnp.float64:
+            findings.append(
+                Finding(
+                    "dtype",
+                    where,
+                    f"f64 value {aval.shape} in `{eqn.primitive.name}` "
+                    "(x64 leaked into a serve step)",
+                )
+            )
+        elif (
+            want_promotion_check
+            and aval.dtype == jnp.float32
+            and tuple(aval.shape) in pool_shapes
+        ):
+            findings.append(
+                Finding(
+                    "dtype",
+                    where,
+                    f"f32 value with pool shape {aval.shape} in "
+                    f"`{eqn.primitive.name}` while compute dtype is "
+                    f"{jnp.dtype(compute_dtype).name} — a promoted "
+                    "pool-sized buffer doubles cache traffic",
+                )
+            )
+
+    _walk_jaxpr(jaxpr.jaxpr, set(), visit)
+    if hlo_text and re.search(r"\bf64\[", hlo_text):
+        findings.append(
+            Finding("dtype", where, "f64 buffer in the compiled HLO module")
+        )
+    return findings
+
+
+# --------------------------------------------------------- roofline audit --
+
+# Ratio bounds (measured HLO / closed-form model) per (kind, impl, topo)
+# and metric, committed as the conformance contract.  FLOPs on the gather
+# cells agree with the model to ~2% (the parser's while-trip accounting is
+# exact); pallas interpret-mode kernels measure ~0.79-0.88x (masked-block
+# work the grid skips).  Bytes carry the lowering's structural
+# multipliers — XLA CPU materializes each weight slice before its GEMM
+# (~4.5x the raw weight stream on gather cells) and the interpret-mode
+# grid loop round-trips block state per step (~31x on pallas cells, ~16x
+# under DP-8 where the model halves nothing but batch terms).  The bands
+# sit ~+/-25% around the calibrated ratios: tight enough that a dropped
+# donation pattern, a gather materialized on a kernel path (pallas bytes
+# would FALL to the gather band — breaching the lower bound), or a skewed
+# cost term breaches them.  Re-calibrate deliberately via
+# scripts/audit_steps.py when the model or the step factories change; see
+# tests/test_audit.py for the injected-violation proofs.
+TOLERANCES: Dict[Tuple[str, str, str], Dict[str, Tuple[float, float]]] = {
+    ("decode", "gather", "1dev"): {"flops": (0.95, 1.10), "bytes": (3.0, 5.7)},
+    ("decode", "pallas", "1dev"): {"flops": (0.65, 1.05), "bytes": (24.0, 39.0)},
+    ("prefill", "gather", "1dev"): {"flops": (0.95, 1.10), "bytes": (3.7, 6.2)},
+    ("prefill", "pallas", "1dev"): {"flops": (0.65, 1.05), "bytes": (25.0, 40.0)},
+    ("verify", "gather", "1dev"): {"flops": (0.95, 1.10), "bytes": (3.0, 6.2)},
+    ("verify", "pallas", "1dev"): {"flops": (0.65, 1.05), "bytes": (25.0, 40.0)},
+    ("decode", "gather", "mesh8x1"): {"flops": (0.95, 1.10), "bytes": (2.0, 3.4)},
+    ("decode", "pallas", "mesh8x1"): {"flops": (0.65, 1.05), "bytes": (12.0, 20.0)},
+    ("prefill", "gather", "mesh8x1"): {"flops": (0.95, 1.10), "bytes": (2.7, 4.5)},
+    ("prefill", "pallas", "mesh8x1"): {"flops": (0.65, 1.05), "bytes": (13.0, 21.0)},
+    ("verify", "gather", "mesh8x1"): {"flops": (0.95, 1.10), "bytes": (2.5, 4.2)},
+    ("verify", "pallas", "mesh8x1"): {"flops": (0.65, 1.05), "bytes": (13.0, 21.0)},
+}
+
+
+def modeled_step_cost(
+    spec: StepSpec,
+    cfg: ModelConfig = AUDIT_CFG,
+    term_scale: Optional[Dict[str, float]] = None,
+) -> Dict[str, float]:
+    """Closed-form (flops, bytes) prediction for one compiled step cell —
+    ``hwmodel.attention_costs`` per layer plus the non-attention terms the
+    step factories actually compile (MLP, embed, unembed, final norm).
+
+    The STATIC program masks rather than shortens: every compiled cell
+    scores against the full block-table extent S = TABLE_BLOCKS x
+    BLOCK_SIZE regardless of the runtime ``lengths``, so the model is
+    evaluated at cache_len = S.  ``term_scale`` multiplies named breakdown
+    terms (e.g. {"cache_read": 3.0}) — the injection hook the audit tests
+    use to prove a skewed cost term fails the lane.  Prices the
+    ROOFLINE_DTYPE (f32) variant of the cell — see that constant's note."""
+    mla = cfg.mla_config()
+    w = jnp.dtype(ROOFLINE_DTYPE).itemsize
+    dp = _dp_size(spec.mesh_shape)
+    B = _batch_of(spec)
+    B_local = -(-B // dp)
+    S = TABLE_BLOCKS * BLOCK_SIZE
+    C = 1 if spec.kind == "decode" else CHUNK
+    impl = {"gather": "gather", "pallas": "pallas"}[spec.impl]
+
+    if spec.kind == "decode":
+        attn = ac.mla_decode_cost(
+            mla,
+            scheme=spec.scheme,
+            cache_len=S,
+            batch=B,
+            dtype_bytes=w,
+            rope=True,
+            paged_block=BLOCK_SIZE,
+            dp_shards=dp,
+        )
+    elif spec.kind == "verify":
+        attn = ac.mla_verify_cost(
+            mla,
+            scheme=spec.scheme,
+            cache_len=S - C,
+            k=C - 1,
+            batch=B,
+            dtype_bytes=w,
+            rope=True,
+            paged_block=BLOCK_SIZE,
+            dp_shards=dp,
+        )
+    else:
+        attn = ac.mla_prefill_chunk_cost(
+            mla,
+            seq_len=S,
+            chunk=C,
+            paged_block=BLOCK_SIZE,
+            batch=B_local,
+            dtype_bytes=w,
+            rope=True,
+            cached_prefix=S - C,
+            impl=impl,
+            include_io=False,
+        )
+
+    breakdown: Dict[str, float] = {}
+    for k, v in attn.breakdown.items():
+        breakdown[k.replace("B:", "bytes:")] = v
+
+    # the prefill model prices the 'seq' absorption; rc/ru reorder the
+    # nope-query transform exactly as in mla_decode_cost
+    if spec.kind == "prefill" and spec.scheme in ("rc", "ru"):
+        _, H, Q, K, dn, dr, _ = ac._dims(mla, True)
+        breakdown.pop("q_up", None)
+        breakdown["q_up_rope"] = 2.0 * B_local * C * Q * H * dr
+        breakdown["q_latent"] = 2.0 * B_local * C * H * Q * K
+        if spec.scheme == "rc":
+            breakdown["absorb_recompute"] = 2.0 * H * Q * dn * K
+
+    # the reference decode/verify paths ALSO materialize the (B, S) view
+    # in HBM (gather read + attention re-read); the prefill-chunk model
+    # already carries this as its own gather_materialize term.
+    if impl == "gather" and spec.kind != "prefill":
+        K, dr = mla.kv_lora_rank, mla.qk_rope_dim
+        breakdown["bytes:gather_materialize"] = 2.0 * B_local * S * (K + dr) * w
+
+    D, V, dff, nl = cfg.d_model, cfg.vocab, cfg.d_ff, cfg.n_layers
+    # attention terms above are PER LAYER
+    for k in list(breakdown):
+        breakdown[k] *= nl
+    # dense swiglu MLP per layer: wi (D, 2, dff) + wo (dff, D)
+    breakdown["mlp"] = nl * 6.0 * B_local * C * D * dff
+    breakdown["bytes:w_mlp"] = nl * 3.0 * D * dff * w
+    # embed gather in, unembed matmul out (verify scores every position,
+    # decode/prefill only one row per request)
+    logit_rows = B_local * (C if spec.kind == "verify" else 1)
+    breakdown["bytes:embed"] = 2.0 * B_local * C * D * w
+    breakdown["unembed"] = 2.0 * logit_rows * D * V
+    breakdown["bytes:w_embed"] = (1.0 + (logit_rows > 0)) * V * D * w
+    breakdown["bytes:logits"] = logit_rows * V * w
+
+    for name, scale in (term_scale or {}).items():
+        for k in list(breakdown):
+            if k == name or k == f"bytes:{name}":
+                breakdown[k] *= scale
+    flops = sum(v for k, v in breakdown.items() if not k.startswith("bytes:"))
+    bytes_ = sum(v for k, v in breakdown.items() if k.startswith("bytes:"))
+    return {"flops": flops, "bytes": bytes_, "breakdown": breakdown}
+
+
+def roofline_applicable(spec: StepSpec) -> bool:
+    """Cells the closed-form model prices: no model-parallel weight
+    sharding (mp > 1) and no naive-scheme prefill (the prefill model
+    prices seq-family absorption only)."""
+    if spec.mesh_shape is not None and spec.mesh_shape[1] != 1:
+        return False
+    if spec.kind == "prefill" and spec.scheme == "naive":
+        return False
+    return True
+
+
+def audit_roofline(
+    compiled,
+    spec: StepSpec,
+    where: str,
+    term_scale: Optional[Dict[str, float]] = None,
+    measured: Optional[hloa.HLOCost] = None,
+) -> List[Finding]:
+    """Measured-vs-modeled conformance: the hlo parser's bytes/FLOPs for
+    the f32-compiled cell must sit inside the committed TOLERANCES ratios
+    of the ``modeled_step_cost`` prediction."""
+    if not roofline_applicable(spec):
+        return []
+    nparts = 1 if spec.mesh_shape is None else spec.mesh_shape[0] * spec.mesh_shape[1]
+    if measured is None:
+        measured = hloa.analyze(compiled.as_text(), num_partitions=nparts)
+    model = modeled_step_cost(spec, term_scale=term_scale)
+    tol = TOLERANCES[(spec.kind, spec.impl, spec.topo)]
+    findings = []
+    for metric in ("flops", "bytes"):
+        got = getattr(measured, metric)
+        want = model[metric]
+        ratio = got / max(want, 1.0)
+        lo, hi = tol[metric]
+        if not lo <= ratio <= hi:
+            findings.append(
+                Finding(
+                    "roofline",
+                    where,
+                    f"{metric}: HLO {got:.3e} vs modeled {want:.3e} "
+                    f"(ratio {ratio:.2f} outside [{lo}, {hi}]) — the "
+                    "compiled step no longer matches the cost model",
+                )
+            )
+    return findings
+
+
+# ------------------------------------------------------------- the matrix --
+
+
+def audit_step(
+    spec: StepSpec,
+    compiled_step: Optional[CompiledStep] = None,
+    term_scale: Optional[Dict[str, float]] = None,
+    roofline_step: Optional[CompiledStep] = None,
+) -> List[Finding]:
+    """All four static audits for one matrix cell.  Donation, gather and
+    dtype run on the production-dtype (bf16) compile; roofline runs on
+    the f32 compile (see ROOFLINE_DTYPE)."""
+    cs = compiled_step if compiled_step is not None else compile_step(spec)
+    where = spec.where
+    text = cs.compiled.as_text()
+    findings = audit_donation(cs.compiled, cs.pool_tree, where, cs.donation_warnings)
+    if spec.impl == "pallas" and spec.scheme != "naive":
+        findings += audit_gather(cs.compiled, cs.pool_tree, cs.batch, where)
+    findings += audit_dtypes(
+        cs.jaxpr, cs.pool_tree, where, compute_dtype=cs.dtype, hlo_text=text
+    )
+    rs = roofline_step
+    if rs is None and roofline_applicable(spec):
+        rs = compile_step(spec, dtype=ROOFLINE_DTYPE)
+    if rs is not None:
+        findings += audit_roofline(rs.compiled, spec, where, term_scale=term_scale)
+        findings += audit_donation(
+            rs.compiled, rs.pool_tree, where + "/f32", rs.donation_warnings
+        )
+    return findings
+
+
+def run_matrix(
+    specs: Sequence[StepSpec], progress=None
+) -> Tuple[List[Finding], List[Finding]]:
+    """Compile + audit every spec; returns (findings, suppressed)."""
+    findings: List[Finding] = []
+    for spec in specs:
+        if progress is not None:
+            progress(spec)
+        findings += audit_step(spec)
+    return split_allowlisted(findings)

@@ -1,0 +1,29 @@
+"""Committed allowlist for the static hot-path auditor.
+
+Every entry documents a KNOWN, understood exception to an audit rule.  An
+entry matches a finding when ``rule`` equals the finding's rule, ``where``
+is a substring of the finding's location (step-matrix cell or file:line),
+and ``match`` is a substring of the finding's detail text.  Matched
+findings are reported as *suppressed* — still printed by
+``scripts/audit_steps.py``, never counted toward the exit code.
+
+Keep this list SHORT and justified: an allowlist entry is a debt marker,
+not a mute button.  Adding one requires a ``reason`` naming why the
+violation is acceptable (or what tracked work removes it).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class AllowlistEntry:
+    rule: str  # audit rule name, exact match
+    where: str  # substring of the finding location
+    match: str  # substring of the finding detail
+    reason: str  # why this is acceptable (documentation, not decoration)
+
+
+ALLOWLIST: Tuple[AllowlistEntry, ...] = ()

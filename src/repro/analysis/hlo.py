@@ -29,20 +29,43 @@ import re
 from typing import Dict, List, Optional, Tuple
 
 DTYPE_BYTES = {
-    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
-    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
-    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
-    "token": 0, "opaque": 0,
+    "pred": 1,
+    "s4": 1,
+    "u4": 1,
+    "s8": 1,
+    "u8": 1,
+    "s16": 2,
+    "u16": 2,
+    "s32": 4,
+    "u32": 4,
+    "s64": 8,
+    "u64": 8,
+    "f8e4m3fn": 1,
+    "f8e5m2": 1,
+    "bf16": 2,
+    "f16": 2,
+    "f32": 4,
+    "f64": 8,
+    "c64": 8,
+    "c128": 16,
+    "token": 0,
+    "opaque": 0,
 }
 
-COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-               "collective-permute")
+COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
 
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 # op type may be a tuple "(s32[], bf16[..]{1,0}, /*index=5*/f32[...], ...)"
 # whose /*index=N*/ comments contain '=' — match balanced-paren-free body.
 _OP_RE = re.compile(
-    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\([^()]*\)|\S+)\s+([\w\-]+)\((.*)$")
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\([^()]*\)|\S+)\s+([\w\-]+)\((.*)$"
+)
 _COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->")
 _TRIP_RE = re.compile(r'known_trip_count[^0-9]*"?n"?[^0-9]*(\d+)')
 
@@ -98,14 +121,26 @@ class HLOCost:
 
 
 _SKIP_BYTES = {
-    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
-    "after-all", "partition-id", "replica-id", "while", "fusion-skip",
-    "conditional", "call", "custom-call-skip",
+    "parameter",
+    "constant",
+    "tuple",
+    "get-tuple-element",
+    "bitcast",
+    "after-all",
+    "partition-id",
+    "replica-id",
+    "while",
+    "fusion-skip",
+    "conditional",
+    "call",
+    "custom-call-skip",
     # 'convert' is free: on TPU dtype converts fuse into producers/consumers;
     # on the CPU lowering they additionally appear as float-normalization
     # artifacts (bf16 ops sandwiched in f32 converts) that do not exist in
     # the TPU executable.  See EXPERIMENTS.md §Methodology.
-    "convert", "copy-done", "copy-start",
+    "convert",
+    "copy-done",
+    "copy-start",
 }
 
 # Ops whose HBM traffic is the SLICE they move, not the buffer they index:
@@ -113,8 +148,14 @@ _SKIP_BYTES = {
 #   dynamic-update-slice updates |update| bytes in place (read+write)
 # Counting the full operand would bill a 17 GB stacked decode cache once
 # per layer per step (~1000 GB/step phantom traffic).
-_SLICE_OPS = {"dynamic-slice", "dynamic-update-slice", "slice", "gather",
-              "scatter", "pad"}
+_SLICE_OPS = {
+    "dynamic-slice",
+    "dynamic-update-slice",
+    "slice",
+    "gather",
+    "scatter",
+    "pad",
+}
 
 
 def _parse_operands(argstr: str) -> List[str]:
@@ -200,8 +241,17 @@ def _while_trip_count(cond: Computation) -> Optional[int]:
     return None
 
 
-_TRANSPARENT_OPS = {"parameter", "convert", "bitcast", "reshape", "transpose",
-                    "copy", "tuple", "get-tuple-element", "constant"}
+_TRANSPARENT_OPS = {
+    "parameter",
+    "convert",
+    "bitcast",
+    "reshape",
+    "transpose",
+    "copy",
+    "tuple",
+    "get-tuple-element",
+    "constant",
+}
 
 
 def _transparent_comps(comps: Dict[str, Computation]) -> set:
@@ -220,8 +270,9 @@ def _transparent_comps(comps: Dict[str, Computation]) -> set:
 class _EffectiveShapes:
     """Resolve an op name to the type it would have without convert shims."""
 
-    def __init__(self, comp: Computation, comps: Dict[str, Computation],
-                 transparent: set):
+    def __init__(
+        self, comp: Computation, comps: Dict[str, Computation], transparent: set
+    ):
         self.comp, self.comps, self.transparent = comp, comps, transparent
         self.memo: Dict[str, str] = {}
 
@@ -240,8 +291,7 @@ class _EffectiveShapes:
                         # shim fusion: effective type = its largest operand
                         ts = [self.type_of(o, depth + 1) for o in op.operands]
                         t = max(ts, key=_shape_bytes, default=t)
-                elif any(op.opcode.startswith(c) for c in COLLECTIVES) \
-                        and op.operands:
+                elif any(op.opcode.startswith(c) for c in COLLECTIVES) and op.operands:
                     # own dims, operand's effective dtype (a gather of a
                     # convert-shimmed tensor moves bf16 on TPU)
                     src = self.type_of(op.operands[0], depth + 1)
@@ -255,8 +305,9 @@ class _EffectiveShapes:
         return _shape_bytes(self.type_of(name))
 
 
-def _fusion_dus_update_bytes(op: Op, comp: Computation,
-                             comps: Dict[str, Computation]) -> Optional[float]:
+def _fusion_dus_update_bytes(
+    op: Op, comp: Computation, comps: Dict[str, Computation]
+) -> Optional[float]:
     """If ``op`` is a fusion whose body performs a dynamic-update-slice of a
     loop-carried buffer, charge 2x the update slice (in-place read+write on
     TPU), not the full buffer."""
@@ -274,9 +325,9 @@ def _fusion_dus_update_bytes(op: Op, comp: Computation,
     return total
 
 
-def _fusion_operand_bytes(op: Op, comp: Computation,
-                          comps: Dict[str, Computation],
-                          eff: "_EffectiveShapes") -> float:
+def _fusion_operand_bytes(
+    op: Op, comp: Computation, comps: Dict[str, Computation], eff: "_EffectiveShapes"
+) -> float:
     """Fusion traffic = output + Σ operands, EXCEPT operands the fusion body
     consumes only through (dynamic-)slice ops: those read the slice, not
     the buffer (in-loop reads of stacked scan inputs — the weight/cache
@@ -288,12 +339,19 @@ def _fusion_operand_bytes(op: Op, comp: Computation,
     for idx, o in enumerate(op.operands):
         charged = None
         if inner is not None:
-            pname = next((p.name for p in inner.ops if p.opcode == "parameter"
-                          and p.attrs.startswith(f"{idx})")), None)
+            pname = next(
+                (
+                    p.name
+                    for p in inner.ops
+                    if p.opcode == "parameter" and p.attrs.startswith(f"{idx})")
+                ),
+                None,
+            )
             if pname is not None:
                 users = [u for u in inner.ops if pname in u.operands]
-                if users and all(u.opcode in ("dynamic-slice", "slice")
-                                 for u in users):
+                if users and all(
+                    u.opcode in ("dynamic-slice", "slice") for u in users
+                ):
                     charged = sum(_shape_bytes(u.type_str) for u in users)
         total += charged if charged is not None else eff.bytes_of(o)
     return total
@@ -316,7 +374,7 @@ def analyze(text: str, num_partitions: int = 1) -> HLOCost:
                 body = re.search(r"body=%?([\w.\-]+)", op.attrs)
                 cond = re.search(r"condition=%?([\w.\-]+)", op.attrs)
                 trip = None
-                m_trip = _TRIP_RE.search(op.attrs)   # XLA backend_config
+                m_trip = _TRIP_RE.search(op.attrs)  # XLA backend_config
                 if m_trip:
                     trip = int(m_trip.group(1))
                 if trip is None and cond and cond.group(1) in comps:
@@ -377,13 +435,17 @@ def analyze(text: str, num_partitions: int = 1) -> HLOCost:
                 out_elems = 1
                 for d in out_dims:
                     out_elems *= d
-                rhs_type = comp.shapes.get(op.operands[1], "") if len(op.operands) > 1 else ""
+                rhs_type = (
+                    comp.shapes.get(op.operands[1], "") if len(op.operands) > 1 else ""
+                )
                 _, rhs_dims = _shape_dims(rhs_type)
                 kern = 1
                 for d in rhs_dims[:-1]:
                     kern *= d
                 cost.flops += k * 2.0 * out_elems * kern
-            if op.opcode in COLLECTIVES or any(op.opcode.startswith(c + "-") for c in COLLECTIVES):
+            if op.opcode in COLLECTIVES or any(
+                op.opcode.startswith(c + "-") for c in COLLECTIVES
+            ):
                 base = next(c for c in COLLECTIVES if op.opcode.startswith(c))
                 # pre-convert sizes: on TPU the gathered tensor stays bf16
                 operand_bytes = sum(eff.bytes_of(o) for o in op.operands)
@@ -398,22 +460,25 @@ def analyze(text: str, num_partitions: int = 1) -> HLOCost:
                 traffic = k * operand_bytes * factor
                 cost.collective_bytes += traffic
                 cost.collective_raw_operand_bytes += k * operand_bytes
-                cost.collective_by_kind[base] = cost.collective_by_kind.get(base, 0.0) + traffic
+                cost.collective_by_kind[base] = (
+                    cost.collective_by_kind.get(base, 0.0) + traffic
+                )
             if scheduled and op.opcode not in _SKIP_BYTES:
                 if op.opcode in _SLICE_OPS:
                     if op.opcode == "dynamic-update-slice":
-                        upd = eff.bytes_of(op.operands[1]) \
-                            if len(op.operands) > 1 else 0
-                        b = 2 * upd                      # read+write the slice
+                        upd = (
+                            eff.bytes_of(op.operands[1]) if len(op.operands) > 1 else 0
+                        )
+                        b = 2 * upd  # read+write the slice
                     elif op.opcode == "scatter":
                         upd = eff.bytes_of(op.operands[-1]) if op.operands else 0
                         b = 2 * upd
-                    else:                                # ds/slice/gather/pad
+                    else:  # ds/slice/gather/pad
                         b = 2 * _shape_bytes(op.type_str)
                 elif op.opcode == "fusion":
                     mm = re.search(r"calls=%?([\w.\-]+)", op.attrs)
                     if mm and mm.group(1) in transparent:
-                        b = 0                            # dtype/layout shim
+                        b = 0  # dtype/layout shim
                     else:
                         dus_b = _fusion_dus_update_bytes(op, comp, comps)
                         if dus_b is not None:
@@ -422,7 +487,8 @@ def analyze(text: str, num_partitions: int = 1) -> HLOCost:
                             b = _fusion_operand_bytes(op, comp, comps, eff)
                 else:
                     b = eff.bytes_of(op.name) + sum(
-                        eff.bytes_of(o) for o in op.operands)
+                        eff.bytes_of(o) for o in op.operands
+                    )
                 cost.bytes += k * b
     return cost
 

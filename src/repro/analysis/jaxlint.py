@@ -1,0 +1,413 @@
+"""jaxlint: an AST pass over ``src/repro`` catching JAX footguns that
+neither the type checker nor the test suite sees.
+
+Rules (each finding carries file:line):
+
+  JL001 prng-key-reuse      — the same PRNG key variable is consumed by
+        two ``jax.random`` sampling calls on one control-flow path
+        without being re-split or re-bound in between.  Reused keys
+        silently correlate the two draws (same stream), which corrupts
+        sampling-based evals without failing anything.
+  JL002 tracer-python-if    — a Python ``if``/``while``/``assert`` whose
+        test calls a jnp array-reducing function (``jnp.any``/``all``/
+        ``max``/...) inside a jitted function.  Under jit this either
+        raises a ConcretizationTypeError at trace time or, worse, bakes
+        one branch in forever when the value happens to be concrete.
+  JL003 captured-mutation   — a function decorated with ``jax.jit`` (or
+        ``functools.partial(jax.jit, ...)``) assigns to / mutates a name
+        captured from an enclosing scope.  The mutation runs ONCE at
+        trace time, then never again — classic silent-staleness.
+  JL004 use-after-donation  — a buffer passed in a donated position of a
+        literal ``jax.jit(f, donate_argnums=...)(...)`` call is read
+        again afterwards without rebinding.  Donated buffers are
+        deleted; the read raises at runtime only on the paths that
+        hit it.
+
+The pass is deliberately first-order: it tracks plain ``Name`` nodes
+within one function scope (branch bodies checked independently, nested
+scopes excluded), preferring false negatives over noisy false positives —
+every finding it emits should be worth reading.  Known exceptions go in
+``audit_allowlist``.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+from .audit import Finding
+
+# jax.random callables that CONSUME a key passed as first argument.
+# fold_in/split derive fresh keys and are the sanctioned way to re-use.
+_KEY_CONSUMERS = {
+    "ball",
+    "bernoulli",
+    "beta",
+    "categorical",
+    "cauchy",
+    "choice",
+    "dirichlet",
+    "exponential",
+    "gamma",
+    "gumbel",
+    "laplace",
+    "logistic",
+    "maxwell",
+    "multivariate_normal",
+    "normal",
+    "pareto",
+    "permutation",
+    "poisson",
+    "rademacher",
+    "randint",
+    "truncated_normal",
+    "uniform",
+}
+
+# jnp reductions that return arrays (tracers under jit), not Python bools.
+_ARRAY_REDUCERS = {"any", "all", "max", "min", "sum", "prod", "mean", "isnan"}
+
+_SCOPE_NODES = (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)
+
+
+def _walk_shallow(node: ast.AST) -> Iterator[ast.AST]:
+    """``ast.walk`` that does not descend into nested function/class
+    scopes (they are linted as their own scopes)."""
+    stack: List[ast.AST] = [node]
+    while stack:
+        n = stack.pop()
+        yield n
+        for c in ast.iter_child_nodes(n):
+            if isinstance(c, _SCOPE_NODES):
+                continue
+            stack.append(c)
+
+
+def _call_name(node: ast.Call) -> Tuple[str, str]:
+    """('jax.random', 'normal') style (module-path, attr) best effort."""
+    f = node.func
+    parts: List[str] = []
+    while isinstance(f, ast.Attribute):
+        parts.append(f.attr)
+        f = f.value
+    if isinstance(f, ast.Name):
+        parts.append(f.id)
+    parts.reverse()
+    if not parts:
+        return "", ""
+    return ".".join(parts[:-1]), parts[-1]
+
+
+def _name_of(node: ast.expr) -> str:
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = _name_of(node.value)
+        return f"{base}.{node.attr}" if base else node.attr
+    return ""
+
+
+def _is_jit_decorator(dec: ast.expr) -> bool:
+    """jax.jit / jit / jax.jit(...) / functools.partial(jax.jit, ...)."""
+    if isinstance(dec, ast.Call):
+        _, attr = _call_name(dec)
+        if attr == "jit":
+            return True
+        if attr == "partial":
+            return any(
+                isinstance(a, (ast.Attribute, ast.Name))
+                and _name_of(a).endswith("jit")
+                for a in dec.args
+            )
+        return False
+    return _name_of(dec).endswith("jit")
+
+
+def _rebound_names(stmt: ast.stmt) -> List[str]:
+    """Names (re)bound anywhere inside ``stmt`` — assignment targets,
+    loop variables, with-as targets."""
+    out: List[str] = []
+    for node in _walk_shallow(stmt):
+        if isinstance(node, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            targets = (
+                node.targets if isinstance(node, ast.Assign) else [node.target]
+            )
+            for t in targets:
+                for n in ast.walk(t):
+                    if isinstance(n, ast.Name):
+                        out.append(n.id)
+        elif isinstance(node, (ast.For, ast.AsyncFor)):
+            for n in ast.walk(node.target):
+                if isinstance(n, ast.Name):
+                    out.append(n.id)
+        elif isinstance(node, ast.comprehension):
+            for n in ast.walk(node.target):
+                if isinstance(n, ast.Name):
+                    out.append(n.id)
+        elif isinstance(node, ast.withitem) and node.optional_vars is not None:
+            for n in ast.walk(node.optional_vars):
+                if isinstance(n, ast.Name):
+                    out.append(n.id)
+    return out
+
+
+def _branch_bodies(stmt: ast.stmt) -> List[Sequence[ast.stmt]]:
+    """The independent statement lists of a compound statement."""
+    bodies: List[Sequence[ast.stmt]] = []
+    for attr in ("body", "orelse", "finalbody"):
+        sub = getattr(stmt, attr, None)
+        if sub:
+            bodies.append(sub)
+    for h in getattr(stmt, "handlers", []) or []:
+        bodies.append(h.body)
+    return bodies
+
+
+def _donated_positions(call: ast.Call) -> Optional[List[int]]:
+    """For ``jax.jit(f, donate_argnums=(...))(...)`` style calls, the
+    donated positions; None when the callee is not a literal jitted fn."""
+    if not isinstance(call.func, ast.Call):
+        return None
+    _, attr = _call_name(call.func)
+    if attr != "jit":
+        return None
+    for kw in call.func.keywords:
+        if kw.arg == "donate_argnums":
+            if isinstance(kw.value, (ast.Tuple, ast.List)):
+                out = []
+                for e in kw.value.elts:
+                    if isinstance(e, ast.Constant) and isinstance(e.value, int):
+                        out.append(e.value)
+                return out
+            if isinstance(kw.value, ast.Constant) and isinstance(
+                kw.value.value, int
+            ):
+                return [kw.value.value]
+    return None
+
+
+class _ScopeLint:
+    """Lints one function body (or the module top level) first-order."""
+
+    def __init__(self, path: str, findings: List[Finding]):
+        self.path = path
+        self.findings = findings
+
+    def _emit(self, rule: str, line: int, detail: str):
+        self.findings.append(
+            Finding("jaxlint", f"{self.path}:{line}", f"{rule} {detail}")
+        )
+
+    # --- JL001 ------------------------------------------------------------
+    def check_key_reuse(
+        self, body: Sequence[ast.stmt], consumed: Optional[Dict[str, int]] = None
+    ):
+        """Track key consumption along straight-line paths; compound
+        statements are recursed branch-by-branch with a copy of the state
+        (consumption in one branch never taints a sibling branch)."""
+        consumed = dict(consumed or {})
+        for stmt in body:
+            if isinstance(stmt, _SCOPE_NODES):
+                continue
+            branches = _branch_bodies(stmt)
+            if branches:
+                for name in _rebound_names(stmt):
+                    consumed.pop(name, None)
+                for sub in branches:
+                    self.check_key_reuse(sub, consumed)
+                continue
+            for name in _rebound_names(stmt):
+                consumed.pop(name, None)
+            calls = [
+                n for n in _walk_shallow(stmt) if isinstance(n, ast.Call)
+            ]
+            for node in sorted(calls, key=lambda n: (n.lineno, n.col_offset)):
+                mod, attr = _call_name(node)
+                if attr not in _KEY_CONSUMERS or "random" not in mod:
+                    continue
+                if not node.args or not isinstance(node.args[0], ast.Name):
+                    continue
+                key = node.args[0].id
+                if key in consumed:
+                    self._emit(
+                        "JL001",
+                        node.lineno,
+                        f"PRNG key `{key}` consumed at line {consumed[key]} "
+                        f"is reused by jax.random.{attr} — split or fold_in "
+                        "between draws",
+                    )
+                else:
+                    consumed[key] = node.lineno
+
+    # --- JL002 ------------------------------------------------------------
+    def check_tracer_branch(self, body: Sequence[ast.stmt], in_jit: bool):
+        if not in_jit:
+            return
+        for stmt in body:
+            if isinstance(stmt, _SCOPE_NODES):
+                continue
+            for node in _walk_shallow(stmt):
+                test = None
+                if isinstance(node, (ast.If, ast.While, ast.Assert)):
+                    test = node.test
+                if test is None:
+                    continue
+                for sub in ast.walk(test):
+                    if not isinstance(sub, ast.Call):
+                        continue
+                    mod, attr = _call_name(sub)
+                    base = mod.split(".")[-1] if mod else ""
+                    if attr in _ARRAY_REDUCERS and base in ("jnp", "numpy"):
+                        self._emit(
+                            "JL002",
+                            node.lineno,
+                            f"Python branch on `{mod}.{attr}(...)` inside a "
+                            "jitted function — a tracer is not a bool; use "
+                            "lax.cond / jnp.where",
+                        )
+
+    # --- JL003 ------------------------------------------------------------
+    def check_captured_mutation(self, fn: ast.FunctionDef):
+        local = set()
+        args = fn.args
+        for a in args.args + args.kwonlyargs + args.posonlyargs:
+            local.add(a.arg)
+        if args.vararg:
+            local.add(args.vararg.arg)
+        if args.kwarg:
+            local.add(args.kwarg.arg)
+        for node in _walk_shallow(fn):
+            if isinstance(node, (ast.Assign, ast.AnnAssign)):
+                targets = (
+                    node.targets
+                    if isinstance(node, ast.Assign)
+                    else [node.target]
+                )
+                for t in targets:
+                    if isinstance(t, ast.Name):
+                        local.add(t.id)
+            elif isinstance(node, (ast.For, ast.AsyncFor)):
+                for n in ast.walk(node.target):
+                    if isinstance(n, ast.Name):
+                        local.add(n.id)
+        mutated: List[Tuple[str, int, str]] = []
+        for node in _walk_shallow(fn):
+            if isinstance(node, (ast.Global, ast.Nonlocal)):
+                for name in node.names:
+                    mutated.append((name, node.lineno, "global/nonlocal"))
+            elif isinstance(node, ast.AugAssign) and isinstance(
+                node.target, ast.Name
+            ):
+                if node.target.id not in local:
+                    mutated.append(
+                        (node.target.id, node.lineno, "augmented-assign")
+                    )
+            elif isinstance(node, ast.Call):
+                _, attr = _call_name(node)
+                if attr in ("append", "extend", "update", "add") and isinstance(
+                    node.func, ast.Attribute
+                ):
+                    base = node.func.value
+                    if isinstance(base, ast.Name) and base.id not in local:
+                        mutated.append((base.id, node.lineno, f".{attr}()"))
+            elif isinstance(node, ast.Assign):
+                for t in node.targets:
+                    if isinstance(t, ast.Subscript) and isinstance(
+                        t.value, ast.Name
+                    ):
+                        if t.value.id not in local:
+                            mutated.append(
+                                (t.value.id, node.lineno, "subscript-assign")
+                            )
+        for name, line, how in mutated:
+            self._emit(
+                "JL003",
+                line,
+                f"jitted `{fn.name}` mutates captured `{name}` ({how}) — "
+                "runs once at trace time, never per call",
+            )
+
+    # --- JL004 ------------------------------------------------------------
+    def check_use_after_donation(self, body: Sequence[ast.stmt]):
+        donated: Dict[str, int] = {}
+        for stmt in body:
+            if isinstance(stmt, _SCOPE_NODES):
+                continue
+            if donated:
+                for node in _walk_shallow(stmt):
+                    if (
+                        isinstance(node, ast.Name)
+                        and isinstance(node.ctx, ast.Load)
+                        and node.id in donated
+                    ):
+                        self._emit(
+                            "JL004",
+                            node.lineno,
+                            f"`{node.id}` was donated at line "
+                            f"{donated[node.id]} and read again — donated "
+                            "buffers are deleted; rebind the result",
+                        )
+                        donated.pop(node.id)
+            rebound = _rebound_names(stmt)
+            for name in rebound:
+                donated.pop(name, None)
+            for node in _walk_shallow(stmt):
+                if isinstance(node, ast.Call):
+                    pos = _donated_positions(node)
+                    if not pos:
+                        continue
+                    for p in pos:
+                        if p < len(node.args) and isinstance(
+                            node.args[p], ast.Name
+                        ):
+                            name = node.args[p].id
+                            if name not in rebound:
+                                donated[name] = node.lineno
+
+
+def lint_source(source: str, path: str = "<string>") -> List[Finding]:
+    """Lint one module's source text; findings carry ``path:line``."""
+    findings: List[Finding] = []
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as e:
+        return [
+            Finding(
+                "jaxlint", f"{path}:{e.lineno}", f"JL000 syntax error: {e.msg}"
+            )
+        ]
+
+    scopes: List[Tuple[Sequence[ast.stmt], Optional[ast.AST], bool]] = [
+        (tree.body, None, False)
+    ]
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            jitted = any(_is_jit_decorator(d) for d in node.decorator_list)
+            scopes.append((node.body, node, jitted))
+
+    lint = _ScopeLint(path, findings)
+    for body, fn, jitted in scopes:
+        lint.check_key_reuse(body)
+        lint.check_tracer_branch(body, in_jit=jitted)
+        lint.check_use_after_donation(body)
+        if jitted and isinstance(fn, ast.FunctionDef):
+            lint.check_captured_mutation(fn)
+    return findings
+
+
+def lint_file(path: str) -> List[Finding]:
+    with open(path, "r", encoding="utf-8") as f:
+        return lint_source(f.read(), path)
+
+
+def lint_tree(root: str) -> List[Finding]:
+    """Lint every ``.py`` file under ``root`` (deterministic order)."""
+    findings: List[Finding] = []
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames.sort()
+        dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+        for name in sorted(filenames):
+            if name.endswith(".py"):
+                findings += lint_file(os.path.join(dirpath, name))
+    return findings

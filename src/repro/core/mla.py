@@ -33,7 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -353,7 +353,6 @@ def mla_decode(params, cfg: MLAConfig, x_t, cache: Dict[str, Any], index,
     ckv_new, krope_new = _kv_latent(params, cfg, x, pos)
     cache = cachelib.update_latent(cache, ckv_new, krope_new, index)
     ckv_c, krope_c = cache["ckv"], cache["krope"]   # (B,S,Dl), (B,S,Dr)
-    Dl = cfg.kv_lora_rank
     S = ckv_c.shape[1]
     scale = cfg.qk_dim ** -0.5
 
@@ -422,7 +421,6 @@ def mla_decode_paged(params, cfg: MLAConfig, x_t, pool: Dict[str, Any],
     per request — tests/test_paged.py asserts allclose against per-request
     contiguous decode for every scheme.
     """
-    B = x_t.shape[0]
     lengths = jnp.asarray(lengths, jnp.int32)
     pos = lengths[:, None]                        # per-request positions
     x = x_t[:, None, :]

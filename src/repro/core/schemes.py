@@ -9,8 +9,6 @@ closed-form costs in ``repro.hwmodel.attention_costs`` and take argmin.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
-
 from .mla import MLAConfig
 
 

@@ -17,7 +17,7 @@ Conventions (matching the letter):
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict
 
 from ..core.mla import MLAConfig
 

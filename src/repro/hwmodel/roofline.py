@@ -9,12 +9,12 @@ Also hosts the three-term roofline used for the TPU dry-run report:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Optional
 
 from ..core.mla import MLAConfig
 from ..core.schemes import PlatformPoint
 from . import attention_costs as ac
-from .attention_costs import Cost, MHAConfig
+from .attention_costs import Cost
 from .platforms import EnergyModel
 
 

@@ -11,8 +11,6 @@ from __future__ import annotations
 import functools
 from typing import Optional
 
-import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as PS
 
 from .. import compat

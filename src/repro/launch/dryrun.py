@@ -18,7 +18,6 @@ import time
 import traceback
 from typing import Any, Dict, Optional
 
-import jax
 import jax.numpy as jnp
 
 from repro import compat, configs, models

@@ -90,6 +90,17 @@ Serving-flags summary (the paged runtime; all compose):
   --policy          serve     weight-sharding rules under --mesh
   --spec-k          0         speculative decoding draft window
   --draft           shallow:2 draft spec ('shallow:N' | 'self')
+
+Static audit (PR 6): every step factory this CLI dispatches to
+(decode/prefill/verify x gather/pallas x scheme, single-device and
+--mesh) is compiled — never run — by ``repro.analysis.audit`` and
+checked for donation aliasing, pool-gather byte budgets, dtype
+discipline, and roofline conformance against ``hwmodel``'s cost model
+(``make audit`` / the CI ``audit`` job; tolerance bands live in
+``analysis/audit.py:TOLERANCES``, suppressions in
+``analysis/audit_allowlist.py``).  A serve-path change that drops a
+donation or inflates pool traffic fails the gate before any benchmark
+notices.
 """
 from __future__ import annotations
 
@@ -209,12 +220,15 @@ def main():
             lambda: models.init_cache(cfg, args.batch, capacity, dtype)),
             args.batch, capacity)
 
-    key = jax.random.PRNGKey(args.seed + 1)
-    toks = jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab)
+    # independent streams for tokens and embeds: reusing one key would
+    # correlate the draws (jaxlint JL001, enforced by `make audit`)
+    tok_key, emb_key = jax.random.split(jax.random.PRNGKey(args.seed + 1))
+    toks = jax.random.randint(tok_key, (args.batch, args.prompt_len), 0,
+                              cfg.vocab)
     kw = {}
     if cfg.family in ("vlm", "encdec"):
         P = cfg.n_patches if cfg.family == "vlm" else cfg.n_frames
-        kw["embeds"] = jax.random.normal(key, (args.batch, P, cfg.d_model),
+        kw["embeds"] = jax.random.normal(emb_key, (args.batch, P, cfg.d_model),
                                          dtype) * 0.02
 
     t0 = time.time()

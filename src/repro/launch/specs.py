@@ -3,7 +3,7 @@ for every model input — weak-type-correct, shardable, zero allocation.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

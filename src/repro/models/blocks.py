@@ -12,7 +12,7 @@ scheme — the paper's runtime-selectable feature threads through here.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -22,7 +22,7 @@ from .. import compat
 from ..core import cache as cachelib
 from ..core import mla as mlalib
 from ..core.attention import gqa_attention, gqa_decode
-from ..core.chunked_attention import chunked_attention, chunked_attention_pairs
+from ..core.chunked_attention import chunked_attention_pairs
 from ..kernels import ops as kops
 from ..nn import layers as nl
 from ..nn.module import P

@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +24,7 @@ import jax.numpy as jnp
 from ..nn import layers as nl
 from ..nn import module as nnm
 from .blocks import Ctx, ZERO_AUX, sub_apply, sub_cache, sub_defs
-from .common import ModelConfig, Sub
+from .common import ModelConfig
 
 
 # ------------------------------------------------------------------ defs ---

@@ -17,7 +17,7 @@ recurrent weights.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
@@ -107,8 +107,6 @@ def mlstm_forward(params, cfg: ModelConfig, x, *, return_state: bool = False):
 
 def mlstm_step(params, cfg: ModelConfig, x_t, state):
     """x_t: (B, D); state {'C': (B,H,dh,dh), 'n': (B,H,dh)} (f32)."""
-    H = cfg.n_heads
-    dh = cfg.d_inner // H
     up = jnp.einsum("bd,dcj->bcj", x_t, params["up"].astype(x_t.dtype))
     x_m, z = up[:, 0], up[:, 1]
     q, k, v, log_f, i_g = _mlstm_qkvif(params, cfg, x_m)

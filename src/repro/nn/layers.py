@@ -5,7 +5,7 @@ dicts produced by ``module.init_params``.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -58,9 +58,6 @@ def make_rules(mesh: Mesh, *, mode: str = "train", cfg=None) -> Rules:
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     dp_axes = tuple(a for a in ("pod", "data") if a in axes)
     dp: Any = dp_axes if len(dp_axes) > 1 else dp_axes[0]
-    dp_size = 1
-    for a in dp_axes:
-        dp_size *= sizes[a]
     model_size = sizes.get("model", 1)
     rules: Rules = {
         "batch": dp,

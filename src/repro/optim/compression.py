@@ -16,7 +16,7 @@ deterministic.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -17,7 +17,6 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
 
 from .. import models
 from ..models.common import ModelConfig
-from ..nn import module as nnm
 from ..nn import sharding as shd
 from ..optim import AdamWConfig, adamw_update
 
@@ -161,7 +160,6 @@ def make_train_step(cfg: ModelConfig, mesh: Optional[Mesh], opt_cfg: AdamWConfig
     }
     if cfg.family in ("vlm", "encdec"):    # stub modality prefix
         batch_shard["embeds"] = NamedSharding(mesh, PS(dp, None, None))
-    metrics_shard = NamedSharding(mesh, PS())
     step_fn = jax.jit(
         step,
         in_shardings=(p_shard, opt_shard, batch_shard),

@@ -24,6 +24,14 @@ def pytest_configure(config):
         "force XLA_FLAGS=--xla_force_host_platform_device_count=8, and "
         "the suites' subprocess drivers force it themselves so plain "
         "`make test` covers them too")
+    config.addinivalue_line(
+        "markers",
+        "audit: static hot-path auditor suite — compiles (never executes) "
+        "every serve-step cell and checks donation/gather/dtype/roofline "
+        "invariants on the optimized HLO, plus the jaxlint AST pass and "
+        "injected-violation regressions; the CI `audit` job and `make "
+        "test-audit` run it as its own lane (mesh cells go through a "
+        "subprocess that forces 8 host devices itself)")
 
 
 @pytest.fixture

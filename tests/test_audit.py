@@ -1,0 +1,420 @@
+"""Static hot-path auditor lane: the clean conformance matrix, plus
+deliberately injected violations proving every audit actually fires.
+
+Compile-only — no step in here is ever executed.  The mesh matrix runs
+through scripts/audit_steps.py in a subprocess (it must force 8 host
+devices before jax initializes)."""
+import functools
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import audit, jaxlint
+from repro.analysis.audit_allowlist import AllowlistEntry
+
+pytestmark = pytest.mark.audit
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------- clean matrix --
+
+SINGLE_SPECS = audit.single_device_matrix()
+
+
+@pytest.fixture(scope="module")
+def compiled_cells():
+    """Compile-once cache shared by the matrix + injection tests."""
+    return {}
+
+
+def _get_cell(cache, spec, dtype=None):
+    key = (spec, str(dtype))
+    if key not in cache:
+        cache[key] = (
+            audit.compile_step(spec)
+            if dtype is None
+            else audit.compile_step(spec, dtype=dtype)
+        )
+    return cache[key]
+
+
+@pytest.mark.parametrize("spec", SINGLE_SPECS, ids=lambda s: s.where)
+def test_single_device_cell_clean(spec, compiled_cells):
+    cs = _get_cell(compiled_cells, spec)
+    rs = (
+        _get_cell(compiled_cells, spec, audit.ROOFLINE_DTYPE)
+        if audit.roofline_applicable(spec)
+        else None
+    )
+    findings = audit.audit_step(spec, compiled_step=cs, roofline_step=rs)
+    kept, _ = audit.split_allowlisted(findings)
+    assert kept == [], "\n".join(str(f) for f in kept)
+
+
+def test_mesh_matrix_clean_via_cli(tmp_path):
+    """The forced-8-device matrix through the CLI (fresh process so
+    XLA_FLAGS lands before jax init) — exit 0, no findings."""
+    out = tmp_path / "audit.json"
+    proc = subprocess.run(
+        [
+            sys.executable,
+            os.path.join(REPO, "scripts", "audit_steps.py"),
+            "--matrix",
+            "mesh",
+            "--no-lint",
+            "--json",
+            str(out),
+        ],
+        capture_output=True,
+        text=True,
+        timeout=1800,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    payload = json.loads(out.read_text())
+    assert payload["findings"] == []
+    assert len(payload["cells"]) == len(audit.mesh_matrix())
+
+
+def test_cli_exit_nonzero_on_finding(tmp_path):
+    """The CLI must fail loudly: lint a file with a known JL001 violation
+    via --lint-root and assert the non-zero exit."""
+    bad = tmp_path / "bad.py"
+    bad.write_text(
+        "import jax\n"
+        "key = jax.random.PRNGKey(0)\n"
+        "a = jax.random.normal(key, (2,))\n"
+        "b = jax.random.uniform(key, (2,))\n"
+    )
+    proc = subprocess.run(
+        [
+            sys.executable,
+            os.path.join(REPO, "scripts", "audit_steps.py"),
+            "--matrix",
+            "none",
+            "--lint",
+            "--lint-root",
+            str(tmp_path),
+        ],
+        capture_output=True,
+        text=True,
+        timeout=300,
+    )
+    assert proc.returncode == 1, proc.stdout + proc.stderr
+    assert "JL001" in proc.stdout
+
+
+# ------------------------------------------------------ injected: donation --
+
+
+def test_injected_donation_drop_detected():
+    """A donated buffer whose output is a DIFFERENT dtype cannot alias —
+    XLA silently copies.  The donation audit must catch exactly that."""
+    pool = {
+        "ckv": jnp.zeros((4, 8, 32), jnp.bfloat16),
+        "krope": jnp.zeros((4, 8, 8), jnp.bfloat16),
+    }
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def broken(p):
+        return jax.tree.map(lambda x: (x + 1).astype(jnp.float32), p)
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def fine(p):
+        return jax.tree.map(lambda x: x + 1, p)
+
+    ok = fine.lower(pool).compile()
+    assert audit.audit_donation(ok, pool, "fine") == []
+
+    bad = broken.lower(pool).compile()
+    findings = audit.audit_donation(bad, pool, "broken")
+    assert len(findings) == 2, [str(f) for f in findings]
+    assert all(f.rule == "donation" for f in findings)
+
+
+def test_real_step_donates_both_pool_leaves(compiled_cells):
+    """Regression for the production decode step: both pool leaves (ckv +
+    krope) must appear in input_output_alias — 2 entries, none dropped."""
+    spec = audit.StepSpec("decode", "gather", "seq")
+    cs = _get_cell(compiled_cells, spec)
+    header = cs.compiled.as_text().split("\n", 1)[0]
+    entries = audit._ALIAS_RE.findall(header)
+    assert len(entries) == len(jax.tree.leaves(cs.pool_tree)) == 2
+    assert cs.donation_warnings == []
+
+
+# -------------------------------------------------------- injected: gather --
+
+
+def test_injected_gather_detected(compiled_cells):
+    """The reference (gather) decode step audited under the pallas rule
+    must trip the budget — proof the gather audit sees the (B, S) view."""
+    spec = audit.StepSpec("decode", "gather", "seq")
+    cs = _get_cell(compiled_cells, spec)
+    findings = audit.audit_gather(cs.compiled, cs.pool_tree, cs.batch, spec.where)
+    assert findings, "reference gather path must exceed the pallas budget"
+    assert all(f.rule == "gather" for f in findings)
+    assert any("gather" in f.detail for f in findings)
+
+
+def test_gather_budget_scales_with_slack(compiled_cells):
+    """With an absurdly large slack the same cell passes — the threshold
+    is the block-size-derived budget, not a hardcoded op ban."""
+    spec = audit.StepSpec("decode", "gather", "seq")
+    cs = _get_cell(compiled_cells, spec)
+    assert (
+        audit.audit_gather(
+            cs.compiled, cs.pool_tree, cs.batch, spec.where, slack=10_000
+        )
+        == []
+    )
+
+
+# --------------------------------------------------------- injected: dtype --
+
+
+def test_injected_f32_pool_promotion_detected():
+    pool = audit_pool = {
+        "ckv": jnp.zeros((2, 129, 8, 32), jnp.bfloat16),
+    }
+
+    def promoted(p):
+        return jax.tree.map(lambda x: x.astype(jnp.float32) * 2.0, p)
+
+    jaxpr = jax.make_jaxpr(promoted)(audit_pool)
+    findings = audit.audit_dtypes(jaxpr, pool, "promoted")
+    assert any("f32" in f.detail and f.rule == "dtype" for f in findings)
+
+    def clean(p):
+        return jax.tree.map(lambda x: x * 2.0, p)
+
+    jaxpr = jax.make_jaxpr(clean)(audit_pool)
+    assert audit.audit_dtypes(jaxpr, pool, "clean") == []
+
+
+def test_injected_f64_hlo_text_detected():
+    pool = {"ckv": jnp.zeros((2, 4, 8, 32), jnp.bfloat16)}
+    jaxpr = jax.make_jaxpr(lambda p: jax.tree.map(lambda x: x * 2, p))(pool)
+    findings = audit.audit_dtypes(
+        jaxpr, pool, "f64", hlo_text="ROOT %r = f64[128]{0} parameter(0)"
+    )
+    assert any("f64" in f.detail for f in findings)
+
+
+# ------------------------------------------------------ injected: roofline --
+
+
+def test_injected_cost_skew_breaches_tolerance(compiled_cells):
+    """Skewing a byte term and a FLOP term of the model by >2x must push
+    the calibrated ratio out of its committed band."""
+    spec = audit.StepSpec("decode", "gather", "seq")
+    rs = _get_cell(compiled_cells, spec, audit.ROOFLINE_DTYPE)
+    clean = audit.audit_roofline(rs.compiled, spec, spec.where)
+    assert clean == [], [str(f) for f in clean]
+    skew_bytes = audit.audit_roofline(
+        rs.compiled, spec, spec.where, term_scale={"w_mlp": 6.0}
+    )
+    assert any("bytes" in f.detail for f in skew_bytes)
+    skew_flops = audit.audit_roofline(
+        rs.compiled, spec, spec.where, term_scale={"mlp": 6.0}
+    )
+    assert any("flops" in f.detail for f in skew_flops)
+
+
+def test_roofline_all_four_schemes_decode(compiled_cells):
+    """Acceptance: conformance deltas for seq/rc/ru/naive all inside the
+    committed table on the decode step."""
+    for scheme in ("seq", "rc", "ru", "naive"):
+        spec = audit.StepSpec("decode", "gather", scheme)
+        rs = _get_cell(compiled_cells, spec, audit.ROOFLINE_DTYPE)
+        fs = audit.audit_roofline(rs.compiled, spec, spec.where)
+        assert fs == [], [str(f) for f in fs]
+
+
+# ------------------------------------------------------------- allowlist --
+
+
+def test_allowlist_suppresses_and_reports(monkeypatch):
+    f = audit.Finding("gather", "decode/pallas/seq/1dev", "moves 9999 elements")
+    kept, sup = audit.split_allowlisted([f])
+    assert kept == [f] and sup == []
+    monkeypatch.setattr(
+        audit,
+        "ALLOWLIST",
+        (
+            AllowlistEntry(
+                rule="gather",
+                where="decode/pallas",
+                match="9999",
+                reason="test entry",
+            ),
+        ),
+    )
+    kept, sup = audit.split_allowlisted([f])
+    assert kept == [] and sup == [f]
+
+
+# --------------------------------------------------------------- jaxlint --
+
+
+def _lint(src):
+    return jaxlint.lint_source(textwrap.dedent(src), "snippet.py")
+
+
+def test_jl001_key_reuse_fires_and_split_is_clean():
+    bad = _lint(
+        """
+        import jax
+        def f(seed):
+            key = jax.random.PRNGKey(seed)
+            a = jax.random.normal(key, (2,))
+            b = jax.random.uniform(key, (2,))
+            return a, b
+        """
+    )
+    assert any("JL001" in f.detail for f in bad)
+    good = _lint(
+        """
+        import jax
+        def f(seed):
+            k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+            a = jax.random.normal(k1, (2,))
+            b = jax.random.uniform(k2, (2,))
+            return a, b
+        """
+    )
+    assert good == []
+
+
+def test_jl001_exclusive_branches_do_not_fire():
+    """Draws in mutually exclusive if-branches share no path — the exact
+    pattern of nn.module._init_one that must stay clean."""
+    good = _lint(
+        """
+        import jax
+        def init(key, kind):
+            if kind == "normal":
+                return jax.random.normal(key, (2,))
+            if kind == "uniform":
+                return jax.random.uniform(key, (2,))
+            return jax.random.gumbel(key, (2,))
+        """
+    )
+    assert good == []
+
+
+def test_jl001_fold_in_rebind_is_clean():
+    good = _lint(
+        """
+        import jax
+        def f(key):
+            for i in range(3):
+                key = jax.random.fold_in(key, i)
+                x = jax.random.normal(key, (2,))
+            return x
+        """
+    )
+    assert good == []
+
+
+def test_jl002_tracer_branch_fires_only_under_jit():
+    bad = _lint(
+        """
+        import jax
+        import jax.numpy as jnp
+        @jax.jit
+        def f(x):
+            if jnp.any(x > 0):
+                return x
+            return -x
+        """
+    )
+    assert any("JL002" in f.detail for f in bad)
+    good = _lint(
+        """
+        import jax.numpy as jnp
+        def f(x):
+            if jnp.any(x > 0):
+                return x
+            return -x
+        """
+    )
+    assert good == []
+
+
+def test_jl003_captured_mutation_fires():
+    bad = _lint(
+        """
+        import jax
+        stats = []
+        @jax.jit
+        def f(x):
+            stats.append(1)
+            return x
+        """
+    )
+    assert any("JL003" in f.detail for f in bad)
+    good = _lint(
+        """
+        import jax
+        @jax.jit
+        def f(x):
+            acc = []
+            acc.append(1)
+            return x
+        """
+    )
+    assert good == []
+
+
+def test_jl004_use_after_donation_fires():
+    bad = _lint(
+        """
+        import jax
+        def f(step_fn, pool, tok):
+            out = jax.jit(step_fn, donate_argnums=(0,))(pool, tok)
+            return pool.sum() + out
+        """
+    )
+    assert any("JL004" in f.detail for f in bad)
+    good = _lint(
+        """
+        import jax
+        def f(step_fn, pool, tok):
+            pool = jax.jit(step_fn, donate_argnums=(0,))(pool, tok)
+            return pool
+        """
+    )
+    assert good == []
+
+
+def test_repo_tree_is_lint_clean():
+    """Regression for the serve.py PRNG-reuse fix: the whole src/repro
+    tree stays jaxlint-clean modulo the committed allowlist."""
+    findings = jaxlint.lint_tree(os.path.join(REPO, "src", "repro"))
+    kept, _ = audit.split_allowlisted(findings)
+    assert kept == [], "\n".join(str(f) for f in kept)
+
+
+def test_serve_old_key_reuse_pattern_would_fire():
+    """The exact shape of the bug fixed in launch/serve.py — guaranteed
+    to stay detectable."""
+    findings = _lint(
+        """
+        import jax
+        def main(args, cfg, dtype):
+            key = jax.random.PRNGKey(args.seed + 1)
+            toks = jax.random.randint(key, (2, 8), 0, cfg.vocab)
+            kw = {}
+            if cfg.family in ("vlm", "encdec"):
+                kw["embeds"] = jax.random.normal(key, (2, 4, 8), dtype)
+            return toks, kw
+        """
+    )
+    assert any("JL001" in f.detail for f in findings)

@@ -115,3 +115,126 @@ ENTRY %main (p: (s32[], f32[8])) -> (s32[], f32[8]) {
 """
     cost = hloa.analyze(txt)
     assert cost.while_trip_counts.get("w") == 7
+
+
+def test_unknown_trip_count_warns_and_defaults_to_one():
+    """A while whose condition has no static s32 limit (data-dependent
+    loop) must degrade to trip=1 WITH a warning — silent undercounting is
+    the exact failure mode this parser exists to prevent."""
+    txt = """
+HloModule m
+
+%body (t: (f32[], f32[8])) -> (f32[], f32[8]) {
+  %t = (f32[], f32[8]) parameter(0)
+  %l = f32[] get-tuple-element(%t), index=0
+  %x = f32[8]{0} get-tuple-element(%t), index=1
+  ROOT %r = (f32[], f32[8]) tuple(%l, %x)
+}
+
+%cond (t: (f32[], f32[8])) -> pred[] {
+  %t = (f32[], f32[8]) parameter(0)
+  %l = f32[] get-tuple-element(%t), index=0
+  %z = f32[] get-tuple-element(%t), index=0
+  ROOT %lt = pred[] compare(%l, %z), direction=LT
+}
+
+ENTRY %main (p: (f32[], f32[8])) -> (f32[], f32[8]) {
+  %p = (f32[], f32[8]) parameter(0)
+  ROOT %w = (f32[], f32[8]) while(%p), condition=%cond, body=%body
+}
+"""
+    cost = hloa.analyze(txt)
+    assert cost.while_trip_counts.get("w") == 1
+    assert any("unknown trip count" in w for w in cost.warnings)
+
+
+def test_tuple_typed_op_bytes_sum_components():
+    """Tuple-typed results (with the /*index=N*/ comments real HLO puts
+    inside them) must parse and bill the SUM of the component shapes."""
+    assert hloa._shape_bytes("(s32[], /*index=1*/f32[8]{0}, bf16[4,4]{1,0})") \
+        == 4 + 32 + 32
+    txt = """
+HloModule m
+
+ENTRY %main (p: f32[8]) -> (s32[], f32[8]) {
+  %p = f32[8]{0} parameter(0)
+  ROOT %cc = (s32[], /*index=1*/f32[8]{0}) custom-call(%p), custom_call_target="topk"
+}
+"""
+    comps = hloa.parse_computations(txt)
+    entry = comps["main"]
+    cc = entry.ops[-1]
+    assert cc.opcode == "custom-call" and cc.operands == ["p"]
+    # custom-call bytes = tuple output (4 + 32) + f32[8] operand (32)
+    assert hloa.analyze(txt).bytes == 68
+
+
+def test_scatter_charged_at_update_size():
+    """scatter moves 2x the UPDATE operand (read+write in place), never
+    the full indexed buffer."""
+    txt = """
+HloModule m
+
+ENTRY %main (p: f32[128,64]) -> f32[128,64] {
+  %p = f32[128,64]{1,0} parameter(0)
+  %i = s32[4,1]{1,0} parameter(1)
+  %u = f32[4,64]{1,0} parameter(2)
+  ROOT %sc = f32[128,64]{1,0} scatter(%p, %i, %u), update_window_dims={1}, to_apply=%missing
+}
+"""
+    # 2 * |update| = 2 * 4*64*4 B, NOT 2 * 128*64*4 B
+    assert hloa.analyze(txt).bytes == 2 * 4 * 64 * 4
+
+
+def test_pad_charged_at_output_not_operand_free():
+    txt = """
+HloModule m
+
+ENTRY %main (p: f32[128,64]) -> f32[132,64] {
+  %p = f32[128,64]{1,0} parameter(0)
+  %z = f32[] constant(0)
+  ROOT %pd = f32[132,64]{1,0} pad(%p, %z), padding=2_2x0_0
+}
+"""
+    assert hloa.analyze(txt).bytes == 2 * 132 * 64 * 4
+
+
+def test_effective_shapes_resolve_convert_chains():
+    """Converts are CPU float-normalization artifacts: an op consuming a
+    convert (even a chain of them) is billed at the pre-convert size."""
+    txt = """
+HloModule m
+
+ENTRY %main (p: bf16[64,64]) -> f64[64,64] {
+  %p = bf16[64,64]{1,0} parameter(0)
+  %c1 = f32[64,64]{1,0} convert(%p)
+  ROOT %c2 = f64[64,64]{1,0} convert(%c1)
+}
+"""
+    comps = hloa.parse_computations(txt)
+    entry = comps["main"]
+    eff = hloa._EffectiveShapes(entry, comps, hloa._transparent_comps(comps))
+    # both hops resolve back to the bf16 source: 64*64*2 bytes, not *4/*8
+    assert eff.bytes_of("c1") == 64 * 64 * 2
+    assert eff.bytes_of("c2") == 64 * 64 * 2
+    # and converts themselves are free, so the module bills zero traffic
+    assert hloa.analyze(txt).bytes == 0
+
+
+def test_transparent_fusion_shim_is_free():
+    """A fusion whose body only converts/reshapes is a dtype shim — its
+    scheduled-op traffic must be zero."""
+    txt = """
+HloModule m
+
+%shim (a: bf16[32,32]) -> f32[32,32] {
+  %a = bf16[32,32]{1,0} parameter(0)
+  ROOT %cv = f32[32,32]{1,0} convert(%a)
+}
+
+ENTRY %main (p: bf16[32,32]) -> f32[32,32] {
+  %p = bf16[32,32]{1,0} parameter(0)
+  ROOT %f = f32[32,32]{1,0} fusion(%p), kind=kLoop, calls=%shim
+}
+"""
+    assert hloa.analyze(txt).bytes == 0

@@ -207,7 +207,6 @@ def test_cache_pspecs_paged_pool_replicated():
     from jax.sharding import PartitionSpec as PS
 
     from repro import configs, models
-    from repro.nn import sharding as shd
     from repro.runtime.steps import cache_pspecs
 
     cfg = configs.smoke("deepseek-v2-236b")

@@ -3,7 +3,6 @@ reference; aux losses; drop accounting; shared experts."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.models import moe as moelib
 from repro.models.common import ModelConfig

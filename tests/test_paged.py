@@ -18,7 +18,7 @@ from repro.kernels import ref
 from repro.kernels.mla_decode import mla_decode_paged_kernel
 from repro.nn import module as nnm
 from repro.runtime import (BlockAllocator, ContinuousScheduler,
-                           PagedMLAEngine, Request, blocks_for,
+                           PagedMLAEngine, Request,
                            make_prefill_step, make_serve_step)
 from repro.runtime.scheduler import NULL_BLOCK
 

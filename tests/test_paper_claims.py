@@ -6,8 +6,6 @@ Fig 3 (ops/bytes): MLA_rc trades extra ops for fewer bytes vs MLA_ru
 Fig 4 (OI):        MHA flat-low; MLA_ru cache-dependent; MLA_rc high/stable
 Fig 5 (dispatch):  rc wins on compute-rich platforms, ru when compute-poor
 """
-import pytest
-
 from repro.core import mla as M
 from repro.core.schemes import PlatformPoint, auto_dispatch
 from repro.hwmodel import attention_costs as ac

@@ -304,7 +304,7 @@ def test_bad_impl_raises():
 def test_prefill_kernel_oracle_property():
     """Hypothesis-driven sweep: random pool geometry, scrambled tables,
     ragged lengths/n_valid and query tilings all agree with the oracle."""
-    hypothesis = pytest.importorskip(
+    pytest.importorskip(
         "hypothesis", reason="optional dev dep: property-based sweeps")
     from hypothesis import given, settings, strategies as st
 

@@ -249,7 +249,7 @@ def test_scheduler_refcount_invariants_seeded(seed):
 
 
 def test_scheduler_refcount_invariants_hypothesis():
-    hypothesis = pytest.importorskip(
+    pytest.importorskip(
         "hypothesis", reason="optional dev dep: property-based sweeps")
     from hypothesis import given, settings, strategies as st
 

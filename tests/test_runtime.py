@@ -1,6 +1,5 @@
 """Runtime: fault-tolerant loop (auto-resume bitwise equality, straggler
 re-dispatch), loss-goes-down integration, serve path."""
-import shutil
 import time
 
 import jax

@@ -1,6 +1,5 @@
 """Substrate tests: data pipeline, optimizer, compression, checkpointing."""
 import os
-import shutil
 
 import jax
 import jax.numpy as jnp
