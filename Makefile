@@ -71,8 +71,8 @@ test-fast:
 # `ruff check` runs the error-class rules everywhere; `ruff format
 # --check` is a RATCHET — FORMAT_PATHS lists the files already
 # formatted, grow it file by file as they are cleaned up.
-# Remaining outside the ratchet: benchmarks/bench_serving.py, tests/,
-# and src/repro/ outside analysis/.
+# Remaining outside the ratchet: tests/ and src/repro/ outside
+# analysis/.
 FORMAT_PATHS := \
 	benchmarks/bench_fig2_ordering.py \
 	benchmarks/bench_fig3_ops_mem.py \
@@ -80,6 +80,7 @@ FORMAT_PATHS := \
 	benchmarks/bench_fig5_throughput.py \
 	benchmarks/bench_fig6_energy.py \
 	benchmarks/bench_kernels.py \
+	benchmarks/bench_serving.py \
 	benchmarks/bench_table1_params.py \
 	benchmarks/check_regression.py \
 	benchmarks/common.py \
@@ -103,7 +104,9 @@ bench-serving:
 # regresses: prefix hit rate, prefill-token/block savings, bounded
 # prefill compiles, utilization vs the contiguous baseline, sharded-row
 # token parity + per-device paged-byte scaling, spec-decode parity +
-# acceptance + modeled amortization).
+# acceptance + modeled amortization, telemetry parity + trace validity +
+# roofline-drift coverage + disabled-mode overhead).  Artifacts include
+# trace_serving.json / metrics_serving.json / bench_drift.json.
 bench-smoke:
 	PYTHONPATH=src $(PY) benchmarks/bench_serving.py --requests 6 \
 		--max-batch 2 --block-size 8 --prefill-chunk 8 \

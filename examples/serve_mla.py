@@ -67,6 +67,22 @@ under greedy and seeded sampling; only the tokens-per-step ratio moves:
                          reference) | 'self' = identity-draft oracle
                          (acceptance is exactly 100%)
 
+PR 7 makes the whole run observable (repro.obs) — spans, metrics, and
+the roofline drift channel that checks the dispatch's own cost model
+against measured step times:
+
+  --trace PATH           Chrome/Perfetto trace-event JSON: per-request
+                         lifecycle spans (arrival -> queued -> prefill ->
+                         decode -> finish/preempt) on one track per
+                         request + per-step phase spans (schedule /
+                         prefill chunks / draft / verify / device_step /
+                         host_sample).  Open at https://ui.perfetto.dev.
+  --metrics PATH         metrics-registry JSON (counters, gauges,
+                         TTFT/TPOT/queue-delay/step-time histograms with
+                         p50/p95/p99 + the engine summary) and a printed
+                         table.  Either flag also records predicted-vs-
+                         measured drift per dispatched scheme.
+
 Serving-flags summary (all compose):
 
   flag              default   effect
@@ -82,6 +98,8 @@ Serving-flags summary (all compose):
   --mesh            ''        'DPxMP' sharded serving
   --spec-k          0         speculative decoding draft window
   --draft           shallow:2 draft spec ('shallow:N' | 'self')
+  --trace           ''        Perfetto trace-event JSON output path
+  --metrics         ''        metrics-registry JSON output path
 """
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -142,6 +160,12 @@ ap.add_argument("--spec-k", type=int, default=0,
                 help="speculative decoding draft window (0 = off)")
 ap.add_argument("--draft", default="shallow:2",
                 help="draft under --spec-k: 'shallow:N' | 'self'")
+ap.add_argument("--trace", default="",
+                help="write Perfetto trace-event JSON (request lifecycle "
+                     "+ step phase spans) to this path")
+ap.add_argument("--metrics", default="",
+                help="write metrics-registry JSON to this path and print "
+                     "the metrics table")
 ap.add_argument("--seed", type=int, default=0)
 args = ap.parse_args()
 
@@ -189,6 +213,11 @@ if args.spec_k:
     draft_cfg, draft_params = parse_draft_spec(args.draft, cfg, params)
     print(f"speculative decoding: k={args.spec_k}, draft={args.draft} "
           f"({draft_cfg.n_layers} of {cfg.n_layers} layers)")
+tel = None
+if args.trace or args.metrics:
+    from repro.obs import Telemetry
+    tel = Telemetry.on(trace=bool(args.trace), metrics=bool(args.metrics),
+                       drift=True)
 engine = PagedMLAEngine(cfg, params, num_blocks=args.num_blocks,
                         block_size=bs, max_batch=args.max_batch,
                         max_blocks_per_req=per_req,
@@ -202,7 +231,7 @@ engine = PagedMLAEngine(cfg, params, num_blocks=args.num_blocks,
                         temperature=args.temperature, top_k=args.top_k,
                         sample_seed=args.seed, mesh=mesh,
                         spec_k=args.spec_k, draft_cfg=draft_cfg,
-                        draft_params=draft_params)
+                        draft_params=draft_params, telemetry=tel)
 total_need = sum(blocks_for(r.plen + r.max_new + 1, bs) for r in reqs)
 print(f"\n{args.requests} requests (prompts 8-32, gen 4-19), pool "
       f"{args.num_blocks - 1} usable blocks x {bs} tokens "
@@ -240,6 +269,24 @@ if args.spec_k:
 print(f"  latency steps p50/max     : {int(np.median(lat))}/{int(max(lat))}")
 first = min(engine.sched.finished, key=lambda r: r.rid)
 print("first request's tokens:", np.asarray(first.output)[:16])
+
+if tel is not None:
+    tel.finalize(engine)
+    written = tel.export(trace_path=args.trace or None,
+                         metrics_path=args.metrics or None)
+    for channel, path in written.items():
+        print(f"telemetry: {channel} -> {path}")
+    if tel.metrics is not None:
+        ttft = tel.metrics.histogram("ttft_ms").summary()
+        print(f"  TTFT ms p50/p95           : {ttft.get('p50', 0):.1f}/"
+              f"{ttft.get('p95', 0):.1f}")
+        print(tel.metrics.render_table())
+    if tel.drift is not None and tel.drift.rows:
+        d = tel.drift.report()
+        print(f"roofline drift: {d['rows']} rows, time-ratio p50 "
+              f"{d['summary']['time_ratio_p50']:.3g} (CPU wall vs "
+              f"{plat.name} prediction), spread "
+              f"{d['summary']['spread']:.2f}")
 
 # latent-cache footprint vs dense-KV equivalent (the paper's Fig 3 point)
 lat_b = (mla.kv_lora_rank + mla.qk_rope_dim) * 2

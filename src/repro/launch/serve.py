@@ -74,6 +74,26 @@ Speculative decoding (PR 5) — composes with --paged and --mesh:
                       reference; default shallow:2) or 'self' (identity
                       draft, the 100%-acceptance oracle).
 
+Telemetry (PR 7) — composes with every paged flag:
+
+  --trace PATH        record per-request lifecycle spans (arrival ->
+                      queued -> prefill -> decode -> finish/preempt) and
+                      per-step phase spans (schedule / prefill chunks /
+                      draft / verify / device_step / host_sample) and
+                      write Chrome/Perfetto trace-event JSON to PATH
+                      (load it at https://ui.perfetto.dev or
+                      chrome://tracing).
+  --metrics PATH      write the metrics-registry JSON (counters, gauges,
+                      TTFT/TPOT/queue-delay/step-time histograms with
+                      p50/p95/p99, plus the engine summary verbatim) to
+                      PATH and print the human-readable table.  Either
+                      flag also arms the roofline drift channel: every
+                      step logs hwmodel-predicted vs measured time for
+                      the scheme it dispatched (repro.obs.drift).
+                      Off (the default) costs the hot path nothing
+                      measurable — the no-op tracer short-circuits
+                      before any formatting or allocation.
+
 Serving-flags summary (the paged runtime; all compose):
 
   flag              default   effect
@@ -90,6 +110,8 @@ Serving-flags summary (the paged runtime; all compose):
   --policy          serve     weight-sharding rules under --mesh
   --spec-k          0         speculative decoding draft window
   --draft           shallow:2 draft spec ('shallow:N' | 'self')
+  --trace           ''        Perfetto trace-event JSON output path
+  --metrics         ''        metrics-registry JSON output path
 
 Static audit (PR 6): every step factory this CLI dispatches to
 (decode/prefill/verify x gather/pallas x scheme, single-device and
@@ -170,6 +192,14 @@ def main():
                     help="draft model under --spec-k: 'shallow:N' = the "
                          "target's own first N layers (self-speculation) "
                          "| 'self' = identity draft (acceptance oracle)")
+    ap.add_argument("--trace", default="",
+                    help="write Chrome/Perfetto trace-event JSON (request "
+                         "lifecycle + step phase spans) to this path; "
+                         "requires --paged")
+    ap.add_argument("--metrics", default="",
+                    help="write metrics-registry JSON (counters/gauges/"
+                         "histograms + engine summary) to this path and "
+                         "print the table; requires --paged")
     args = ap.parse_args()
 
     cfg = configs.smoke(args.arch) if args.smoke else configs.full(args.arch)
@@ -183,6 +213,10 @@ def main():
     if args.spec_k:
         raise SystemExit("--spec-k requires --paged (the draft/verify "
                          "phases run on the paged runtime)")
+    if args.trace or args.metrics:
+        raise SystemExit("--trace/--metrics require --paged (the "
+                         "telemetry subsystem instruments the "
+                         "continuous-batching engine)")
 
     scheme = args.scheme
     if scheme == "auto":
@@ -285,6 +319,11 @@ def _serve_paged(args, cfg, params, dtype, mesh=None):
         draft_cfg, draft_params = parse_draft_spec(args.draft, cfg, params)
         print(f"[serve] speculative decoding: k={args.spec_k}, "
               f"draft={args.draft} ({draft_cfg.n_layers} layers)")
+    tel = None
+    if args.trace or args.metrics:
+        from repro.obs import Telemetry
+        tel = Telemetry.on(trace=bool(args.trace),
+                           metrics=bool(args.metrics), drift=True)
     engine = PagedMLAEngine(
         cfg, params, num_blocks=num_blocks, block_size=bs,
         max_batch=args.batch, max_blocks_per_req=per_req,
@@ -296,7 +335,8 @@ def _serve_paged(args, cfg, params, dtype, mesh=None):
         prefill_chunk=args.prefill_chunk or 32,
         temperature=args.temperature, top_k=args.top_k,
         sample_seed=args.seed, mesh=mesh, shard_policy=args.policy,
-        spec_k=args.spec_k, draft_cfg=draft_cfg, draft_params=draft_params)
+        spec_k=args.spec_k, draft_cfg=draft_cfg, draft_params=draft_params,
+        telemetry=tel)
     rng = np.random.default_rng(args.seed + 1)
     reqs = [Request(rid=i,
                     prompt=rng.integers(0, cfg.vocab,
@@ -327,6 +367,18 @@ def _serve_paged(args, cfg, params, dtype, mesh=None):
               f"{summary['spec_compiles']:.0f} spec compiles")
     first = min(engine.sched.finished, key=lambda r: r.rid)
     print("[serve] sample:", np.asarray(first.output[:16]))
+    if tel is not None:
+        tel.finalize(engine)
+        written = tel.export(trace_path=args.trace or None,
+                             metrics_path=args.metrics or None)
+        for channel, path in written.items():
+            print(f"[serve] telemetry: {channel} -> {path}")
+        if tel.metrics is not None:
+            print(tel.metrics.render_table())
+        if tel.drift is not None and tel.drift.rows:
+            d = tel.drift.report()["summary"]
+            print(f"[serve] roofline drift: time-ratio p50 "
+                  f"{d['time_ratio_p50']:.3g}, spread {d['spread']:.2f}")
 
 
 def _prepare_mla(params, cfg, scheme):

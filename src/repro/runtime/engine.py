@@ -52,6 +52,7 @@ from ..core import cache as cachelib
 from ..core import mla as mlalib
 from ..core.schemes import PlatformPoint, auto_dispatch
 from ..models.common import ModelConfig
+from ..obs import OFF_TELEMETRY, Telemetry, as_logger
 from . import spec as speclib
 from .scheduler import ContinuousScheduler, Request, blocks_for
 from .steps import (make_chunked_prefill_step, make_paged_serve_step,
@@ -124,7 +125,8 @@ class PagedMLAEngine:
                  sample_seed: int = 0,
                  mesh=None, shard_policy: str = "serve",
                  spec_k: int = 0, draft_cfg: Optional[ModelConfig] = None,
-                 draft_params=None):
+                 draft_params=None,
+                 telemetry: Optional[Telemetry] = None):
         if cfg.attn_kind != "mla":
             raise NotImplementedError("PagedMLAEngine requires an MLA model")
         if scheme == "auto" and platform is None:
@@ -270,7 +272,18 @@ class PagedMLAEngine:
         self._copy_block = jax.jit(cachelib.copy_block_paged,
                                    donate_argnums=(0,))
         self._last_scheme: Optional[str] = None
+        self._last_point = (1, 1)     # (batch, cache_len) of the last pick
         self.stats = EngineStats()
+        # -- telemetry (repro.obs): default is the no-op singleton, whose
+        # span() returns a shared null context manager — the instrumented
+        # hot path below costs one attribute check per site when off.
+        self.tel = telemetry if telemetry is not None else OFF_TELEMETRY
+        if self.tel.drift is not None and not self.tel.drift.active \
+                and platform is not None:
+            self.tel.drift.bind(mla=self.mla, platform=platform,
+                                paged_block=block_size, dp_shards=self._dp)
+        if self.tel.enabled:
+            self.sched.prefix.tel = self.tel
 
     # ------------------------------------------------------------ build ---
 
@@ -351,11 +364,14 @@ class PagedMLAEngine:
         return len(self._verify_steps) + (self._draft_decode_step is not None)
 
     def _pick_scheme(self, verify_k: int = 0) -> str:
+        active = self.sched.active_slots
+        cache_len = int(self.sched.lengths[active].max()) + 1 if active else 1
+        # the live dispatch point, kept for the roofline drift channel —
+        # predictions must be evaluated at the point the dispatch saw
+        self._last_point = (max(len(active), 1), cache_len)
         if self.scheme != "auto":
             self._last_scheme = self.scheme
             return self.scheme
-        active = self.sched.active_slots
-        cache_len = int(self.sched.lengths[active].max()) + 1 if active else 1
         s = auto_dispatch(self.mla, self.platform, cache_len=cache_len,
                           batch=max(len(active), 1),
                           paged_block=self.block_size,
@@ -433,6 +449,10 @@ class PagedMLAEngine:
         logits and register their blocks in the radix cache."""
         C = self.prefill_chunk
         step_fn = self._chunk_step(C)
+        tr = self.tel.tracer
+        drift = self.tel.drift if (self.tel.drift is not None
+                                   and self.tel.drift.active) else None
+        t_pf = time.perf_counter() if drift else 0.0
         pending = dict(admitted)
         fill = {slot: req.n_cached for slot, req in admitted}
         while pending:
@@ -450,19 +470,21 @@ class PagedMLAEngine:
                 if fill[slot] >= req.plen:
                     finishing.append((slot, req))
                     del pending[slot]
-            logits, self.pool = step_fn(
-                self.params, jnp.asarray(tokens), self.pool,
-                jnp.asarray(self.sched.block_table), jnp.asarray(lens),
-                jnp.asarray(nv))
-            if self.spec_k:
-                # the draft prefills the SAME chunk into its own pool, so
-                # a request can start drafting the moment it is admitted
-                # (prefix-cache hits skip both pools symmetrically: shared
-                # block ids carry valid latents in each)
-                _, self.draft_pool = self._draft_chunk_step(C)(
-                    self.draft_params, jnp.asarray(tokens),
-                    self.draft_pool, jnp.asarray(self.sched.block_table),
-                    jnp.asarray(lens), jnp.asarray(nv))
+            with tr.span("prefill_chunk"):
+                logits, self.pool = step_fn(
+                    self.params, jnp.asarray(tokens), self.pool,
+                    jnp.asarray(self.sched.block_table), jnp.asarray(lens),
+                    jnp.asarray(nv))
+                if self.spec_k:
+                    # the draft prefills the SAME chunk into its own pool,
+                    # so a request can start drafting the moment it is
+                    # admitted (prefix-cache hits skip both pools
+                    # symmetrically: shared block ids carry valid latents
+                    # in each)
+                    _, self.draft_pool = self._draft_chunk_step(C)(
+                        self.draft_params, jnp.asarray(tokens),
+                        self.draft_pool, jnp.asarray(self.sched.block_table),
+                        jnp.asarray(lens), jnp.asarray(nv))
             self.stats.prefill_tokens += int(nv.sum())
             self.stats.prefill_chunks += 1
             for slot, req in finishing:
@@ -471,6 +493,22 @@ class PagedMLAEngine:
                 self.sched.commit_prefill(slot)
                 if self.sched.record_prefill_sample(slot, tok, step_i) is None:
                     self.pending[slot] = tok
+        if drift:
+            # one drift row per admitted batch, over the whole chunk walk
+            # (the cost model predicts a full prompt's chunk sequence);
+            # measured time includes the finishing rows' first-token
+            # sampling — a constant overhead the stable-ratio gate absorbs
+            self._sync_device()
+            seq_len = max(req.plen for _, req in admitted)
+            cached = min(req.n_cached for _, req in admitted)
+            if seq_len > cached:
+                scheme = self.scheme if self.scheme in ("seq", "rc", "ru") \
+                    else "seq"
+                impl = "pallas" if self._chunk_impl() == "kernel" \
+                    else "gather"
+                drift.record_prefill(scheme, len(admitted), seq_len, C,
+                                     impl, time.perf_counter() - t_pf,
+                                     cached_prefix=cached)
 
     def _run_per_request_prefill(self, admitted, step_i: int) -> None:
         """PR-1's path: contiguous per-request prefill (bucketed capacities
@@ -493,63 +531,99 @@ class PagedMLAEngine:
     def submit(self, req: Request) -> None:
         self.sched.submit(req)
 
+    def _sync_device(self) -> None:
+        """Block until this tick's device work has retired.  jax dispatch
+        is asynchronous: without this barrier the step wall clock stops
+        while decode/prefill launches are still in flight and ``wall`` /
+        ``tokens_per_s`` measure dispatch, not compute (pinned by
+        tests/test_obs.py)."""
+        jax.block_until_ready(self.pool)
+        if self.draft_pool is not None:
+            jax.block_until_ready(self.draft_pool)
+
     def step(self) -> None:
         """One scheduler tick: admit + batched prefill, then one batched
         decode step over all slots."""
         t0 = time.perf_counter()
         step_i = self.stats.steps
         was_decoding = self.sched.n_active > 0
+        tr = self.tel.tracer
+        drift = self.tel.drift if (self.tel.drift is not None
+                                   and self.tel.drift.active) else None
 
-        # grow running requests BEFORE admitting: otherwise a just-admitted
-        # request could take the last blocks, get preempted immediately,
-        # and throw away the prefill it just paid for.
-        self.stats.preemptions += len(self.sched.ensure_step_capacity())
-        for src, dst in self.sched.drain_cow():
-            self.pool = self._copy_block(self.pool,
-                                         jnp.asarray(src, jnp.int32),
-                                         jnp.asarray(dst, jnp.int32))
-            if self.draft_pool is not None:
-                # block-level ops track both pools (same geometry/tables)
-                self.draft_pool = self._copy_block(
-                    self.draft_pool, jnp.asarray(src, jnp.int32),
-                    jnp.asarray(dst, jnp.int32))
+        with tr.span("step"):
+            with tr.span("schedule"):
+                # grow running requests BEFORE admitting: otherwise a
+                # just-admitted request could take the last blocks, get
+                # preempted immediately, and throw away the prefill it
+                # just paid for.
+                self.stats.preemptions += len(
+                    self.sched.ensure_step_capacity())
+                for src, dst in self.sched.drain_cow():
+                    self.pool = self._copy_block(self.pool,
+                                                 jnp.asarray(src, jnp.int32),
+                                                 jnp.asarray(dst, jnp.int32))
+                    if self.draft_pool is not None:
+                        # block-level ops track both pools (same
+                        # geometry/tables)
+                        self.draft_pool = self._copy_block(
+                            self.draft_pool, jnp.asarray(src, jnp.int32),
+                            jnp.asarray(dst, jnp.int32))
+                admitted = self.sched.try_admit(step_i)
+            for _, req in admitted:
+                self.stats.admissions += 1
+                self.stats.prompt_tokens += req.plen
+                if was_decoding:
+                    self.stats.mid_gen_admissions += 1
+            if admitted:
+                with tr.span("prefill"):
+                    if self.prefill_mode == "chunked":
+                        self._run_chunked_prefill(admitted, step_i)
+                    else:
+                        self._run_per_request_prefill(admitted, step_i)
 
-        admitted = self.sched.try_admit(step_i)
-        for _, req in admitted:
-            self.stats.admissions += 1
-            self.stats.prompt_tokens += req.plen
-            if was_decoding:
-                self.stats.mid_gen_admissions += 1
-        if admitted:
-            if self.prefill_mode == "chunked":
-                self._run_chunked_prefill(admitted, step_i)
-            else:
-                self._run_per_request_prefill(admitted, step_i)
+            active = self.sched.active_slots
+            if active and self.spec_k:
+                self._spec_round(active, step_i)
+            elif active:
+                scheme = self._pick_scheme()
+                self.stats.schemes_used[scheme] = \
+                    self.stats.schemes_used.get(scheme, 0) + 1
+                step_fn = self._decode_step(scheme)
+                t_dev = time.perf_counter() if drift else 0.0
+                with tr.span("device_step"):
+                    logits, self.pool = step_fn(
+                        self.params, jnp.asarray(self.pending),
+                        self.pool, jnp.asarray(self.sched.block_table),
+                        jnp.asarray(self.sched.lengths))
+                    jax.block_until_ready(self.pool)
+                if drift:
+                    b, cl = self._last_point
+                    drift.record_decode(scheme, b, cl,
+                                        time.perf_counter() - t_dev)
+                with tr.span("host_sample"):
+                    picks = self._sample_tokens(logits[jnp.asarray(active)],
+                                                active)
+                    self.sched.advance(picks, step_i)
+                for s, t in picks.items():
+                    self.pending[s] = t
+                self.stats.decode_tokens += len(active)
 
-        active = self.sched.active_slots
-        if active and self.spec_k:
-            self._spec_round(active, step_i)
-        elif active:
-            scheme = self._pick_scheme()
-            self.stats.schemes_used[scheme] = \
-                self.stats.schemes_used.get(scheme, 0) + 1
-            step_fn = self._decode_step(scheme)
-            logits, self.pool = step_fn(
-                self.params, jnp.asarray(self.pending),
-                self.pool, jnp.asarray(self.sched.block_table),
-                jnp.asarray(self.sched.lengths))
-            picks = self._sample_tokens(logits[jnp.asarray(active)], active)
-            self.sched.advance(picks, step_i)
-            for s, t in picks.items():
-                self.pending[s] = t
-            self.stats.decode_tokens += len(active)
-
-        u = self.sched.utilization()
-        self.stats.util_valid_sum += u["valid_frac"]
-        self.stats.util_pool_sum += u["pool_frac"]
-        self.stats.util_samples += 1
+            u = self.sched.utilization()
+            self.stats.util_valid_sum += u["valid_frac"]
+            self.stats.util_pool_sum += u["pool_frac"]
+            self.stats.util_samples += 1
+            # close the wall clock only after the device work dispatched
+            # this tick has retired — prefill-only and spec ticks return
+            # before the pool write lands otherwise
+            self._sync_device()
         self.stats.steps += 1
-        self.stats.wall += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        self.stats.wall += dt
+        if self.tel.metrics is not None:
+            m = self.tel.metrics
+            m.histogram("step_ms").record(dt * 1e3)
+            m.histogram("pool_occupancy").record(u["pool_frac"])
 
     # ------------------------------------------------ speculative round ----
 
@@ -588,6 +662,9 @@ class PagedMLAEngine:
         """
         k = self.spec_k
         B = self.sched.max_batch
+        tr = self.tel.tracer
+        drift = self.tel.drift if (self.tel.drift is not None
+                                   and self.tel.drift.active) else None
         nv = np.zeros((B,), np.int32)
         for s in active:
             nv[s] = self.sched._window(self.sched.slots[s])
@@ -597,33 +674,34 @@ class PagedMLAEngine:
         d_lens = self.sched.lengths.copy()
         bt = jnp.asarray(self.sched.block_table)
         d_step = self._draft_step()
-        for j in range(int(nv.max())):
-            d_logits, self.draft_pool = d_step(
-                self.draft_params, jnp.asarray(d_pending),
-                self.draft_pool, bt, jnp.asarray(d_lens))
-            if self.temperature <= 0.0:
-                prop = np.asarray(jnp.argmax(d_logits, axis=-1))
-            else:
-                # proposal at absolute position d_lens + 1 draws the same
-                # fold(rid, position) key the target uses to sample THAT
-                # position in verify — identical models propose identical
-                # tokens under seeded sampling
-                live = [s for s in active if j < nv[s] - 1]
-                prop = np.zeros((B,), np.int64)
-                if live:
-                    toks = self._sample_rows(
-                        d_logits[jnp.asarray(live)],
-                        [self.sched.slots[s].rid for s in live],
-                        [int(d_lens[s]) + 1 for s in live])
-                    for i, s in enumerate(live):
-                        prop[s] = toks[i]
-            for s in active:
-                if j < nv[s] - 1:
-                    drafts[s, j] = prop[s]
-                    self.stats.spec_drafted += 1
-                if j + 1 < nv[s]:        # still drafting next iteration
-                    d_pending[s] = prop[s]
-                    d_lens[s] += 1
+        with tr.span("draft"):
+            for j in range(int(nv.max())):
+                d_logits, self.draft_pool = d_step(
+                    self.draft_params, jnp.asarray(d_pending),
+                    self.draft_pool, bt, jnp.asarray(d_lens))
+                if self.temperature <= 0.0:
+                    prop = np.asarray(jnp.argmax(d_logits, axis=-1))
+                else:
+                    # proposal at absolute position d_lens + 1 draws the
+                    # same fold(rid, position) key the target uses to
+                    # sample THAT position in verify — identical models
+                    # propose identical tokens under seeded sampling
+                    live = [s for s in active if j < nv[s] - 1]
+                    prop = np.zeros((B,), np.int64)
+                    if live:
+                        toks = self._sample_rows(
+                            d_logits[jnp.asarray(live)],
+                            [self.sched.slots[s].rid for s in live],
+                            [int(d_lens[s]) + 1 for s in live])
+                        for i, s in enumerate(live):
+                            prop[s] = toks[i]
+                for s in active:
+                    if j < nv[s] - 1:
+                        drafts[s, j] = prop[s]
+                        self.stats.spec_drafted += 1
+                    if j + 1 < nv[s]:    # still drafting next iteration
+                        d_pending[s] = prop[s]
+                        d_lens[s] += 1
         # ---- 2. verify --------------------------------------------------
         tokens_v = np.zeros((B, k + 1), np.int32)
         for s in active:
@@ -632,34 +710,42 @@ class PagedMLAEngine:
         scheme = self._pick_scheme(verify_k=k)
         self.stats.schemes_used[scheme] = \
             self.stats.schemes_used.get(scheme, 0) + 1
-        logits_v, self.pool = self._verify_step(scheme)(
-            self.params, jnp.asarray(tokens_v), self.pool, bt,
-            jnp.asarray(self.sched.lengths), jnp.asarray(nv))
-        if self.temperature <= 0.0:
-            target = np.asarray(jnp.argmax(logits_v, axis=-1))   # (B, k+1)
-        else:
-            flat, rids, poss = [], [], []
+        t_v = time.perf_counter() if drift else 0.0
+        with tr.span("verify"):
+            logits_v, self.pool = self._verify_step(scheme)(
+                self.params, jnp.asarray(tokens_v), self.pool, bt,
+                jnp.asarray(self.sched.lengths), jnp.asarray(nv))
+            jax.block_until_ready(self.pool)
+        if drift:
+            b, cl = self._last_point
+            drift.record_verify(scheme, b, cl, k,
+                                time.perf_counter() - t_v)
+        with tr.span("host_sample"):
+            if self.temperature <= 0.0:
+                target = np.asarray(jnp.argmax(logits_v, axis=-1))  # (B, k+1)
+            else:
+                flat, rids, poss = [], [], []
+                for s in active:
+                    req = self.sched.slots[s]
+                    base = req.plen + len(req.tokens)  # abs pos, next sample
+                    for j in range(int(nv[s])):
+                        flat.append((s, j))
+                        rids.append(req.rid)
+                        poss.append(base + j)
+                rows = logits_v[jnp.asarray([s for s, _ in flat]),
+                                jnp.asarray([j for _, j in flat])]
+                toks = self._sample_rows(rows, rids, poss)
+                target = np.zeros((B, k + 1), np.int64)
+                for i, (s, j) in enumerate(flat):
+                    target[s, j] = toks[i]
+            # ---- 3. accept + host-side length rewind --------------------
+            emitted = {}
             for s in active:
-                req = self.sched.slots[s]
-                base = req.plen + len(req.tokens)  # abs pos of next sample
-                for j in range(int(nv[s])):
-                    flat.append((s, j))
-                    rids.append(req.rid)
-                    poss.append(base + j)
-            rows = logits_v[jnp.asarray([s for s, _ in flat]),
-                            jnp.asarray([j for _, j in flat])]
-            toks = self._sample_rows(rows, rids, poss)
-            target = np.zeros((B, k + 1), np.int64)
-            for i, (s, j) in enumerate(flat):
-                target[s, j] = toks[i]
-        # ---- 3. accept + host-side length rewind ------------------------
-        emitted = {}
-        for s in active:
-            t_s = target[s, :nv[s]]
-            n_acc = speclib.accept_length(drafts[s, :nv[s] - 1], t_s)
-            emitted[s] = [int(t) for t in t_s[:n_acc + 1]]
-            self.stats.spec_accepted += n_acc
-        self.sched.advance_multi(emitted, step_i)
+                t_s = target[s, :nv[s]]
+                n_acc = speclib.accept_length(drafts[s, :nv[s] - 1], t_s)
+                emitted[s] = [int(t) for t in t_s[:n_acc + 1]]
+                self.stats.spec_accepted += n_acc
+            self.sched.advance_multi(emitted, step_i)
         for s, toks in emitted.items():
             if self.sched.slots[s] is not None:
                 self.pending[s] = toks[-1]
@@ -671,7 +757,12 @@ class PagedMLAEngine:
             log_every: int = 0, log=print) -> Dict[str, float]:
         """Drive a request stream to completion.  ``req.arrival`` is the
         step index at which a request joins the waiting queue (Poisson
-        arrivals in the example driver)."""
+        arrivals in the example driver).  ``log`` may be a bare callable
+        (legacy ``log=print`` API) or an ``obs.StructLogger`` — either
+        way the step lines go through one structured path; a telemetry
+        logger, if configured, wins."""
+        slog = self.tel.logger if self.tel.logger is not None \
+            else as_logger(log, "engine")
         todo = sorted(requests, key=lambda r: r.arrival)
         i = 0
         while not (i >= len(todo) and self.sched.all_done):
@@ -681,13 +772,12 @@ class PagedMLAEngine:
             self.step()
             if log_every and self.stats.steps % log_every == 0:
                 u = self.sched.utilization()
-                log(f"[engine] step {self.stats.steps}: "
-                    f"active={self.sched.n_active} "
-                    f"waiting={len(self.sched.waiting)} "
-                    f"done={len(self.sched.finished)} "
-                    f"util={u['valid_frac']:.2f} "
-                    f"pool={u['pool_frac']:.2f} "
-                    f"scheme={self._last_scheme}")
+                slog.info("step", step=self.stats.steps,
+                          active=self.sched.n_active,
+                          waiting=len(self.sched.waiting),
+                          done=len(self.sched.finished),
+                          util=u["valid_frac"], pool=u["pool_frac"],
+                          scheme=self._last_scheme)
             if self.stats.steps >= max_steps:
                 raise RuntimeError(f"did not drain in {max_steps} steps")
         return self.summary()

@@ -28,6 +28,7 @@ import numpy as np
 
 from ..checkpoint import CheckpointStore
 from ..data import SyntheticLM
+from ..obs import as_logger
 
 
 class SimulatedFailure(RuntimeError):
@@ -54,7 +55,12 @@ class TrainLoop:
         self.cfg = cfg
         self.step_fn = step_fn
         self.data = data
+        # ``log`` keeps its legacy bare-callable contract (tests pass
+        # ``log=lambda *_: None``); internally every line goes through
+        # the structured logger so it can be silenced / JSON-formatted
+        # like the serving engine's.
         self.log = log
+        self.slog = as_logger(log, "loop")
         self.store = CheckpointStore(cfg.ckpt_dir, keep=cfg.keep)
         self.params, self.opt_state = params, opt_state
         self.step = 0
@@ -83,7 +89,7 @@ class TrainLoop:
             self.opt_state, restored["opt"])
         self.data.load_state_dict(meta["data_state"])
         self.step = meta["step"]
-        self.log(f"[loop] resumed from checkpoint step {self.step}")
+        self.slog.info("resumed from checkpoint", step=self.step)
 
     # ------------------------------------------------------------- run ----
     def _deadline(self) -> Optional[float]:
@@ -102,8 +108,8 @@ class TrainLoop:
             # straggler: record + re-dispatch (deterministic recompute).
             self.straggler_events.append(
                 {"step": self.step, "time": dt, "deadline": deadline})
-            self.log(f"[loop] straggler at step {self.step}: "
-                     f"{dt:.3f}s > {deadline:.3f}s — re-dispatched")
+            self.slog.warning("straggler re-dispatched", step=self.step,
+                              time_s=dt, deadline_s=deadline)
             t0 = time.monotonic()
             self.params, self.opt_state, metrics = self.step_fn(
                 self.params, self.opt_state, batch)
@@ -120,9 +126,9 @@ class TrainLoop:
             last_metrics = self._run_step(batch)
             self.step += 1
             if self.cfg.log_every and self.step % self.cfg.log_every == 0:
-                self.log(f"[loop] step {self.step} "
-                         f"loss {float(last_metrics['loss']):.4f} "
-                         f"({self.step_times[-1]*1e3:.0f} ms)")
+                self.slog.info("step", step=self.step,
+                               loss=float(last_metrics["loss"]),
+                               ms=self.step_times[-1] * 1e3)
             if self.step % self.cfg.ckpt_every == 0 or \
                     self.step == self.cfg.total_steps:
                 self.store.save(

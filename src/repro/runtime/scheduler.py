@@ -42,6 +42,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+from time import perf_counter
 from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
@@ -64,6 +65,17 @@ class Request:
     n_preempted: int = 0
     orig_plen: int = -1           # preemption folds output into the prompt
     n_cached: int = 0             # prompt tokens served by the prefix cache
+    # lifecycle wall clock (perf_counter seconds, -1 = not reached):
+    # stamped by the scheduler at each transition so telemetry can build
+    # queued/prefill/decode spans and TTFT/TPOT retrospectively.  admit_t
+    # and first_tok_t keep their FIRST value across preemptions (TTFT is
+    # time to the first token the user ever saw); preempt_ts logs each
+    # preemption instant.
+    submit_t: float = -1.0
+    admit_t: float = -1.0
+    first_tok_t: float = -1.0
+    finish_t: float = -1.0
+    preempt_ts: List[float] = dataclasses.field(default_factory=list)
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32)
@@ -212,6 +224,8 @@ class ContinuousScheduler:
     # ------------------------------------------------------------ queue ---
 
     def submit(self, req: Request) -> None:
+        if req.submit_t < 0:
+            req.submit_t = perf_counter()
         self.waiting.append(req)
 
     @property
@@ -264,6 +278,8 @@ class ContinuousScheduler:
             blocks = shared + fresh
             self.waiting.popleft()
             req.slot, req.admitted_step = slot, step
+            if req.admit_t < 0:
+                req.admit_t = perf_counter()
             req.n_cached = len(shared) * self.block_size
             self.slots[slot] = req
             self.blocks_of[slot] = blocks
@@ -386,6 +402,7 @@ class ContinuousScheduler:
         req.max_new -= len(req.tokens)
         req.tokens = []
         req.n_preempted += 1
+        req.preempt_ts.append(perf_counter())
         self._release_slot(slot)
         self.waiting.appendleft(req)
         return req, slot
@@ -397,8 +414,11 @@ class ContinuousScheduler:
         request if that already exhausts its budget (max_new == 1)."""
         req = self.slots[slot]
         req.tokens.append(int(tok))
+        if req.first_tok_t < 0:
+            req.first_tok_t = perf_counter()
         if req.done:
             req.finished_step = step
+            req.finish_t = perf_counter()
             self._release_slot(slot)
             self.finished.append(req)
             return req
@@ -436,6 +456,7 @@ class ContinuousScheduler:
             req.tokens.extend(int(t) for t in toks)
             if req.done:
                 req.finished_step = step
+                req.finish_t = perf_counter()
                 self._release_slot(slot)
                 self.finished.append(req)
                 done.append(req)

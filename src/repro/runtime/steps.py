@@ -415,6 +415,19 @@ def _paged_pool_shardings(cfg: ModelConfig, mesh: Mesh, rules,
     return jax.tree.map(lambda s: NamedSharding(mesh, s), cspecs)
 
 
+def _tag_obs(fn, *, kind: str, scheme: str, impl: str):
+    """Annotate a jitted step with its dispatch identity (step kind,
+    attention scheme, attention impl) so telemetry and debugging tools
+    can label spans / drift rows from the function object itself instead
+    of threading extra arguments.  Plain setattr: jitted callables carry
+    attributes fine and ``.lower()`` (the hot-path auditor's entry) is
+    unaffected."""
+    fn.obs_kind = kind
+    fn.obs_scheme = scheme
+    fn.obs_impl = impl
+    return fn
+
+
 def make_paged_serve_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
                           *, compute_dtype=jnp.bfloat16, impl: str = "ref",
                           scheme: str = "seq", policy: str = "serve"):
@@ -455,11 +468,12 @@ def make_paged_serve_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
                                   lengths=lengths)
 
     if mesh is None:
-        return jax.jit(run, donate_argnums=(2,))
+        return _tag_obs(jax.jit(run, donate_argnums=(2,)),
+                        kind="decode", scheme=scheme, impl=impl)
     rules = shd.make_rules(mesh, mode=policy, cfg=cfg)
     dp = rules["batch"]
     pool_shard = _paged_pool_shardings(cfg, mesh, rules, compute_dtype)
-    return jax.jit(
+    return _tag_obs(jax.jit(
         run,
         # params slot is UNSPECIFIED: committed shardings (device_put via
         # paged_param_shardings) propagate, and the same jitted step
@@ -469,7 +483,7 @@ def make_paged_serve_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
                       NamedSharding(mesh, PS(dp))),
         out_shardings=(None, pool_shard),
         donate_argnums=(2,),
-    )
+    ), kind="decode", scheme=scheme, impl=impl)
 
 
 def make_chunked_prefill_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
@@ -515,11 +529,12 @@ def make_chunked_prefill_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
                                           scheme=scheme, shard_mode=policy)
 
     if mesh is None:
-        return jax.jit(run, donate_argnums=(2,))
+        return _tag_obs(jax.jit(run, donate_argnums=(2,)),
+                        kind="prefill", scheme=scheme, impl=impl)
     rules = shd.make_rules(mesh, mode=policy, cfg=cfg)
     dp = rules["batch"]
     pool_shard = _paged_pool_shardings(cfg, mesh, rules, compute_dtype)
-    return jax.jit(
+    return _tag_obs(jax.jit(
         run,
         in_shardings=(None, NamedSharding(mesh, PS(dp, None)), pool_shard,
                       NamedSharding(mesh, PS(dp, None)),
@@ -527,7 +542,7 @@ def make_chunked_prefill_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
                       NamedSharding(mesh, PS(dp))),
         out_shardings=(None, pool_shard),
         donate_argnums=(2,),
-    )
+    ), kind="prefill", scheme=scheme, impl=impl)
 
 
 def make_verify_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
@@ -563,11 +578,12 @@ def make_verify_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
                                          scheme=scheme, shard_mode=policy)
 
     if mesh is None:
-        return jax.jit(run, donate_argnums=(2,))
+        return _tag_obs(jax.jit(run, donate_argnums=(2,)),
+                        kind="verify", scheme=scheme, impl=impl)
     rules = shd.make_rules(mesh, mode=policy, cfg=cfg)
     dp = rules["batch"]
     pool_shard = _paged_pool_shardings(cfg, mesh, rules, compute_dtype)
-    return jax.jit(
+    return _tag_obs(jax.jit(
         run,
         in_shardings=(None, NamedSharding(mesh, PS(dp, None)), pool_shard,
                       NamedSharding(mesh, PS(dp, None)),
@@ -575,7 +591,7 @@ def make_verify_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
                       NamedSharding(mesh, PS(dp))),
         out_shardings=(None, pool_shard),
         donate_argnums=(2,),
-    )
+    ), kind="verify", scheme=scheme, impl=impl)
 
 
 def _scatter_entries(pool_leaf, contig_leaf, pages, block_size: int):
