@@ -51,6 +51,13 @@ ratios are gated against committed baselines in check_regression.py —
 p50 ratio and p95/p50 spread are machine-speed-stable even though the
 absolute CPU-vs-TPU-model ratio is huge).
 
+The quantized row (PR 8) re-serves the prefix+chunked stream with the
+latent pool stored int8 (per-token-row scales, in-kernel dequant,
+exp-add AMLA rescaling) and gates greedy-token identity against the
+wide-pool row, the modeled cache-byte shrink (<= 0.55x bf16), the attn
+operational-intensity rise, and a kernel-vs-fp32-oracle max-logit-error
+bound on a ragged random pool.
+
     PYTHONPATH=src python benchmarks/bench_serving.py --requests 12
     PYTHONPATH=src python benchmarks/bench_serving.py --shared-prefix-len 0
     PYTHONPATH=src python benchmarks/bench_serving.py --trace out.json
@@ -192,6 +199,7 @@ def run_paged(
     spec_k=0,
     draft=None,
     telemetry=None,
+    cache_dtype="bf16",
 ):
     """Paged runtime; ``prefix=False`` reproduces PR-1 (per-request
     prefill, no block sharing); ``prefill_impl='pallas'`` swaps the
@@ -230,6 +238,7 @@ def run_paged(
         draft_cfg=draft_cfg,
         draft_params=draft_params,
         telemetry=telemetry,
+        cache_dtype=cache_dtype,
     )
     out = eng.run(
         [
@@ -310,6 +319,45 @@ def bench_prefill_kernel(cfg, params, args):
             attn_oi=c.breakdown["attn_scores_pv"] / attn_by,
         )
     return out
+
+
+def quant_oracle_err(cfg, args):
+    """Kernel-vs-fp32-oracle accuracy probe for the quantized pool: one
+    paged decode step over a random ragged int8 pool, Pallas kernel with
+    in-register dequant + exp-add rescaling vs the dense fp32 reference
+    on the SAME pre-quantization latents.  Returns the max |logit err|
+    of the quantized kernel and, as a floor, of the unquantized kernel
+    (so the gate measures quantization error, not kernel error)."""
+    from repro.core import cache as cachelib
+    from repro.kernels import ref
+    from repro.kernels.ops import mla_decode_paged_attention
+
+    mla = cfg.mla_config()
+    Dl, Dr, H = mla.kv_lora_rank, mla.qk_rope_dim, mla.n_heads
+    B, bs = args.max_batch, args.block_size
+    nb, N = 6, 1 + args.max_batch * 6
+    rng = np.random.default_rng(args.seed + 3)
+    q = jnp.asarray(rng.normal(size=(B, H, Dl + Dr)), jnp.float32)
+    ckv = jnp.asarray(rng.normal(size=(N, bs, Dl)), jnp.float32)
+    krope = jnp.asarray(rng.normal(size=(N, bs, Dr)), jnp.float32)
+    bt = jnp.asarray(
+        1 + np.arange(B * nb).reshape(B, nb) % (N - 1), jnp.int32
+    )
+    idx = jnp.asarray(rng.integers(bs, nb * bs, (B,)), jnp.int32)
+    oracle = ref.mla_decode_paged_ref(q, ckv, krope, bt, idx)
+    ckv_q, ckv_s = cachelib.quantize_latent(ckv, 127.0, jnp.int8)
+    kr_q, kr_s = cachelib.quantize_latent(krope, 127.0, jnp.int8)
+    got_q = mla_decode_paged_attention(
+        q, ckv_q, kr_q, bt, idx, impl="pallas",
+        ckv_scales=ckv_s, krope_scales=kr_s, rescale="exp_add",
+    )
+    got_f = mla_decode_paged_attention(
+        q, ckv, krope, bt, idx, impl="pallas", rescale="exp_add"
+    )
+    return (
+        float(jnp.max(jnp.abs(got_q - oracle))),
+        float(jnp.max(jnp.abs(got_f - oracle))),
+    )
 
 
 def main():
@@ -569,6 +617,53 @@ def main():
     if args.trace:
         print(f"  trace exported to {tel.tracer.export(args.trace)}")
 
+    print("== paged + prefix, QUANTIZED int8 latent pool (PR 8) ==")
+    qp = run_paged(cfg, params, reqs, args, prefix=True, cache_dtype="int8")
+    q_err, f_err = quant_oracle_err(cfg, args)
+    from repro.core.cache import cache_element_bytes
+    from repro.hwmodel.attention_costs import mla_decode_cost, rescale_multiplies
+
+    mla_full = configs.full("deepseek-v2-236b").mla_config()
+    qdkw = dict(scheme="seq", cache_len=4096, batch=args.max_batch, paged_block=128)
+    cw8 = cache_element_bytes(mla_full.kv_lora_rank, mla_full.qk_rope_dim, 2, "int8")
+    cb16 = mla_decode_cost(mla_full, **qdkw)
+    cq8 = mla_decode_cost(mla_full, cache_dtype_bytes=cw8, **qdkw)
+
+    def attn_oi(c):
+        return (c.breakdown["attn_scores"] + c.breakdown["attn_out"]) / (
+            c.breakdown["B:cache_read"] + c.breakdown["B:block_table"]
+        )
+
+    rd_ratio = cq8.breakdown["B:cache_read"] / cb16.breakdown["B:cache_read"]
+    tok_ratio = qp["cache_token_bytes"] / pp["cache_token_bytes"]
+    mul_classic = rescale_multiplies(
+        mla_full, cache_len=4096, batch=args.max_batch, paged_block=128,
+        rescale="mul",
+    )
+    mul_amla = rescale_multiplies(
+        mla_full, cache_len=4096, batch=args.max_batch, paged_block=128,
+        rescale="exp_add",
+    )
+    print(
+        f"  {qp['decode_tokens']:.0f} decode tokens at "
+        f"{qp['tokens_per_s']:.1f} tok/s (bf16 pool: "
+        f"{pp['tokens_per_s']:.1f}); pool "
+        f"{qp['cache_token_bytes']:.0f} B/token/stack vs "
+        f"{pp['cache_token_bytes']:.0f} ({tok_ratio:.2f}x)"
+    )
+    print(
+        f"  modeled (1 layer, L=4096): cache read "
+        f"{cb16.breakdown['B:cache_read'] / 1e6:.1f} -> "
+        f"{cq8.breakdown['B:cache_read'] / 1e6:.1f} MB/step "
+        f"({rd_ratio:.2f}x), attn OI {attn_oi(cb16):.0f} -> "
+        f"{attn_oi(cq8):.0f} FLOP/B; exp-add rescale multiplies "
+        f"{mul_classic:.3g} -> {mul_amla:.0f}"
+    )
+    print(
+        f"  fp32-oracle max |err|: int8 kernel {q_err:.3e} "
+        f"(unquantized kernel floor {f_err:.3e})"
+    )
+
     print("== prefill-kernel step: gather view vs in-place Pallas ==")
     kb = bench_prefill_kernel(cfg, params, args)
     for name in ("gather", "pallas"):
@@ -633,6 +728,7 @@ def main():
         paged_row("paged+prefix", pp),
         paged_row("paged+prefix+pallas", pk),
         paged_row("paged+prefix (2x2 mesh)", pm),
+        paged_row("paged+prefix, int8 pool", qp),
         paged_row(f"paged+prefix+spec k={sk} (self)", ss),
         paged_row(f"paged+prefix+spec k={sk} (shallow:2)", sh),
     ]
@@ -857,6 +953,42 @@ def main():
         overhead_frac < 0.02,
         f"{overhead_frac:.3%} ({null_per_hook * 1e9:.0f} ns/hook)",
     )
+    # ---- quantized-pool gates (ISSUE 8 acceptance) ----------------------
+    ok &= common.check(
+        "int8 pool outputs greedy-token-identical to the bf16 pool",
+        qp["outputs"] == pp["outputs"],
+    )
+    ok &= common.check(
+        "int8 pool stores <= 0.55x the bytes/token of the wide pool",
+        tok_ratio <= 0.55,
+        f"{qp['cache_token_bytes']:.0f} vs {pp['cache_token_bytes']:.0f} "
+        f"B/token ({tok_ratio:.2f}x)",
+    )
+    ok &= common.check(
+        "modeled decode cache-read bytes shrink <= 0.55x at int8",
+        rd_ratio <= 0.55,
+        f"{rd_ratio:.4f}",
+    )
+    ok &= common.check(
+        "modeled attention intensity rises with the quantized pool",
+        attn_oi(cq8) > attn_oi(cb16),
+        f"{attn_oi(cb16):.0f} -> {attn_oi(cq8):.0f} FLOP/B",
+    )
+    ok &= common.check(
+        "exp-add rescaling removes the online-softmax multiply term",
+        mul_amla == 0.0 and mul_classic > 0,
+        f"{mul_classic:.3g} -> {mul_amla:.0f} multiplies/step",
+    )
+    ok &= common.check(
+        "int8 kernel tracks the fp32 oracle within the committed bound",
+        q_err <= 0.05 and f_err <= 1e-4,
+        f"int8 {q_err:.3e} (floor {f_err:.3e}) vs bound 5e-2",
+    )
+    ok &= common.check(
+        "int8 serving throughput holds up (CPU, directional)",
+        qp["tokens_per_s"] >= 0.4 * pp["tokens_per_s"],
+        f"{qp['tokens_per_s']:.1f} vs {pp['tokens_per_s']:.1f} tok/s",
+    )
 
     pp_save = {k: v for k, v in pp.items() if k != "outputs"}
     pr1_save = {k: v for k, v in pr1.items() if k != "outputs"}
@@ -868,6 +1000,19 @@ def main():
         "dp1_cache_read": c1.breakdown["B:cache_read"],
         "dp2_cache_read": c2.breakdown["B:cache_read"],
         "weights": c1.breakdown["B:w_common"] + c1.breakdown["B:w_scheme"],
+    }
+    qp_save = {k: v for k, v in qp.items() if k != "outputs"}
+    qp_save["oracle_max_err"] = q_err
+    qp_save["oracle_max_err_unquantized"] = f_err
+    qp_save["model"] = {
+        "cache_read_bf16": cb16.breakdown["B:cache_read"],
+        "cache_read_int8": cq8.breakdown["B:cache_read"],
+        "cache_read_ratio": rd_ratio,
+        "attn_oi_bf16": attn_oi(cb16),
+        "attn_oi_int8": attn_oi(cq8),
+        "token_bytes_ratio": tok_ratio,
+        "rescale_multiplies_mul": mul_classic,
+        "rescale_multiplies_exp_add": mul_amla,
     }
     kb_save = {n: {k: v for k, v in kb[n].items() if k != "logits"} for n in kb}
     spec_keys = (
@@ -902,6 +1047,7 @@ def main():
             "paged_prefix": pp_save,
             "paged_prefix_pallas": pk_save,
             "paged_mesh": pm_save,
+            "paged_quant": qp_save,
             "paged_spec": spec_save,
             "util_gain": gain,
             "jax_device_count": jax.device_count(),

@@ -58,6 +58,19 @@ RULES = [
     ("bench_serving.json", "paged_spec.shallow.prefill_compiles", "eq", None),
     ("bench_serving.json", "paged_spec.shallow.spec_mean_emitted", "min_ratio", 0.7),
     ("bench_serving.json", "paged_spec.shallow_mesh.decode_tokens", "eq", None),
+    # quantized int8 pool (PR 8): serving structure is seeded/exact; the
+    # modeled byte shrink and OI shift are closed-form; the oracle error
+    # is quantization numerics (deterministic per seed, but FP-summation
+    # order can wiggle across BLAS builds) so only a blowup fails
+    ("bench_serving.json", "paged_quant.decode_tokens", "eq", None),
+    ("bench_serving.json", "paged_quant.prefill_compiles", "eq", None),
+    ("bench_serving.json", "paged_quant.cache_token_bytes", "approx", 1e-9),
+    ("bench_serving.json", "paged_quant.model.cache_read_ratio", "approx", 1e-6),
+    ("bench_serving.json", "paged_quant.model.token_bytes_ratio", "approx", 1e-6),
+    ("bench_serving.json", "paged_quant.model.attn_oi_int8", "approx", 1e-9),
+    ("bench_serving.json", "paged_quant.model.rescale_multiplies_exp_add", "eq", None),
+    ("bench_serving.json", "paged_quant.oracle_max_err", "max_ratio", 5.0),
+    ("bench_serving.json", "paged_quant.tokens_per_s", "min_ratio", 0.25),
     # closed-form cost model: near-exact
     ("bench_serving.json", "paged_spec.model.verify_bytes", "approx", 1e-9),
     ("bench_serving.json", "paged_spec.model.decode_bytes", "approx", 1e-9),

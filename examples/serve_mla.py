@@ -67,6 +67,25 @@ under greedy and seeded sampling; only the tokens-per-step ratio moves:
                          reference) | 'self' = identity-draft oracle
                          (acceptance is exactly 100%)
 
+PR 8 shrinks the pool itself — the bytes axis of the paper's argument,
+quantized: the {ckv|krope} block pool can store int8 (or fp8 where the
+jax build has float8_e4m3fn) with per-token-row f32 scales riding the
+pool pytree.  Writes quantize in the scatter paths, the Pallas kernels
+dequantize in-register while walking the block table (no pool-sized f32
+copy ever lands in HBM), and the online softmax rescales by AMLA-style
+exponent addition (integer add into the f32 exponent field instead of a
+per-element multiply):
+
+  --cache-dtype {bf16,int8,fp8}
+                         pool storage dtype.  int8 cuts modeled cache
+                         bytes/token to ~0.3x bf16 at DeepSeek shapes
+                         (the auto-dispatch crossovers shift
+                         accordingly); greedy tokens stay parity with
+                         bf16 on the smoke model, and per-dtype
+                         logit-error bounds vs the fp32 oracle are gated
+                         in tests/test_quant_cache.py.  Requires
+                         --prefill-chunk > 0.
+
 PR 7 makes the whole run observable (repro.obs) — spans, metrics, and
 the roofline drift channel that checks the dispatch's own cost model
 against measured step times:
@@ -93,6 +112,7 @@ Serving-flags summary (all compose):
   --prefill-chunk   16        batched prefill chunk (0 = per-request)
   --prefill-impl    auto      'gather' view vs 'pallas' in-place kernel
   --impl            ref       decode attention: 'ref' | 'kernel'
+  --cache-dtype     bf16      pool storage: 'bf16' | 'int8' | 'fp8'
   --temperature     0.0       0 = greedy; else seeded sampling
   --top-k           0         top-k filter when sampling
   --mesh            ''        'DPxMP' sharded serving
@@ -151,6 +171,11 @@ ap.add_argument("--prefill-chunk", type=int, default=16)
 ap.add_argument("--prefill-impl", default="auto",
                 choices=("auto", "gather", "pallas"))
 ap.add_argument("--impl", default="ref", choices=("ref", "kernel"))
+ap.add_argument("--cache-dtype", default="bf16",
+                choices=("bf16", "int8", "fp8"),
+                help="pool storage dtype: int8/fp8 quantize on write with "
+                     "per-row f32 scales, dequantized in-register by the "
+                     "kernels (~0.3x cache bytes/token vs bf16)")
 ap.add_argument("--temperature", type=float, default=0.0)
 ap.add_argument("--top-k", type=int, default=0)
 ap.add_argument("--mesh", default="",
@@ -231,7 +256,8 @@ engine = PagedMLAEngine(cfg, params, num_blocks=args.num_blocks,
                         temperature=args.temperature, top_k=args.top_k,
                         sample_seed=args.seed, mesh=mesh,
                         spec_k=args.spec_k, draft_cfg=draft_cfg,
-                        draft_params=draft_params, telemetry=tel)
+                        draft_params=draft_params,
+                        cache_dtype=args.cache_dtype, telemetry=tel)
 total_need = sum(blocks_for(r.plen + r.max_new + 1, bs) for r in reqs)
 print(f"\n{args.requests} requests (prompts 8-32, gen 4-19), pool "
       f"{args.num_blocks - 1} usable blocks x {bs} tokens "
@@ -288,9 +314,13 @@ if tel is not None:
               f"{plat.name} prediction), spread "
               f"{d['summary']['spread']:.2f}")
 
-# latent-cache footprint vs dense-KV equivalent (the paper's Fig 3 point)
-lat_b = (mla.kv_lora_rank + mla.qk_rope_dim) * 2
+# latent-cache footprint vs dense-KV equivalent (the paper's Fig 3 point),
+# at the pool's STORAGE dtype (int8/fp8 pay 1 byte/elem + per-row scales)
+from repro.core.cache import bytes_per_token_latent
+lat_b = bytes_per_token_latent(
+    mla.kv_lora_rank, mla.qk_rope_dim, 2,
+    None if args.cache_dtype == "bf16" else args.cache_dtype)
 dense_b = 2 * cfg.n_heads * mla.qk_dim * 2
-print(f"KV bytes/token/layer: latent {lat_b} vs dense {dense_b} "
-      f"({dense_b / lat_b:.1f}x smaller -> {dense_b / lat_b:.1f}x more "
-      f"requests per pool)")
+print(f"KV bytes/token/layer: latent {lat_b:.0f} ({args.cache_dtype}) vs "
+      f"dense {dense_b} ({dense_b / lat_b:.1f}x smaller -> "
+      f"{dense_b / lat_b:.1f}x more requests per pool)")

@@ -140,6 +140,7 @@ class StepSpec:
     impl: str  # gather | pallas
     scheme: str  # seq | rc | ru | naive
     mesh_shape: Optional[Tuple[int, int]] = None  # (data, model) or None
+    cache_dtype: str = "bf16"  # bf16 | int8 | fp8 (pool storage dtype)
 
     @property
     def topo(self) -> str:
@@ -149,19 +150,28 @@ class StepSpec:
 
     @property
     def where(self) -> str:
-        return f"{self.kind}/{self.impl}/{self.scheme}/{self.topo}"
+        base = f"{self.kind}/{self.impl}/{self.scheme}/{self.topo}"
+        if self.cache_dtype != "bf16":
+            base += f"/{self.cache_dtype}"
+        return base
 
 
 def single_device_matrix() -> List[StepSpec]:
     """decode/prefill/verify x {gather, pallas} x schemes, single device.
     'naive' has no kernel path by design (it up-projects the cache), so it
-    appears under 'gather' only."""
+    appears under 'gather' only.  The quantized-pool cells rerun both
+    impls at cache_dtype='int8' under 'seq' (the scheme only reorders the
+    query transform — the pool path the quantization touches is scheme-
+    independent, so one scheme per dtype keeps the matrix compile time
+    bounded)."""
     specs = []
     for kind in ("decode", "prefill", "verify"):
         for scheme in ("seq", "rc", "ru"):
             for impl in ("gather", "pallas"):
                 specs.append(StepSpec(kind, impl, scheme))
         specs.append(StepSpec(kind, "gather", "naive"))
+        for impl in ("gather", "pallas"):
+            specs.append(StepSpec(kind, impl, "seq", cache_dtype="int8"))
     return specs
 
 
@@ -231,7 +241,10 @@ def compile_step(
         params = mlalib.attach_absorbed_tree(params, cfg.mla_config())
     if mesh is not None:
         params = rsteps.commit_params(params, cfg, mesh)
-    pool = models.init_paged_cache(cfg, NUM_BLOCKS, BLOCK_SIZE, dtype)
+    cache_dtype = None if spec.cache_dtype == "bf16" else spec.cache_dtype
+    pool = models.init_paged_cache(
+        cfg, NUM_BLOCKS, BLOCK_SIZE, dtype, cache_dtype=cache_dtype
+    )
 
     impl = {"gather": "ref", "pallas": "kernel"}[spec.impl]
     B = _batch_of(spec)
@@ -239,7 +252,12 @@ def compile_step(
     lengths = jnp.zeros((B,), jnp.int32)
     if spec.kind == "decode":
         step = rsteps.make_paged_serve_step(
-            cfg, mesh, compute_dtype=dtype, impl=impl, scheme=spec.scheme
+            cfg,
+            mesh,
+            compute_dtype=dtype,
+            impl=impl,
+            scheme=spec.scheme,
+            cache_dtype=cache_dtype,
         )
         args = (params, jnp.zeros((B,), jnp.int32), pool, tables, lengths)
     else:
@@ -247,7 +265,14 @@ def compile_step(
             "prefill": rsteps.make_chunked_prefill_step,
             "verify": rsteps.make_verify_step,
         }[spec.kind]
-        step = maker(cfg, mesh, compute_dtype=dtype, impl=impl, scheme=spec.scheme)
+        step = maker(
+            cfg,
+            mesh,
+            compute_dtype=dtype,
+            impl=impl,
+            scheme=spec.scheme,
+            cache_dtype=cache_dtype,
+        )
         args = (
             params,
             jnp.zeros((B, CHUNK), jnp.int32),
@@ -274,9 +299,11 @@ _JNP_TO_HLO = {
     "float16": "f16",
     "float32": "f32",
     "float64": "f64",
+    "int8": "s8",
     "int32": "s32",
     "int64": "s64",
     "uint32": "u32",
+    "float8_e4m3fn": "f8e4m3fn",
     "bool": "pred",
 }
 
@@ -450,18 +477,37 @@ def _walk_jaxpr(jaxpr, seen: set, visit):
                     _walk_jaxpr(child, seen, visit)
 
 
+_QUANT_DTYPES = tuple(
+    jnp.dtype(n) for n in ("int8",) + (("float8_e4m3fn",) if hasattr(jnp, "float8_e4m3fn") else ())
+)
+
+
 def audit_dtypes(
     jaxpr, pool_tree, where: str, compute_dtype=COMPUTE_DTYPE, hlo_text: str = ""
 ) -> List[Finding]:
     """No f64 anywhere; no f32 value with a pool(-leaf) shape when the
     config says bf16.  Runs on the jaxpr: the CPU backend legally rewrites
     bf16 arithmetic into f32 convert sandwiches in the HLO, so the HLO is
-    only scanned for f64 (which no backend introduces)."""
+    only scanned for f64 (which no backend introduces).
+
+    Quantized pools (int8/fp8 data leaves + f32 per-row scale leaves) add
+    two rules: the SCALE shapes are exempt from the f32-promotion check
+    (they are f32 by design — flagging them would outlaw the layout), and
+    NO wide float (f32/bf16/f16) value may carry a quantized data-leaf
+    shape — a dequantized full-pool copy in HBM is exactly the hoisted
+    buffer that silently restores bf16-sized cache traffic."""
     findings = []
     pool_shapes = set()
+    quant_shapes = set()  # shapes of int8/fp8 payload leaves
+    scale_shapes = set()  # shapes of the f32 per-row scale leaves
     for x in jax.tree.leaves(pool_tree):
-        pool_shapes.add(tuple(x.shape))
-        pool_shapes.add(tuple(x.shape[-3:]))
+        shapes = {tuple(x.shape), tuple(x.shape[-3:])}
+        pool_shapes |= shapes
+        if x.dtype in _QUANT_DTYPES:
+            quant_shapes |= shapes
+        elif x.dtype == jnp.float32 and x.shape[-1] == 1:
+            scale_shapes |= shapes
+    pool_shapes -= scale_shapes
     want_promotion_check = compute_dtype in (jnp.bfloat16, jnp.float16)
 
     def visit(eqn, aval):
@@ -472,6 +518,22 @@ def audit_dtypes(
                     where,
                     f"f64 value {aval.shape} in `{eqn.primitive.name}` "
                     "(x64 leaked into a serve step)",
+                )
+            )
+        elif (
+            quant_shapes
+            and aval.dtype in (jnp.float32, jnp.bfloat16, jnp.float16)
+            and tuple(aval.shape) in quant_shapes
+        ):
+            findings.append(
+                Finding(
+                    "dtype",
+                    where,
+                    f"{jnp.dtype(aval.dtype).name} value with quantized "
+                    f"pool shape {aval.shape} in `{eqn.primitive.name}` — "
+                    "a dequantized pool-sized buffer forfeits the int8/fp8 "
+                    "cache-traffic win (dequantize gathered views, never "
+                    "the pool)",
                 )
             )
         elif (
@@ -530,6 +592,34 @@ TOLERANCES: Dict[Tuple[str, str, str], Dict[str, Tuple[float, float]]] = {
     ("verify", "pallas", "mesh8x1"): {"flops": (0.65, 1.05), "bytes": (13.0, 21.0)},
 }
 
+# Quantized-pool cells get their OWN bands, keyed (kind, impl, topo,
+# cache_dtype): the model prices the int8 payload + f32 scale streams
+# (cache_element_bytes), but the measured side shifts differently — the
+# gather path reads 1-byte pool leaves yet still materializes the
+# dequantized view at f32 width, and the interpret-mode pallas grid loop
+# round-trips the SAME block state whatever its width, so the structural
+# multipliers land on a smaller modeled denominator.  Calibrated the same
+# way as TOLERANCES (scripts/audit_steps.py); unknown dtype keys fall
+# back to the unquantized band via :func:`tolerances_for`.
+QUANT_TOLERANCES: Dict[Tuple[str, str, str, str], Dict[str, Tuple[float, float]]] = {
+    ("decode", "gather", "1dev", "int8"): {"flops": (0.95, 1.10), "bytes": (2.7, 4.4)},
+    ("decode", "pallas", "1dev", "int8"): {"flops": (0.65, 1.05), "bytes": (9.5, 15.5)},
+    ("prefill", "gather", "1dev", "int8"): {"flops": (0.95, 1.10), "bytes": (3.0, 4.8)},
+    ("prefill", "pallas", "1dev", "int8"): {"flops": (0.65, 1.05), "bytes": (10.5, 17.0)},
+    ("verify", "gather", "1dev", "int8"): {"flops": (0.95, 1.10), "bytes": (3.0, 4.8)},
+    ("verify", "pallas", "1dev", "int8"): {"flops": (0.65, 1.05), "bytes": (10.5, 17.0)},
+}
+
+
+def tolerances_for(spec: StepSpec) -> Dict[str, Tuple[float, float]]:
+    """Conformance band for one cell: the dtype-specific entry when the
+    cell stores a quantized pool, else the committed unquantized band."""
+    if spec.cache_dtype != "bf16":
+        key = (spec.kind, spec.impl, spec.topo, spec.cache_dtype)
+        if key in QUANT_TOLERANCES:
+            return QUANT_TOLERANCES[key]
+    return TOLERANCES[(spec.kind, spec.impl, spec.topo)]
+
 
 def modeled_step_cost(
     spec: StepSpec,
@@ -555,6 +645,17 @@ def modeled_step_cost(
     S = TABLE_BLOCKS * BLOCK_SIZE
     C = 1 if spec.kind == "decode" else CHUNK
     impl = {"gather": "gather", "pallas": "pallas"}[spec.impl]
+    # quantized cells price the cache streams at the pool's effective
+    # element width (1-byte payload + amortized f32 scales); the roofline
+    # compile keeps the pool quantized regardless of its compute dtype
+    from ..core.cache import cache_element_bytes
+
+    cw = cache_element_bytes(
+        mla.kv_lora_rank,
+        mla.qk_rope_dim,
+        dtype_bytes=w,
+        cache_dtype=None if spec.cache_dtype == "bf16" else spec.cache_dtype,
+    )
 
     if spec.kind == "decode":
         attn = ac.mla_decode_cost(
@@ -566,6 +667,7 @@ def modeled_step_cost(
             rope=True,
             paged_block=BLOCK_SIZE,
             dp_shards=dp,
+            cache_dtype_bytes=cw,
         )
     elif spec.kind == "verify":
         attn = ac.mla_verify_cost(
@@ -578,6 +680,7 @@ def modeled_step_cost(
             rope=True,
             paged_block=BLOCK_SIZE,
             dp_shards=dp,
+            cache_dtype_bytes=cw,
         )
     else:
         attn = ac.mla_prefill_chunk_cost(
@@ -591,6 +694,7 @@ def modeled_step_cost(
             cached_prefix=S - C,
             impl=impl,
             include_io=False,
+            cache_dtype_bytes=cw,
         )
 
     breakdown: Dict[str, float] = {}
@@ -665,7 +769,7 @@ def audit_roofline(
     if measured is None:
         measured = hloa.analyze(compiled.as_text(), num_partitions=nparts)
     model = modeled_step_cost(spec, term_scale=term_scale)
-    tol = TOLERANCES[(spec.kind, spec.impl, spec.topo)]
+    tol = tolerances_for(spec)
     findings = []
     for metric in ("flops", "bytes"):
         got = getattr(measured, metric)

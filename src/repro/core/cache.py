@@ -93,14 +93,92 @@ def update_latent(cache: Dict[str, Any], ckv_new, krope_new, index) -> Dict[str,
 #     (the next decode token is written at position lengths[b]).
 
 
+# -------------------------------------------------- quantized storage ----
+#
+# The pool optionally stores {ckv|krope} quantized (int8, or fp8-e4m3 where
+# the installed jax exposes it) with one f32 scale per TOKEN SLOT carried as
+# extra pool leaves ``ckv_scale``/``krope_scale`` shaped (N, bs, 1).  Scale
+# leaves ride the pool pytree, so donation aliasing, PS() replication,
+# copy-on-write (copy_block_paged) and sharding rules all apply to them with
+# no extra plumbing.  Convention: stored q ~= x / scale, dequant
+# x ~= q.astype(f32) * scale, with scale = amax(|x|, row) / qmax (amax == 0
+# rows get scale 1 so the null block stays exactly zero).
+
+CACHE_DTYPES = ("bf16", "int8", "fp8")
+
+
+def cache_dtype_info(cache_dtype: Optional[str]):
+    """Map a ``--cache-dtype`` name to (storage jnp dtype, qmax).
+
+    qmax is None for unquantized storage (bf16 keeps the pool at the
+    caller's compute dtype, the pre-quantization behavior)."""
+    if cache_dtype in (None, "bf16", "bfloat16"):
+        return None, None
+    if cache_dtype == "int8":
+        return jnp.int8, 127.0
+    if cache_dtype == "fp8":
+        if not hasattr(jnp, "float8_e4m3fn"):
+            raise ValueError("fp8 cache requested but this jax build has no "
+                             "float8_e4m3fn dtype")
+        return jnp.float8_e4m3fn, 448.0
+    raise ValueError(f"unknown cache_dtype {cache_dtype!r}; "
+                     f"expected one of {CACHE_DTYPES}")
+
+
+def is_quantized_pool(pool: Dict[str, Any]) -> bool:
+    return "ckv_scale" in pool
+
+
+def cache_dtype_qmax(qdtype) -> float:
+    """qmax for a quantized STORAGE dtype (int8 or fp8-e4m3)."""
+    if jnp.dtype(qdtype) == jnp.dtype(jnp.int8):
+        return 127.0
+    return 448.0
+
+
+def quantize_latent(x, qmax: float, qdtype):
+    """Per-token-row symmetric quantization.
+
+    Returns (q, scale): q has x.shape in ``qdtype``, scale has
+    x.shape[:-1] + (1,) in f32, and x ~= q.astype(f32) * scale."""
+    x32 = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x32), axis=-1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / qmax, 1.0).astype(jnp.float32)
+    q = x32 / scale
+    if jnp.issubdtype(jnp.dtype(qdtype), jnp.integer):
+        q = jnp.clip(jnp.round(q), -qmax, qmax)
+    return q.astype(qdtype), scale
+
+
+def dequantize_latent(q, scale):
+    """Inverse of quantize_latent — f32 result."""
+    return q.astype(jnp.float32) * scale
+
+
 def paged_latent_cache(num_blocks: int, block_size: int, kv_lora: int,
                        rope_dim: int, dtype=jnp.bfloat16,
-                       layers: Optional[int] = None) -> Dict[str, Any]:
-    """Paged split-layout latent pool (block 0 = null block)."""
+                       layers: Optional[int] = None,
+                       cache_dtype: Optional[str] = None) -> Dict[str, Any]:
+    """Paged split-layout latent pool (block 0 = null block).
+
+    ``cache_dtype`` in {int8, fp8} adds per-token-slot f32 scale leaves and
+    stores the data leaves quantized; bf16/None keeps the pool at ``dtype``.
+    """
     lead = (layers,) if layers else ()
+    qdtype, qmax = cache_dtype_info(cache_dtype)
+    if qmax is None:
+        return {
+            "ckv": jnp.zeros(lead + (num_blocks, block_size, kv_lora), dtype),
+            "krope": jnp.zeros(lead + (num_blocks, block_size, rope_dim),
+                               dtype),
+        }
     return {
-        "ckv": jnp.zeros(lead + (num_blocks, block_size, kv_lora), dtype),
-        "krope": jnp.zeros(lead + (num_blocks, block_size, rope_dim), dtype),
+        "ckv": jnp.zeros(lead + (num_blocks, block_size, kv_lora), qdtype),
+        "ckv_scale": jnp.ones(lead + (num_blocks, block_size, 1),
+                              jnp.float32),
+        "krope": jnp.zeros(lead + (num_blocks, block_size, rope_dim), qdtype),
+        "krope_scale": jnp.ones(lead + (num_blocks, block_size, 1),
+                                jnp.float32),
     }
 
 
@@ -122,6 +200,16 @@ def update_latent_paged(pool: Dict[str, Any], block_table, lengths,
     page = jnp.take_along_axis(jnp.asarray(block_table, jnp.int32),
                                (lengths // bs)[:, None], axis=1)[:, 0]
     slot = lengths % bs
+    if is_quantized_pool(pool):
+        qmax = cache_dtype_qmax(pool["ckv"].dtype)
+        ckv_q, ckv_s = quantize_latent(ckv_new, qmax, pool["ckv"].dtype)
+        kr_q, kr_s = quantize_latent(krope_new, qmax, pool["krope"].dtype)
+        return {
+            "ckv": pool["ckv"].at[page, slot].set(ckv_q),
+            "ckv_scale": pool["ckv_scale"].at[page, slot].set(ckv_s),
+            "krope": pool["krope"].at[page, slot].set(kr_q),
+            "krope_scale": pool["krope_scale"].at[page, slot].set(kr_s),
+        }
     return {
         "ckv": pool["ckv"].at[page, slot].set(
             ckv_new.astype(pool["ckv"].dtype)),
@@ -153,6 +241,16 @@ def update_latent_paged_chunk(pool: Dict[str, Any], block_table, lengths,
     blk = jnp.clip(pos // bs, 0, bt.shape[1] - 1)
     page = jnp.where(valid, jnp.take_along_axis(bt, blk, axis=1), 0)
     slot = pos % bs
+    if is_quantized_pool(pool):
+        qmax = cache_dtype_qmax(pool["ckv"].dtype)
+        ckv_q, ckv_s = quantize_latent(ckv_new, qmax, pool["ckv"].dtype)
+        kr_q, kr_s = quantize_latent(krope_new, qmax, pool["krope"].dtype)
+        return {
+            "ckv": pool["ckv"].at[page, slot].set(ckv_q),
+            "ckv_scale": pool["ckv_scale"].at[page, slot].set(ckv_s),
+            "krope": pool["krope"].at[page, slot].set(kr_q),
+            "krope_scale": pool["krope_scale"].at[page, slot].set(kr_s),
+        }
     return {
         "ckv": pool["ckv"].at[page, slot].set(
             ckv_new.astype(pool["ckv"].dtype)),
@@ -187,6 +285,14 @@ def gather_latent_paged(pool: Dict[str, Any], block_table):
     bs = pool["ckv"].shape[-2]
     ckv = pool["ckv"][bt].reshape(B, nb * bs, pool["ckv"].shape[-1])
     krope = pool["krope"][bt].reshape(B, nb * bs, pool["krope"].shape[-1])
+    if is_quantized_pool(pool):
+        # Dequantize the GATHERED view (f32), never the pool itself: an
+        # astype on the pool would hoist a full-precision HBM copy of the
+        # whole pool (the hazard core/mla.py's dtype NOTE documents, and
+        # analysis.audit flags).
+        ckv_s = pool["ckv_scale"][bt].reshape(B, nb * bs, 1)
+        kr_s = pool["krope_scale"][bt].reshape(B, nb * bs, 1)
+        return dequantize_latent(ckv, ckv_s), dequantize_latent(krope, kr_s)
     return ckv, krope
 
 
@@ -223,5 +329,20 @@ def bytes_per_token_dense(n_kv: int, head_dim: int, dtype_bytes: int = 2) -> int
     return 2 * n_kv * head_dim * dtype_bytes
 
 
-def bytes_per_token_latent(kv_lora: int, rope_dim: int, dtype_bytes: int = 2) -> int:
-    return (kv_lora + rope_dim) * dtype_bytes
+def bytes_per_token_latent(kv_lora: int, rope_dim: int, dtype_bytes: int = 2,
+                           cache_dtype: Optional[str] = None) -> float:
+    """Latent-cache bytes per cached token.  Quantized storage pays 1 byte
+    per element plus two f32 per-token-row scales ({ckv|krope} split)."""
+    qdtype, qmax = cache_dtype_info(cache_dtype)
+    if qmax is None:
+        return (kv_lora + rope_dim) * dtype_bytes
+    return (kv_lora + rope_dim) * 1 + 2 * 4
+
+
+def cache_element_bytes(kv_lora: int, rope_dim: int, dtype_bytes: int = 2,
+                        cache_dtype: Optional[str] = None) -> float:
+    """Effective bytes per latent-cache ELEMENT (scale overhead amortized
+    over the (D_kvl + D_rope) row) — the bytes-per-element axis the hwmodel
+    cost terms multiply by."""
+    tok = bytes_per_token_latent(kv_lora, rope_dim, dtype_bytes, cache_dtype)
+    return tok / float(kv_lora + rope_dim)

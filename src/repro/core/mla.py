@@ -264,9 +264,15 @@ def mla_prefill_chunk_paged(params, cfg: MLAConfig, x, pool: Dict[str, Any],
             from ..kernels import ops as kops  # local import: no cycle
             prefill_kernel = functools.partial(
                 kops.mla_prefill_paged_attention, impl="kernel")
+        qkw = {}
+        if cachelib.is_quantized_pool(pool):
+            # quantized pool: ship the per-token-slot scales to the kernel
+            # so dequant happens in-register, never in HBM
+            qkw = dict(ckv_scales=pool["ckv_scale"],
+                       krope_scales=pool["krope_scale"])
         o_lat = prefill_kernel(q_full, pool["ckv"], pool["krope"],
                                block_table, lengths, n_valid,
-                               softmax_scale=scale)
+                               softmax_scale=scale, **qkw)
         o = jnp.einsum("bchk,khv->bchv", o_lat.astype(x.dtype),
                        params["w_uv"].astype(x.dtype))
         out = jnp.einsum("bchv,hvd->bcd", o, params["w_o"].astype(x.dtype))
@@ -436,8 +442,15 @@ def mla_decode_paged(params, cfg: MLAConfig, x_t, pool: Dict[str, Any],
         # no contiguous gather is ever materialized.
         q_eff = _q_latent(params, cfg, q_l, q_nope, scheme)
         q_full = jnp.concatenate([q_eff, q_rope], axis=-1)
+        qkw = {}
+        if cachelib.is_quantized_pool(pool):
+            # quantized pool: ship the per-token-slot scales to the kernel
+            # so dequant happens in-register, never in HBM
+            qkw = dict(ckv_scales=pool["ckv_scale"],
+                       krope_scales=pool["krope_scale"])
         o_lat = decode_kernel(q_full, pool["ckv"], pool["krope"],
-                              block_table, lengths, softmax_scale=scale)
+                              block_table, lengths, softmax_scale=scale,
+                              **qkw)
         o = jnp.einsum("bhk,khv->bhv", o_lat, params["w_uv"].astype(x_t.dtype))
         out = jnp.einsum("bhv,hvd->bd", o, params["w_o"].astype(x_t.dtype))
         return out, pool

@@ -9,6 +9,8 @@ closed-form costs in ``repro.hwmodel.attention_costs`` and take argmin.
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
+
 from .mla import MLAConfig
 
 
@@ -24,25 +26,45 @@ class PlatformPoint:
         return self.peak_flops / self.hbm_bw
 
 
+def cache_width(cfg: MLAConfig, platform: PlatformPoint,
+                cache_dtype: Optional[str] = None) -> float:
+    """Per-element byte width of the latent pool under ``cache_dtype``
+    (None / 'bf16' -> the platform's compute width; 'int8' / 'fp8' -> the
+    1-byte payload plus the per-row f32 scale overhead amortized over the
+    row, see core.cache.cache_element_bytes).  Every roofline entry point
+    below funnels its cache terms through this so the dispatcher, the
+    drift channel and the bench report price the same pool."""
+    from .cache import cache_element_bytes  # local import: no cycle
+    return cache_element_bytes(cfg.kv_lora_rank, cfg.qk_rope_dim,
+                               dtype_bytes=platform.dtype_bytes,
+                               cache_dtype=cache_dtype)
+
+
 def step_time(scheme: str, cfg: MLAConfig, platform: PlatformPoint,
               cache_len: int, batch: int = 1,
-              paged_block: int = 0, dp_shards: int = 1) -> float:
+              paged_block: int = 0, dp_shards: int = 1,
+              cache_dtype: Optional[str] = None) -> float:
     """``paged_block > 0``: cost the paged latent cache (whole-block reads
     + block-table traffic).  ``dp_shards > 1``: per-DEVICE roofline of
     data-parallel serving — the batch-proportional cache terms shrink to
     the local batch while weight bytes stay whole (the devices run in
     lockstep, so the slowest == any one device; see
-    hwmodel.attention_costs.mla_decode_cost)."""
+    hwmodel.attention_costs.mla_decode_cost).  ``cache_dtype`` prices a
+    quantized latent pool (:func:`cache_width`): the cache streams
+    shrink while weights/activations stay at the compute width."""
     from ..hwmodel import attention_costs as ac  # local import: no cycle
     c = ac.mla_decode_cost(cfg, scheme=scheme, cache_len=cache_len,
                            batch=batch, dtype_bytes=platform.dtype_bytes,
-                           paged_block=paged_block, dp_shards=dp_shards)
+                           paged_block=paged_block, dp_shards=dp_shards,
+                           cache_dtype_bytes=cache_width(cfg, platform,
+                                                         cache_dtype))
     return max(c.flops / platform.peak_flops, c.bytes / platform.hbm_bw)
 
 
 def verify_time(scheme: str, cfg: MLAConfig, platform: PlatformPoint,
                 cache_len: int, k: int, batch: int = 1,
-                paged_block: int = 0, dp_shards: int = 1) -> float:
+                paged_block: int = 0, dp_shards: int = 1,
+                cache_dtype: Optional[str] = None) -> float:
     """Roofline time of one SPECULATIVE verify step (k + 1 query
     positions against the resident cache in one forward — see
     hwmodel.attention_costs.mla_verify_cost).  The spec-decode engine
@@ -52,14 +74,17 @@ def verify_time(scheme: str, cfg: MLAConfig, platform: PlatformPoint,
     from ..hwmodel import attention_costs as ac  # local import: no cycle
     c = ac.mla_verify_cost(cfg, scheme=scheme, cache_len=cache_len, k=k,
                            batch=batch, dtype_bytes=platform.dtype_bytes,
-                           paged_block=paged_block, dp_shards=dp_shards)
+                           paged_block=paged_block, dp_shards=dp_shards,
+                           cache_dtype_bytes=cache_width(cfg, platform,
+                                                         cache_dtype))
     return max(c.flops / platform.peak_flops, c.bytes / platform.hbm_bw)
 
 
 def prefill_time(cfg: MLAConfig, platform: PlatformPoint, seq_len: int,
                  batch: int = 1, cached_prefix: int = 0,
                  chunk: int = 0, paged_block: int = 0,
-                 impl: str = "pallas") -> float:
+                 impl: str = "pallas",
+                 cache_dtype: Optional[str] = None) -> float:
     """Roofline TTFT estimate for one MLA layer's prefill; ``cached_prefix``
     tokens come from the radix prefix cache (runtime.prefix_cache), so
     only the suffix is projected/written while still attending the full
@@ -73,22 +98,26 @@ def prefill_time(cfg: MLAConfig, platform: PlatformPoint, seq_len: int,
     reads of the fused kernel — the arithmetic-intensity delta the
     prefill kernel exists to claw back."""
     from ..hwmodel import attention_costs as ac  # local import: no cycle
+    cw = cache_width(cfg, platform, cache_dtype)
     if chunk and paged_block:
         c = ac.mla_prefill_chunk_cost(cfg, seq_len=seq_len, chunk=chunk,
                                       paged_block=paged_block, batch=batch,
                                       dtype_bytes=platform.dtype_bytes,
-                                      cached_prefix=cached_prefix, impl=impl)
+                                      cached_prefix=cached_prefix, impl=impl,
+                                      cache_dtype_bytes=cw)
     else:
         c = ac.mla_prefill_cost(cfg, seq_len=seq_len, batch=batch,
                                 dtype_bytes=platform.dtype_bytes,
-                                cached_prefix=cached_prefix)
+                                cached_prefix=cached_prefix,
+                                cache_dtype_bytes=cw)
     return max(c.flops / platform.peak_flops, c.bytes / platform.hbm_bw)
 
 
 def auto_dispatch(cfg: MLAConfig, platform: PlatformPoint, cache_len: int,
                   batch: int = 1, candidates=("seq", "rc", "ru"),
                   paged_block: int = 0, dp_shards: int = 1,
-                  verify_k: int = 0) -> str:
+                  verify_k: int = 0,
+                  cache_dtype: Optional[str] = None) -> str:
     """Return the fastest scheme for this (platform, cache, batch) point.
 
     The continuous-batching runtime calls this EVERY step on the live
@@ -109,8 +138,10 @@ def auto_dispatch(cfg: MLAConfig, platform: PlatformPoint, cache_len: int,
                    key=lambda s: verify_time(s, cfg, platform, cache_len,
                                              verify_k, batch,
                                              paged_block=paged_block,
-                                             dp_shards=dp_shards))
+                                             dp_shards=dp_shards,
+                                             cache_dtype=cache_dtype))
     return min(candidates, key=lambda s: step_time(s, cfg, platform,
                                                    cache_len, batch,
                                                    paged_block=paged_block,
-                                                   dp_shards=dp_shards))
+                                                   dp_shards=dp_shards,
+                                                   cache_dtype=cache_dtype))

@@ -17,7 +17,7 @@ Conventions (matching the letter):
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Dict, Optional
 
 from ..core.mla import MLAConfig
 
@@ -65,7 +65,8 @@ def _dims(cfg: MLAConfig, rope: bool):
 def mla_decode_cost(cfg: MLAConfig, *, scheme: str, cache_len: int,
                     batch: int = 1, dtype_bytes: int = 2, rope: bool = False,
                     include_io: bool = False, paged_block: int = 0,
-                    table_entry_bytes: int = 4, dp_shards: int = 1) -> Cost:
+                    table_entry_bytes: int = 4, dp_shards: int = 1,
+                    cache_dtype_bytes: Optional[float] = None) -> Cost:
     """One decode step of one MLA layer. ``cache_len`` = L (incl. new token).
 
     ``paged_block > 0`` models the paged latent cache: reads happen in
@@ -83,11 +84,20 @@ def mla_decode_cost(cfg: MLAConfig, *, scheme: str, cache_len: int,
     replicated, but a device only reads the blocks its local rows
     reference).  This is the scale-out shape of the paper's bandwidth
     argument: DP scales the served batch while per-device cache traffic
-    stays flat."""
+    stays flat.
+
+    ``cache_dtype_bytes`` overrides the per-ELEMENT byte width of the
+    latent-cache terms only (read + write): a quantized {int8|fp8} pool
+    stores 1-byte payloads plus two per-row f32 scales, which
+    core.cache.cache_element_bytes folds into a fractional width.
+    Weights, activations and spills stay at ``dtype_bytes`` — only the
+    cache streams shrink, which is exactly the crossover shift
+    auto_dispatch must see."""
     D, H, Q, K, dn, dr, dv = _dims(cfg, rope)
     if dp_shards < 1:
         raise ValueError(f"dp_shards must be >= 1, got {dp_shards}")
     B, L, w = -(-batch // dp_shards), cache_len, dtype_bytes
+    cw = dtype_bytes if cache_dtype_bytes is None else cache_dtype_bytes
     fl: Dict[str, float] = {}
     by: Dict[str, float] = {}
 
@@ -99,11 +109,11 @@ def mla_decode_cost(cfg: MLAConfig, *, scheme: str, cache_len: int,
     fl["v_up"] = 2 * B * H * K * dv
     fl["o_proj"] = 2 * B * H * dv * D
     by["w_common"] = (D * Q + D * (K + dr) + K * H * dv + H * dv * D) * w
-    by["cache_read"] = B * L * (K + dr) * w
-    by["cache_write"] = B * (K + dr) * w
+    by["cache_read"] = B * L * (K + dr) * cw
+    by["cache_write"] = B * (K + dr) * cw
     if paged_block:
         n_blk = -(-L // paged_block)
-        by["cache_read"] = B * n_blk * paged_block * (K + dr) * w
+        by["cache_read"] = B * n_blk * paged_block * (K + dr) * cw
         by["block_table"] = B * n_blk * table_entry_bytes
 
     # ---- scheme-specific nope-query transform --------------------------
@@ -139,11 +149,41 @@ def mla_decode_cost(cfg: MLAConfig, *, scheme: str, cache_len: int,
     return Cost(sum(fl.values()), sum(by.values()), {**fl, **{f"B:{k}": v for k, v in by.items()}})
 
 
+def rescale_multiplies(cfg: MLAConfig, *, cache_len: int, batch: int = 1,
+                       paged_block: int = 1, rescale: str = "exp_add",
+                       rope: bool = True) -> float:
+    """Modeled per-layer count of online-softmax RESCALE multiplies in one
+    decode step of the paged kernel (kernels.mla_decode): every block-tile
+    update corrects the running accumulator (H x kv_lora) and denominator
+    (H) by exp(m_prev - m_new).
+
+      'mul'     — the textbook FlashAttention correction: one f32 multiply
+                  per corrected element, B * n_tiles * H * (kv_lora + 1).
+      'exp_add' — AMLA-style exponent-addition (arXiv:2509.25224): m is
+                  quantized to integers in log2 space, so the correction
+                  2^{-d} lands as an integer add into the f32 exponent
+                  field — zero multiplies on the rescale path (the
+                  per-element cost degrades to bitcast + integer add,
+                  which shares no port with the MXU/VPU multiplier).
+
+    This isolates the term the AMLA trick deletes; it is NOT folded into
+    :func:`mla_decode_cost` (which counts MAC FLOPs only, per the paper's
+    convention) — tests assert the modeled count drops to zero."""
+    if rescale not in ("exp_add", "mul"):
+        raise ValueError(f"unknown rescale {rescale!r}")
+    if rescale == "exp_add":
+        return 0.0
+    _, H, _, K, _, _, _ = _dims(cfg, rope)
+    n_tiles = -(-cache_len // max(paged_block, 1))
+    return float(batch * n_tiles * H * (K + 1))
+
+
 def mla_verify_cost(cfg: MLAConfig, *, scheme: str, cache_len: int,
                     k: int, batch: int = 1, dtype_bytes: int = 2,
                     rope: bool = False, include_io: bool = False,
                     paged_block: int = 0, table_entry_bytes: int = 4,
-                    dp_shards: int = 1) -> Cost:
+                    dp_shards: int = 1,
+                    cache_dtype_bytes: Optional[float] = None) -> Cost:
     """One SPECULATIVE-DECODE verify step of one MLA layer: q = k + 1
     query positions (the last sampled token + k draft tokens) scored
     against the same resident cache in one forward
@@ -167,6 +207,7 @@ def mla_verify_cost(cfg: MLAConfig, *, scheme: str, cache_len: int,
     if dp_shards < 1:
         raise ValueError(f"dp_shards must be >= 1, got {dp_shards}")
     B, w, q = -(-batch // dp_shards), dtype_bytes, k + 1
+    cw = dtype_bytes if cache_dtype_bytes is None else cache_dtype_bytes
     # mean attended length over the in-window causal ramp
     Lbar = cache_len + (q + 1) / 2
     L_end = cache_len + q                   # resident extent after the step
@@ -182,11 +223,11 @@ def mla_verify_cost(cfg: MLAConfig, *, scheme: str, cache_len: int,
     fl["o_proj"] = 2 * B * q * H * dv * D
     # ---- batch- AND window-shared streams: paid once per round ----------
     by["w_common"] = (D * Q + D * (K + dr) + K * H * dv + H * dv * D) * w
-    by["cache_read"] = B * cache_len * (K + dr) * w
-    by["cache_write"] = B * q * (K + dr) * w
+    by["cache_read"] = B * cache_len * (K + dr) * cw
+    by["cache_write"] = B * q * (K + dr) * cw
     if paged_block:
         n_blk = -(-L_end // paged_block)
-        by["cache_read"] = B * n_blk * paged_block * (K + dr) * w
+        by["cache_read"] = B * n_blk * paged_block * (K + dr) * cw
         by["block_table"] = B * n_blk * table_entry_bytes
 
     if scheme == "seq":
@@ -223,7 +264,8 @@ def mla_verify_cost(cfg: MLAConfig, *, scheme: str, cache_len: int,
 def spec_break_even(cfg: MLAConfig, *, scheme: str, cache_len: int, k: int,
                     batch: int = 1, dtype_bytes: int = 2,
                     paged_block: int = 0, dp_shards: int = 1,
-                    draft_bytes_frac: float = 0.0) -> Dict[str, float]:
+                    draft_bytes_frac: float = 0.0,
+                    cache_dtype_bytes: Optional[float] = None) -> Dict[str, float]:
     """Expected-accepted-length break-even of speculative decoding, on
     the bandwidth axis (the regime the paper places large-batch MLA
     decode in): one verify round emits E in [1, k+1] tokens for one
@@ -238,10 +280,12 @@ def spec_break_even(cfg: MLAConfig, *, scheme: str, cache_len: int, k: int,
     agree on when drafting pays."""
     verify = mla_verify_cost(cfg, scheme=scheme, cache_len=cache_len, k=k,
                              batch=batch, dtype_bytes=dtype_bytes,
-                             paged_block=paged_block, dp_shards=dp_shards)
+                             paged_block=paged_block, dp_shards=dp_shards,
+                             cache_dtype_bytes=cache_dtype_bytes)
     decode = mla_decode_cost(cfg, scheme=scheme, cache_len=cache_len,
                              batch=batch, dtype_bytes=dtype_bytes,
-                             paged_block=paged_block, dp_shards=dp_shards)
+                             paged_block=paged_block, dp_shards=dp_shards,
+                             cache_dtype_bytes=cache_dtype_bytes)
     round_bytes = verify.bytes + k * draft_bytes_frac * decode.bytes
     return {
         "verify_bytes": verify.bytes,
@@ -256,7 +300,8 @@ def spec_break_even(cfg: MLAConfig, *, scheme: str, cache_len: int, k: int,
 
 def mla_prefill_cost(cfg: MLAConfig, *, seq_len: int, batch: int = 1,
                      dtype_bytes: int = 2, rope: bool = False, causal: bool = True,
-                     include_io: bool = True, cached_prefix: int = 0) -> Cost:
+                     include_io: bool = True, cached_prefix: int = 0,
+                     cache_dtype_bytes: Optional[float] = None) -> Cost:
     """Prefill of an L-token prompt; ``cached_prefix = P`` tokens are
     served by the radix prefix cache (runtime.prefix_cache): only the
     Ls = L - P suffix tokens are projected / written, the suffix queries
@@ -266,6 +311,7 @@ def mla_prefill_cost(cfg: MLAConfig, *, seq_len: int, batch: int = 1,
     pair fraction (L^2 - P^2) / 2."""
     D, H, Q, K, dn, dr, dv = _dims(cfg, rope)
     B, L, w = batch, seq_len, dtype_bytes
+    cw = dtype_bytes if cache_dtype_bytes is None else cache_dtype_bytes
     P = cached_prefix
     if not 0 <= P < max(L, 1):
         raise ValueError(f"cached_prefix {P} out of range for seq_len {L}")
@@ -288,11 +334,11 @@ def mla_prefill_cost(cfg: MLAConfig, *, seq_len: int, batch: int = 1,
     by = {
         "weights": (D * Q + Q * H * (dn + dr) + D * (K + dr) + K * H * dn
                     + K * H * dv + H * dv * D) * w,
-        "cache_write": B * Ls * (K + dr) * w,
+        "cache_write": B * Ls * (K + dr) * cw,
     }
     if P:
         # the shared prefix's compact latents stream in from the pool
-        by["prefix_read"] = B * P * (K + dr) * w
+        by["prefix_read"] = B * P * (K + dr) * cw
     if include_io:
         by["io"] = 2 * B * Ls * D * w
     return Cost(sum(fl.values()), sum(by.values()), {**fl, **{f"B:{k}": v for k, v in by.items()}})
@@ -303,7 +349,8 @@ def mla_prefill_chunk_cost(cfg: MLAConfig, *, seq_len: int, chunk: int,
                            dtype_bytes: int = 2, rope: bool = False,
                            cached_prefix: int = 0, impl: str = "pallas",
                            include_io: bool = True,
-                           table_entry_bytes: int = 4) -> Cost:
+                           table_entry_bytes: int = 4,
+                           cache_dtype_bytes: Optional[float] = None) -> Cost:
     """Chunked PAGED prefill of an L-token prompt, C tokens per chunk,
     over a block pool with ``paged_block``-token blocks.
 
@@ -335,6 +382,7 @@ def mla_prefill_chunk_cost(cfg: MLAConfig, *, seq_len: int, chunk: int,
     D, H, Q, K, dn, dr, dv = _dims(cfg, rope)
     B, L, w, P, C, bs = batch, seq_len, dtype_bytes, cached_prefix, chunk, \
         paged_block
+    cw = dtype_bytes if cache_dtype_bytes is None else cache_dtype_bytes
     if not 0 <= P < max(L, 1):
         raise ValueError(f"cached_prefix {P} out of range for seq_len {L}")
     Ls = L - P
@@ -353,7 +401,7 @@ def mla_prefill_chunk_cost(cfg: MLAConfig, *, seq_len: int, chunk: int,
                + K * H * dv + H * dv * D) * w
     by: Dict[str, float] = {
         "weights": w_bytes * n_chunks,      # re-streamed every chunk step
-        "cache_write": B * Ls * (K + dr) * w,
+        "cache_write": B * Ls * (K + dr) * cw,
     }
     W = -(-L // bs) * bs                    # table extent, whole blocks
     fl_attn = rd_pool = rd_table = view_bytes = 0.0
@@ -363,14 +411,16 @@ def mla_prefill_chunk_cost(cfg: MLAConfig, *, seq_len: int, chunk: int,
         ext_k = -(-end_k // bs) * bs        # resident extent, whole blocks
         if impl == "pallas":
             fl_attn += 2 * B * H * c_k * ext_k * ((K + dr) + K)
-            rd_pool += B * ext_k * (K + dr) * w
+            rd_pool += B * ext_k * (K + dr) * cw
             rd_table += B * (ext_k // bs) * table_entry_bytes
         else:
             # scores/PV run over the FULL gathered view width W (masked
             # entries are still computed), and the view round-trips HBM:
-            # pool gather read + view write + attention re-read.
+            # pool gather read (cache width) + dequantized f32 view
+            # write + attention re-read (compute width — the gather path
+            # materializes the view in f32/compute dtype, not int8).
             fl_attn += 2 * B * H * c_k * W * ((K + dr) + K)
-            rd_pool += B * W * (K + dr) * w
+            rd_pool += B * W * (K + dr) * cw
             view_bytes += 2 * B * W * (K + dr) * w
     fl["attn_scores_pv"] = fl_attn
     by["cache_read"] = rd_pool

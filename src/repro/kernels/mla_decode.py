@@ -38,10 +38,62 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -2.0 ** 30
+INV_LN2 = 1.4426950408889634        # log2(e): folds exp into exp2
+RESCALES = ("exp_add", "mul")
+
+
+def exp_add_rescale(x, d_i):
+    """x * 2**d_i for f32 ``x`` and int32 ``d_i <= 0`` via IEEE-754 exponent
+    ADDITION (AMLA, arxiv 2509.25224): bitcast to int32, add d_i into the
+    exponent field, bitcast back.  Zero inputs and exponent underflow
+    (biased exponent reaching 0) flush to 0.0; d_i <= 0 never touches the
+    sign bit."""
+    bits = jax.lax.bitcast_convert_type(x, jnp.int32)
+    exp_field = (bits >> 23) & 0xFF
+    shifted = jax.lax.bitcast_convert_type(bits + (d_i << 23), jnp.float32)
+    ok = (x != 0.0) & (exp_field + d_i > 0)
+    return jnp.where(ok, shifted, 0.0)
+
+
+def softmax_tile_update(s, mask, ckv, acc, m_sc, l_sc, *, rescale):
+    """One online-softmax + PV tile update on VMEM scratch state, shared by
+    the decode and prefill kernels.  ``s`` is the scaled score tile with
+    masked lanes already at NEG_INF; ``ckv`` the (already dequantized) f32
+    value tile.
+
+    rescale='mul'     — classic FlashAttention: real-valued running max,
+      state rescaled by corr = exp(m_prev - m_new) multiplies.
+    rescale='exp_add' — AMLA-style: base-2 softmax with the running max
+      quantized up to an integer, so the correction 2**d
+      (d = m_prev - m_new, an integer <= 0) is applied by adding d to the
+      exponent bits of the f32 state — the per-tile rescale multiplies on
+      acc/l disappear from the inner loop.
+    """
+    m_prev = m_sc[...]
+    if rescale == "mul":
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_sc[...] = l_sc[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc[...] = acc[...] * corr + p @ ckv
+    elif rescale == "exp_add":
+        s2 = s * INV_LN2
+        m_new = jnp.ceil(
+            jnp.maximum(m_prev, jnp.max(s2, axis=1, keepdims=True)))
+        p = jnp.where(mask, jnp.exp2(s2 - m_new), 0.0)
+        # d <= 0 by construction; anything below -254 zeroes every f32
+        # anyway, and the clip keeps d << 23 inside int32.
+        d_i = jnp.clip(m_prev - m_new, -254.0, 0.0).astype(jnp.int32)
+        l_sc[...] = (exp_add_rescale(l_sc[...], d_i)
+                     + jnp.sum(p, axis=1, keepdims=True))
+        acc[...] = exp_add_rescale(acc[...], d_i) + p @ ckv
+    else:
+        raise ValueError(f"unknown rescale {rescale!r}; expected {RESCALES}")
+    m_sc[...] = m_new
 
 
 def _kernel(idx_ref, q_ref, ckv_ref, krope_ref, o_ref, acc, m_sc, l_sc, *,
-            scale, v_dim, block_k, nk):
+            scale, v_dim, block_k, nk, rescale):
     ik = pl.program_id(1)
     index = idx_ref[0]
 
@@ -64,13 +116,7 @@ def _kernel(idx_ref, q_ref, ckv_ref, krope_ref, o_ref, acc, m_sc, l_sc, *,
             jnp.int32, s.shape, 1)
         mask = k_pos <= index
         s = jnp.where(mask, s, NEG_INF)
-        m_prev = m_sc[...]
-        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
-        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
-        corr = jnp.exp(m_prev - m_new)
-        l_sc[...] = l_sc[...] * corr + jnp.sum(p, axis=1, keepdims=True)
-        acc[...] = acc[...] * corr + p @ ckv
-        m_sc[...] = m_new
+        softmax_tile_update(s, mask, ckv, acc, m_sc, l_sc, rescale=rescale)
 
     @pl.when(ik == nk - 1)
     def _done():
@@ -79,8 +125,12 @@ def _kernel(idx_ref, q_ref, ckv_ref, krope_ref, o_ref, acc, m_sc, l_sc, *,
         o_ref[0] = (acc[...] / l_safe).astype(o_ref.dtype)
 
 
-def _paged_kernel(bt_ref, idx_ref, q_ref, ckv_ref, krope_ref, o_ref,
-                  acc, m_sc, l_sc, *, scale, v_dim, bs, nb):
+def _paged_kernel(bt_ref, idx_ref, q_ref, ckv_ref, krope_ref, *rest,
+                  scale, v_dim, bs, nb, rescale, quantized):
+    if quantized:
+        ckv_s_ref, krope_s_ref, o_ref, acc, m_sc, l_sc = rest
+    else:
+        o_ref, acc, m_sc, l_sc = rest
     b = pl.program_id(0)
     j = pl.program_id(1)
     index = idx_ref[b]                      # newest valid position, or -1
@@ -96,19 +146,19 @@ def _paged_kernel(bt_ref, idx_ref, q_ref, ckv_ref, krope_ref, o_ref,
         q = q_ref[0].astype(jnp.float32)          # (H, Dl+Dr)
         ckv = ckv_ref[0].astype(jnp.float32)      # (bs, Dl) — pool block
         krope = krope_ref[0].astype(jnp.float32)  # (bs, Dr)
+        if quantized:
+            # dequant in-register: one f32 scale per token slot, the block's
+            # scales DMA'd alongside it through the same block-table
+            # index_map
+            ckv = ckv * ckv_s_ref[0]              # (bs, 1) broadcast
+            krope = krope * krope_s_ref[0]
         s = (jax.lax.dot_general(q[:, :v_dim], ckv, (((1,), (1,)), ((), ())))
              + jax.lax.dot_general(q[:, v_dim:], krope,
                                    (((1,), (1,)), ((), ())))) * scale
         k_pos = j * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
         mask = k_pos <= index
         s = jnp.where(mask, s, NEG_INF)
-        m_prev = m_sc[...]
-        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
-        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
-        corr = jnp.exp(m_prev - m_new)
-        l_sc[...] = l_sc[...] * corr + jnp.sum(p, axis=1, keepdims=True)
-        acc[...] = acc[...] * corr + p @ ckv
-        m_sc[...] = m_new
+        softmax_tile_update(s, mask, ckv, acc, m_sc, l_sc, rescale=rescale)
 
     @pl.when(j == nb - 1)
     def _done():
@@ -119,6 +169,8 @@ def _paged_kernel(bt_ref, idx_ref, q_ref, ckv_ref, krope_ref, o_ref,
 
 def mla_decode_paged_kernel(q_full, ckv_pages, krope_pages, block_tables,
                             indices, *, softmax_scale: Optional[float] = None,
+                            ckv_scales=None, krope_scales=None,
+                            rescale: str = "exp_add",
                             interpret: Optional[bool] = None):
     """Paged flash-decode over the latent block pool.
 
@@ -133,6 +185,13 @@ def mla_decode_paged_kernel(q_full, ckv_pages, krope_pages, block_tables,
     HBM->VMEM — the single-stream property of the contiguous kernel is
     preserved under paging, and blocks past ``indices[b]`` skip their
     compute (the DMA'd null/stale block is never read by the math).
+
+    For a QUANTIZED pool pass ``ckv_scales``/``krope_scales`` (N, bs, 1)
+    f32: each grid step DMAs the block's scales through the same
+    block-table index_map and the kernel dequantizes in-register — the
+    cache never exists at full precision in HBM.  ``rescale`` selects the
+    online-softmax correction: 'exp_add' (AMLA exponent addition, default)
+    or 'mul' (classic FlashAttention).
     """
     B, H, D = q_full.shape
     v_dim, dr = ckv_pages.shape[-1], krope_pages.shape[-1]
@@ -141,22 +200,34 @@ def mla_decode_paged_kernel(q_full, ckv_pages, krope_pages, block_tables,
     scale = softmax_scale if softmax_scale is not None else D ** -0.5
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
+    quantized = ckv_scales is not None
+    if quantized != (krope_scales is not None):
+        raise ValueError("pass both ckv_scales and krope_scales or neither")
     kernel = functools.partial(_paged_kernel, scale=scale, v_dim=v_dim,
-                               bs=bs, nb=nb)
+                               bs=bs, nb=nb, rescale=rescale,
+                               quantized=quantized)
     block_tables = jnp.asarray(block_tables, jnp.int32)
     indices = jnp.asarray(indices, jnp.int32)
+    in_specs = [
+        pl.BlockSpec((1, H, D), lambda b, j, bt, idx: (b, 0, 0)),
+        pl.BlockSpec((1, bs, v_dim),
+                     lambda b, j, bt, idx: (bt[b, j], 0, 0)),
+        pl.BlockSpec((1, bs, dr),
+                     lambda b, j, bt, idx: (bt[b, j], 0, 0)),
+    ]
+    operands = [block_tables, indices, q_full, ckv_pages, krope_pages]
+    if quantized:
+        in_specs += [
+            pl.BlockSpec((1, bs, 1), lambda b, j, bt, idx: (bt[b, j], 0, 0)),
+            pl.BlockSpec((1, bs, 1), lambda b, j, bt, idx: (bt[b, j], 0, 0)),
+        ]
+        operands += [ckv_scales, krope_scales]
     out = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=2,
             grid=(B, nb),
-            in_specs=[
-                pl.BlockSpec((1, H, D), lambda b, j, bt, idx: (b, 0, 0)),
-                pl.BlockSpec((1, bs, v_dim),
-                             lambda b, j, bt, idx: (bt[b, j], 0, 0)),
-                pl.BlockSpec((1, bs, dr),
-                             lambda b, j, bt, idx: (bt[b, j], 0, 0)),
-            ],
+            in_specs=in_specs,
             out_specs=pl.BlockSpec((1, H, v_dim),
                                    lambda b, j, bt, idx: (b, 0, 0)),
             scratch_shapes=[
@@ -167,13 +238,14 @@ def mla_decode_paged_kernel(q_full, ckv_pages, krope_pages, block_tables,
         ),
         out_shape=jax.ShapeDtypeStruct((B, H, v_dim), q_full.dtype),
         interpret=interpret,
-    )(block_tables, indices, q_full, ckv_pages, krope_pages)
+    )(*operands)
     return out
 
 
 def mla_decode_kernel(q_full, ckv, krope, index, *,
                       softmax_scale: Optional[float] = None,
-                      block_k: int = 512, interpret: Optional[bool] = None):
+                      block_k: int = 512, rescale: str = "exp_add",
+                      interpret: Optional[bool] = None):
     """q_full: (B, H, Dl+Dr) = [q_latent ; q_rope]; ckv: (B, S, Dl);
     krope: (B, S, Dr); index: scalar int32 (newest valid position).
     Returns (B, H, Dl) — attention-weighted latent values."""
@@ -190,7 +262,7 @@ def mla_decode_kernel(q_full, ckv, krope, index, *,
     nk = ckv.shape[1] // bk
     dr = krope.shape[-1]
     kernel = functools.partial(_kernel, scale=scale, v_dim=v_dim,
-                               block_k=bk, nk=nk)
+                               block_k=bk, nk=nk, rescale=rescale)
     index = jnp.asarray(index, jnp.int32).reshape((1,))
     out = pl.pallas_call(
         kernel,

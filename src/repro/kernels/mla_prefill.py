@@ -47,11 +47,17 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .mla_decode import softmax_tile_update
+
 NEG_INF = -2.0 ** 30
 
 
 def _prefill_kernel(bt_ref, len_ref, nv_ref, q_ref, ckv_ref, krope_ref,
-                    o_ref, acc, m_sc, l_sc, *, scale, v_dim, bq, H, bs, nb):
+                    *rest, scale, v_dim, bq, H, bs, nb, rescale, quantized):
+    if quantized:
+        ckv_s_ref, krope_s_ref, o_ref, acc, m_sc, l_sc = rest
+    else:
+        o_ref, acc, m_sc, l_sc = rest
     b = pl.program_id(0)
     iq = pl.program_id(1)
     j = pl.program_id(2)
@@ -73,6 +79,11 @@ def _prefill_kernel(bt_ref, len_ref, nv_ref, q_ref, ckv_ref, krope_ref,
         q = q_ref[0].astype(jnp.float32).reshape(bq * H, -1)  # (bq*H, Dl+Dr)
         ckv = ckv_ref[0].astype(jnp.float32)                  # (bs, Dl)
         krope = krope_ref[0].astype(jnp.float32)              # (bs, Dr)
+        if quantized:
+            # dequant in-register: per-token-slot f32 scales DMA'd through
+            # the same block-table index_map as the data block
+            ckv = ckv * ckv_s_ref[0]                          # (bs, 1)
+            krope = krope * krope_s_ref[0]
         # two-term scores on the split pool (no fused [ckv|krope] copy)
         s = (jax.lax.dot_general(q[:, :v_dim], ckv, (((1,), (1,)), ((), ())))
              + jax.lax.dot_general(q[:, v_dim:], krope,
@@ -83,13 +94,7 @@ def _prefill_kernel(bt_ref, len_ref, nv_ref, q_ref, ckv_ref, krope_ref,
         k_pos = j * bs + col            # absolute pool position
         mask = (k_pos <= start + c) & (c < nv)
         s = jnp.where(mask, s, NEG_INF)
-        m_prev = m_sc[...]
-        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
-        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
-        corr = jnp.exp(m_prev - m_new)
-        l_sc[...] = l_sc[...] * corr + jnp.sum(p, axis=1, keepdims=True)
-        acc[...] = acc[...] * corr + p @ ckv
-        m_sc[...] = m_new
+        softmax_tile_update(s, mask, ckv, acc, m_sc, l_sc, rescale=rescale)
 
     @pl.when(j == nb - 1)
     def _done():
@@ -102,6 +107,8 @@ def mla_prefill_paged_kernel(q_full, ckv_pages, krope_pages, block_tables,
                              lengths, n_valid, *,
                              softmax_scale: Optional[float] = None,
                              block_q: int = 0,
+                             ckv_scales=None, krope_scales=None,
+                             rescale: str = "exp_add",
                              interpret: Optional[bool] = None):
     """Paged chunked-prefill flash attention over the latent block pool.
 
@@ -117,6 +124,11 @@ def mla_prefill_paged_kernel(q_full, ckv_pages, krope_pages, block_tables,
     so each grid step DMAs exactly one pool block HBM->VMEM — the
     single-stream property of the paged decode kernel, generalized to C
     causal query positions.
+
+    For a QUANTIZED pool pass ``ckv_scales``/``krope_scales`` (N, bs, 1)
+    f32 — dequant happens in-register per pool block.  ``rescale``
+    selects the online-softmax correction: 'exp_add' (AMLA exponent
+    addition, default) or 'mul' (classic FlashAttention).
     """
     B, C, H, D = q_full.shape
     v_dim, dr = ckv_pages.shape[-1], krope_pages.shape[-1]
@@ -125,29 +137,44 @@ def mla_prefill_paged_kernel(q_full, ckv_pages, krope_pages, block_tables,
     scale = softmax_scale if softmax_scale is not None else D ** -0.5
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
+    quantized = ckv_scales is not None
+    if quantized != (krope_scales is not None):
+        raise ValueError("pass both ckv_scales and krope_scales or neither")
     bq = C if block_q <= 0 else min(block_q, C)
     pad = -C % bq
     if pad:
         q_full = jnp.pad(q_full, ((0, 0), (0, pad), (0, 0), (0, 0)))
     nq = q_full.shape[1] // bq
     kernel = functools.partial(_prefill_kernel, scale=scale, v_dim=v_dim,
-                               bq=bq, H=H, bs=bs, nb=nb)
+                               bq=bq, H=H, bs=bs, nb=nb, rescale=rescale,
+                               quantized=quantized)
     block_tables = jnp.asarray(block_tables, jnp.int32)
     lengths = jnp.asarray(lengths, jnp.int32)
     n_valid = jnp.asarray(n_valid, jnp.int32)
+    in_specs = [
+        pl.BlockSpec((1, bq, H, D),
+                     lambda b, iq, j, bt, ln, nv: (b, iq, 0, 0)),
+        pl.BlockSpec((1, bs, v_dim),
+                     lambda b, iq, j, bt, ln, nv: (bt[b, j], 0, 0)),
+        pl.BlockSpec((1, bs, dr),
+                     lambda b, iq, j, bt, ln, nv: (bt[b, j], 0, 0)),
+    ]
+    operands = [block_tables, lengths, n_valid, q_full, ckv_pages,
+                krope_pages]
+    if quantized:
+        in_specs += [
+            pl.BlockSpec((1, bs, 1),
+                         lambda b, iq, j, bt, ln, nv: (bt[b, j], 0, 0)),
+            pl.BlockSpec((1, bs, 1),
+                         lambda b, iq, j, bt, ln, nv: (bt[b, j], 0, 0)),
+        ]
+        operands += [ckv_scales, krope_scales]
     out = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=3,
             grid=(B, nq, nb),
-            in_specs=[
-                pl.BlockSpec((1, bq, H, D),
-                             lambda b, iq, j, bt, ln, nv: (b, iq, 0, 0)),
-                pl.BlockSpec((1, bs, v_dim),
-                             lambda b, iq, j, bt, ln, nv: (bt[b, j], 0, 0)),
-                pl.BlockSpec((1, bs, dr),
-                             lambda b, iq, j, bt, ln, nv: (bt[b, j], 0, 0)),
-            ],
+            in_specs=in_specs,
             out_specs=pl.BlockSpec(
                 (1, bq, H, v_dim),
                 lambda b, iq, j, bt, ln, nv: (b, iq, 0, 0)),
@@ -159,5 +186,5 @@ def mla_prefill_paged_kernel(q_full, ckv_pages, krope_pages, block_tables,
         ),
         out_shape=jax.ShapeDtypeStruct((B, nq * bq, H, v_dim), q_full.dtype),
         interpret=interpret,
-    )(block_tables, lengths, n_valid, q_full, ckv_pages, krope_pages)
+    )(*operands)
     return out[:, :C] if pad else out

@@ -71,42 +71,73 @@ def mla_decode_attention(q_full, ckv, krope, index, *, impl: str = "ref",
 def mla_decode_paged_attention(q_full, ckv_pages, krope_pages, block_tables,
                                indices, *, impl: str = "ref",
                                softmax_scale: Optional[float] = None,
+                               ckv_scales=None, krope_scales=None,
+                               rescale: str = "exp_add",
                                mesh: Optional[Mesh] = None, dp_axes=None):
     """Paged absorbed-MLA decode: q_full (B,H,Dl+Dr), pool pages
     (N,bs,Dl)/(N,bs,Dr), block_tables (B,nb), per-request ``indices``
     (B,) -> (B,H,Dl).
 
+    Quantized pools pass per-token-slot ``ckv_scales``/``krope_scales``
+    (N,bs,1) f32: the kernel dequantizes in-register, the ref oracle on
+    the gathered f32 view.  ``rescale`` picks the kernel's online-softmax
+    correction (AMLA 'exp_add' or classic 'mul'); the oracle's exact
+    softmax ignores it.
+
     Under shard_map the batch (and with it the block tables / indices)
-    shards over the DP axes and heads over 'model'; the block POOL is
-    replicated over 'model' exactly like the contiguous latent cache (the
-    MQA structure of absorbed MLA: head shards re-read the same compact
-    pool)."""
+    shards over the DP axes and heads over 'model'; the block POOL (data
+    and scale leaves alike) is replicated over 'model' exactly like the
+    contiguous latent cache (the MQA structure of absorbed MLA: head
+    shards re-read the same compact pool)."""
     if impl == "ref":
         return ref.mla_decode_paged_ref(q_full, ckv_pages, krope_pages,
                                         block_tables, indices,
-                                        softmax_scale=softmax_scale)
-    fn = functools.partial(mla_decode_paged_kernel,
-                           softmax_scale=softmax_scale)
+                                        softmax_scale=softmax_scale,
+                                        ckv_scales=ckv_scales,
+                                        krope_scales=krope_scales)
+    quantized = ckv_scales is not None
     if mesh is None:
-        return fn(q_full, ckv_pages, krope_pages, block_tables, indices)
+        return mla_decode_paged_kernel(
+            q_full, ckv_pages, krope_pages, block_tables, indices,
+            softmax_scale=softmax_scale, ckv_scales=ckv_scales,
+            krope_scales=krope_scales, rescale=rescale)
     dp = dp_axes if dp_axes is not None else tuple(
         a for a in ("pod", "data") if a in mesh.axis_names)
+    in_specs = [PS(dp, "model", None), PS(None, None, None),
+                PS(None, None, None), PS(dp, None), PS(dp)]
+    operands = [q_full, ckv_pages, krope_pages, block_tables, indices]
+    if quantized:
+        in_specs += [PS(None, None, None), PS(None, None, None)]
+        operands += [ckv_scales, krope_scales]
+
+        def fn(q, c, r, t, i, cs, rs):
+            return mla_decode_paged_kernel(
+                q, c, r, t, i, softmax_scale=softmax_scale,
+                ckv_scales=cs, krope_scales=rs, rescale=rescale)
+    else:
+        def fn(q, c, r, t, i):
+            return mla_decode_paged_kernel(
+                q, c, r, t, i, softmax_scale=softmax_scale, rescale=rescale)
     return compat.shard_map(
-        lambda q, c, r, t, i: fn(q, c, r, t, i), mesh=mesh,
-        in_specs=(PS(dp, "model", None), PS(None, None, None),
-                  PS(None, None, None), PS(dp, None), PS(dp)),
+        fn, mesh=mesh, in_specs=tuple(in_specs),
         out_specs=PS(dp, "model", None), check_vma=False,
-    )(q_full, ckv_pages, krope_pages, block_tables, indices)
+    )(*operands)
 
 
 def mla_prefill_paged_attention(q_full, ckv_pages, krope_pages, block_tables,
                                 lengths, n_valid, *, impl: str = "ref",
                                 softmax_scale: Optional[float] = None,
+                                ckv_scales=None, krope_scales=None,
+                                rescale: str = "exp_add",
                                 mesh: Optional[Mesh] = None, dp_axes=None,
                                 block_q: int = 0):
     """Paged chunked-prefill MLA attention: q_full (B,C,H,Dl+Dr), pool
     pages (N,bs,Dl)/(N,bs,Dr), block_tables (B,nb), per-request
     ``lengths``/``n_valid`` (B,) -> (B,C,H,Dl).
+
+    Quantized pools pass ``ckv_scales``/``krope_scales`` (N,bs,1) f32 and
+    ``rescale`` picks the kernel's online-softmax correction — see
+    :func:`mla_decode_paged_attention`.
 
     The multi-query sibling of :func:`mla_decode_paged_attention`: under
     shard_map the batch (and with it the block tables / lengths /
@@ -117,17 +148,32 @@ def mla_prefill_paged_attention(q_full, ckv_pages, krope_pages, block_tables,
     if impl == "ref":
         return ref.mla_prefill_paged_ref(q_full, ckv_pages, krope_pages,
                                          block_tables, lengths, n_valid,
-                                         softmax_scale=softmax_scale)
-    fn = functools.partial(mla_prefill_paged_kernel,
-                           softmax_scale=softmax_scale, block_q=block_q)
+                                         softmax_scale=softmax_scale,
+                                         ckv_scales=ckv_scales,
+                                         krope_scales=krope_scales)
+    quantized = ckv_scales is not None
+    kfn = functools.partial(mla_prefill_paged_kernel,
+                            softmax_scale=softmax_scale, block_q=block_q,
+                            rescale=rescale)
     if mesh is None:
-        return fn(q_full, ckv_pages, krope_pages, block_tables, lengths,
-                  n_valid)
+        return kfn(q_full, ckv_pages, krope_pages, block_tables, lengths,
+                   n_valid, ckv_scales=ckv_scales, krope_scales=krope_scales)
     dp = dp_axes if dp_axes is not None else tuple(
         a for a in ("pod", "data") if a in mesh.axis_names)
+    in_specs = [PS(dp, None, "model", None), PS(None, None, None),
+                PS(None, None, None), PS(dp, None), PS(dp), PS(dp)]
+    operands = [q_full, ckv_pages, krope_pages, block_tables, lengths,
+                n_valid]
+    if quantized:
+        in_specs += [PS(None, None, None), PS(None, None, None)]
+        operands += [ckv_scales, krope_scales]
+
+        def fn(q, c, r, t, ln, nv, cs, rs):
+            return kfn(q, c, r, t, ln, nv, ckv_scales=cs, krope_scales=rs)
+    else:
+        def fn(q, c, r, t, ln, nv):
+            return kfn(q, c, r, t, ln, nv)
     return compat.shard_map(
-        lambda q, c, r, t, ln, nv: fn(q, c, r, t, ln, nv), mesh=mesh,
-        in_specs=(PS(dp, None, "model", None), PS(None, None, None),
-                  PS(None, None, None), PS(dp, None), PS(dp), PS(dp)),
+        fn, mesh=mesh, in_specs=tuple(in_specs),
         out_specs=PS(dp, None, "model", None), check_vma=False,
-    )(q_full, ckv_pages, krope_pages, block_tables, lengths, n_valid)
+    )(*operands)

@@ -58,9 +58,19 @@ def mla_decode_ref(q_full, ckv, krope, index, *,
     return o.astype(q_full.dtype)
 
 
+def _dequant_gathered(pages, scales, bt, B, flat):
+    """Gather pool pages through the block table and dequantize the
+    gathered view in f32 (per-token-slot scales, shape (N, bs, 1))."""
+    x = pages[bt].reshape(B, flat, pages.shape[-1])
+    if scales is None:
+        return x
+    return x.astype(jnp.float32) * scales[bt].reshape(B, flat, 1)
+
+
 def mla_prefill_paged_ref(q_full, ckv_pages, krope_pages, block_tables,
                           lengths, n_valid, *,
-                          softmax_scale: Optional[float] = None):
+                          softmax_scale: Optional[float] = None,
+                          ckv_scales=None, krope_scales=None):
     """Paged chunked-prefill oracle (multi-query sibling of
     :func:`mla_decode_paged_ref`).
 
@@ -85,8 +95,8 @@ def mla_prefill_paged_ref(q_full, ckv_pages, krope_pages, block_tables,
     nb, bs = bt.shape[1], ckv_pages.shape[1]
     lengths = jnp.asarray(lengths, jnp.int32)
     n_valid = jnp.asarray(n_valid, jnp.int32)
-    ckv = ckv_pages[bt].reshape(B, nb * bs, ckv_pages.shape[-1])
-    krope = krope_pages[bt].reshape(B, nb * bs, krope_pages.shape[-1])
+    ckv = _dequant_gathered(ckv_pages, ckv_scales, bt, B, nb * bs)
+    krope = _dequant_gathered(krope_pages, krope_scales, bt, B, nb * bs)
     scale = softmax_scale if softmax_scale is not None else D ** -0.5
     cache = jnp.concatenate([ckv, krope], axis=-1)
     s = jnp.einsum("bchd,bsd->bchs", q_full.astype(jnp.float32),
@@ -102,7 +112,8 @@ def mla_prefill_paged_ref(q_full, ckv_pages, krope_pages, block_tables,
 
 
 def mla_decode_paged_ref(q_full, ckv_pages, krope_pages, block_tables,
-                         indices, *, softmax_scale: Optional[float] = None):
+                         indices, *, softmax_scale: Optional[float] = None,
+                         ckv_scales=None, krope_scales=None):
     """Paged absorbed-MLA decode oracle.
 
     q_full      : (B, H, Dl+Dr)
@@ -121,8 +132,8 @@ def mla_decode_paged_ref(q_full, ckv_pages, krope_pages, block_tables,
     bt = jnp.asarray(block_tables, jnp.int32)
     nb, bs = bt.shape[1], ckv_pages.shape[1]
     idx = jnp.asarray(indices, jnp.int32)
-    ckv = ckv_pages[bt].reshape(B, nb * bs, ckv_pages.shape[-1])
-    krope = krope_pages[bt].reshape(B, nb * bs, krope_pages.shape[-1])
+    ckv = _dequant_gathered(ckv_pages, ckv_scales, bt, B, nb * bs)
+    krope = _dequant_gathered(krope_pages, krope_scales, bt, B, nb * bs)
     scale = softmax_scale if softmax_scale is not None else D ** -0.5
     cache = jnp.concatenate([ckv, krope], axis=-1)
     s = jnp.einsum("bhd,bsd->bhs", q_full.astype(jnp.float32),

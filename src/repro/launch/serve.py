@@ -74,6 +74,27 @@ Speculative decoding (PR 5) — composes with --paged and --mesh:
                       reference; default shallow:2) or 'self' (identity
                       draft, the 100%-acceptance oracle).
 
+Quantized latent pool (PR 8) — composes with every paged flag:
+
+  --cache-dtype {bf16,int8,fp8}
+                      storage dtype of the paged {ckv|krope} latent pool.
+                      'int8' (and 'fp8' on jax builds with
+                      float8_e4m3fn) stores 1-byte payloads with per-
+                      token-row f32 scales riding the pool pytree;
+                      quantize-on-write in the prefill/decode scatter
+                      paths, dequantize in-register inside the Pallas
+                      kernels (never a pool-sized f32 copy in HBM).
+                      Cuts modeled cache bytes/token to ~0.3x bf16 at
+                      DeepSeek shapes, shifting the rc/ru/seq crossovers
+                      auto_dispatch sees (core.schemes.cache_width);
+                      greedy decode stays token-parity with bf16 on the
+                      smoke models, with per-dtype logit-error bounds
+                      vs the fp32 oracle gated in
+                      tests/test_quant_cache.py.  Requires
+                      --prefill-chunk > 0 (the per-request scatter
+                      carries no scales).  'bf16' (default) is the
+                      unquantized pool at the compute dtype.
+
 Telemetry (PR 7) — composes with every paged flag:
 
   --trace PATH        record per-request lifecycle spans (arrival ->
@@ -104,6 +125,7 @@ Serving-flags summary (the paged runtime; all compose):
   --prefill-chunk   32        batched prefill chunk (0 = per-request)
   --prefill-impl    auto      'gather' view vs 'pallas' in-place kernel
   --impl            ref       decode attention: 'ref' | 'kernel'
+  --cache-dtype     bf16      pool storage: 'bf16' | 'int8' | 'fp8'
   --temperature     0.0       0 = greedy; else seeded sampling
   --top-k           0         top-k filter when sampling
   --mesh            ''        'DPxMP' sharded serving
@@ -169,6 +191,13 @@ def main():
                          "materializes the block-table view (reference), "
                          "'pallas' walks the block table in place via the "
                          "fused prefill kernel; 'auto' follows --impl")
+    ap.add_argument("--cache-dtype", default="bf16",
+                    choices=("bf16", "int8", "fp8"),
+                    help="paged latent-pool storage dtype: int8/fp8 "
+                         "quantize on write with per-token-row f32 scales "
+                         "and dequantize in-register in the kernels "
+                         "(~0.3x cache bytes/token vs bf16); requires "
+                         "--paged and --prefill-chunk > 0")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy; > 0 samples with a per-request PRNG "
                          "key folded with the absolute token position")
@@ -210,6 +239,9 @@ def main():
 
     if args.paged:
         return _serve_paged(args, cfg, params, dtype, mesh)
+    if args.cache_dtype != "bf16":
+        raise SystemExit("--cache-dtype requires --paged (only the paged "
+                         "latent pool stores quantized)")
     if args.spec_k:
         raise SystemExit("--spec-k requires --paged (the draft/verify "
                          "phases run on the paged runtime)")
@@ -336,7 +368,7 @@ def _serve_paged(args, cfg, params, dtype, mesh=None):
         temperature=args.temperature, top_k=args.top_k,
         sample_seed=args.seed, mesh=mesh, shard_policy=args.policy,
         spec_k=args.spec_k, draft_cfg=draft_cfg, draft_params=draft_params,
-        telemetry=tel)
+        cache_dtype=args.cache_dtype, telemetry=tel)
     rng = np.random.default_rng(args.seed + 1)
     reqs = [Request(rid=i,
                     prompt=rng.integers(0, cfg.vocab,

@@ -70,11 +70,14 @@ def init_cache(cfg: ModelConfig, batch: int, capacity: int, dtype=None):
 
 
 def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
-                     dtype=None):
+                     dtype=None, cache_dtype=None):
     """Paged latent-KV block pool tree for continuous-batching decode
-    (MLA architectures only; see models.lm.init_paged_cache)."""
+    (MLA architectures only; see models.lm.init_paged_cache).
+    ``cache_dtype`` in {int8, fp8} stores the pool quantized with
+    per-token-slot scale leaves riding the tree (core.cache)."""
     import jax.numpy as jnp
     if cfg.family == "encdec":
         raise NotImplementedError("paged serving targets decoder-only MLA")
     dtype = dtype if dtype is not None else jnp.bfloat16
-    return lm.init_paged_cache(cfg, num_blocks, block_size, dtype)
+    return lm.init_paged_cache(cfg, num_blocks, block_size, dtype,
+                               cache_dtype=cache_dtype)

@@ -108,14 +108,18 @@ def sub_cache(cfg: ModelConfig, desc: Sub, batch: int, capacity: int,
 
 
 def sub_paged_cache(cfg: ModelConfig, desc: Sub, num_blocks: int,
-                    block_size: int, dtype=jnp.bfloat16) -> Dict:
+                    block_size: int, dtype=jnp.bfloat16,
+                    cache_dtype=None) -> Dict:
     """Paged decode-state for one sublayer.  Only MLA latent caches page
     (the paper's compact cache is what makes a shared block pool pay off);
-    other mixers raise — serve those models through the contiguous path."""
+    other mixers raise — serve those models through the contiguous path.
+    ``cache_dtype`` in {int8, fp8} stores the pool quantized with
+    per-token-slot scale leaves (core.cache)."""
     if desc.mixer == "attn" and cfg.attn_kind == "mla":
         return cachelib.paged_latent_cache(num_blocks, block_size,
                                            cfg.kv_lora_rank,
-                                           cfg.qk_rope_dim, dtype)
+                                           cfg.qk_rope_dim, dtype,
+                                           cache_dtype=cache_dtype)
     raise NotImplementedError(
         f"paged serving requires MLA attention sublayers, got "
         f"mixer={desc.mixer!r} attn_kind={cfg.attn_kind!r}")
@@ -254,10 +258,11 @@ def _mla_step(params, cfg: ModelConfig, desc: Sub, x_t, ctx: Ctx):
     if ctx.lengths is not None:     # paged continuous-batching decode
         decode_kernel = None
         if ctx.impl in ("kernel", "pallas"):
-            def decode_kernel(q_full, ckv, krope, tables, idx, softmax_scale):
+            def decode_kernel(q_full, ckv, krope, tables, idx, softmax_scale,
+                              **qkw):
                 return kops.mla_decode_paged_attention(
                     q_full, ckv, krope, tables, idx, impl="kernel",
-                    softmax_scale=softmax_scale, mesh=ctx.mesh)
+                    softmax_scale=softmax_scale, mesh=ctx.mesh, **qkw)
         return mlalib.mla_decode_paged(params, mcfg, x_t, ctx.cache,
                                        ctx.block_tables, ctx.lengths,
                                        scheme=ctx.scheme,
@@ -283,10 +288,10 @@ def _mla_chunk(params, cfg: ModelConfig, desc: Sub, x, ctx: Ctx):
         impl = "pallas"
 
         def prefill_kernel(q_full, ckv, krope, tables, lens, nv,
-                           softmax_scale):
+                           softmax_scale, **qkw):
             return kops.mla_prefill_paged_attention(
                 q_full, ckv, krope, tables, lens, nv, impl="kernel",
-                softmax_scale=softmax_scale, mesh=ctx.mesh)
+                softmax_scale=softmax_scale, mesh=ctx.mesh, **qkw)
     return mlalib.mla_prefill_chunk_paged(params, cfg.mla_config(), x,
                                           ctx.cache, ctx.block_tables,
                                           ctx.lengths, ctx.n_valid,

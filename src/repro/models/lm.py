@@ -266,21 +266,26 @@ def init_cache(cfg: ModelConfig, batch: int, capacity: int,
 
 
 def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
-                     dtype=jnp.bfloat16) -> Dict:
+                     dtype=jnp.bfloat16, cache_dtype=None) -> Dict:
     """Paged decode-state tree: same layer structure as init_cache but every
     MLA latent cache is a (num_blocks, block_size, .) block pool shared by
     all requests.  Block tables / lengths live OUTSIDE this tree (one table
-    per request, shared across layers) and are passed to decode_step."""
+    per request, shared across layers) and are passed to decode_step.
+    ``cache_dtype`` in {int8, fp8} quantizes every pool (per-token-slot
+    scale leaves ride the tree — see core.cache.paged_latent_cache)."""
     from .blocks import sub_paged_cache
     prefix, period, n_periods, suffix = cfg.layer_plan()
     out: Dict = {
-        "prefix": {f"l{i}": sub_paged_cache(cfg, d, num_blocks, block_size, dtype)
+        "prefix": {f"l{i}": sub_paged_cache(cfg, d, num_blocks, block_size,
+                                            dtype, cache_dtype)
                    for i, d in enumerate(prefix)},
-        "suffix": {f"l{i}": sub_paged_cache(cfg, d, num_blocks, block_size, dtype)
+        "suffix": {f"l{i}": sub_paged_cache(cfg, d, num_blocks, block_size,
+                                            dtype, cache_dtype)
                    for i, d in enumerate(suffix)},
     }
     if n_periods:
-        one = {f"s{i}": sub_paged_cache(cfg, d, num_blocks, block_size, dtype)
+        one = {f"s{i}": sub_paged_cache(cfg, d, num_blocks, block_size,
+                                        dtype, cache_dtype)
                for i, d in enumerate(period)}
         out["period"] = jax.tree.map(
             lambda a: jnp.tile(a[None], (n_periods,) + (1,) * a.ndim), one)

@@ -67,19 +67,24 @@ class RooflineDrift:
     """
 
     def __init__(self, mla=None, platform=None, paged_block: int = 0,
-                 dp_shards: int = 1):
+                 dp_shards: int = 1, cache_dtype: Optional[str] = None):
         self.mla = mla
         self.platform = platform
         self.paged_block = paged_block
         self.dp_shards = dp_shards
+        # cache_dtype keeps the predictions dispatcher-exact for quantized
+        # pools: a drift channel still pricing bf16 cache streams would
+        # report phantom "drift" the moment --cache-dtype int8 lands.
+        self.cache_dtype = cache_dtype
         self.rows: List[DriftRow] = []
 
     def bind(self, *, mla, platform, paged_block: int,
-             dp_shards: int = 1) -> None:
+             dp_shards: int = 1, cache_dtype: Optional[str] = None) -> None:
         self.mla = mla
         self.platform = platform
         self.paged_block = paged_block
         self.dp_shards = dp_shards
+        self.cache_dtype = cache_dtype
 
     @property
     def active(self) -> bool:
@@ -91,16 +96,19 @@ class RooflineDrift:
                       meas_time_s: float) -> None:
         if not self.active:
             return
-        from ..core.schemes import step_time
+        from ..core.schemes import cache_width, step_time
         from ..hwmodel import attention_costs as ac
         t = step_time(scheme, self.mla, self.platform, cache_len=cache_len,
                       batch=batch, paged_block=self.paged_block,
-                      dp_shards=self.dp_shards)
+                      dp_shards=self.dp_shards, cache_dtype=self.cache_dtype)
         c = ac.mla_decode_cost(self.mla, scheme=scheme, cache_len=cache_len,
                                batch=batch,
                                dtype_bytes=self.platform.dtype_bytes,
                                paged_block=self.paged_block,
-                               dp_shards=self.dp_shards)
+                               dp_shards=self.dp_shards,
+                               cache_dtype_bytes=cache_width(
+                                   self.mla, self.platform,
+                                   self.cache_dtype))
         self.rows.append(DriftRow("decode", scheme, batch, cache_len,
                                   t, c.bytes, meas_time_s))
 
@@ -108,16 +116,20 @@ class RooflineDrift:
                       meas_time_s: float) -> None:
         if not self.active:
             return
-        from ..core.schemes import verify_time
+        from ..core.schemes import cache_width, verify_time
         from ..hwmodel import attention_costs as ac
         t = verify_time(scheme, self.mla, self.platform, cache_len=cache_len,
                         k=k, batch=batch, paged_block=self.paged_block,
-                        dp_shards=self.dp_shards)
+                        dp_shards=self.dp_shards,
+                        cache_dtype=self.cache_dtype)
         c = ac.mla_verify_cost(self.mla, scheme=scheme, cache_len=cache_len,
                                k=k, batch=batch,
                                dtype_bytes=self.platform.dtype_bytes,
                                paged_block=self.paged_block,
-                               dp_shards=self.dp_shards)
+                               dp_shards=self.dp_shards,
+                               cache_dtype_bytes=cache_width(
+                                   self.mla, self.platform,
+                                   self.cache_dtype))
         self.rows.append(DriftRow("verify", scheme, batch, cache_len,
                                   t, c.bytes, meas_time_s))
 
@@ -129,17 +141,20 @@ class RooflineDrift:
         extent the cost model's chunk walk covers)."""
         if not self.active:
             return
-        from ..core.schemes import prefill_time
+        from ..core.schemes import cache_width, prefill_time
         from ..hwmodel import attention_costs as ac
         t = prefill_time(self.mla, self.platform, seq_len=seq_len,
                          batch=batch, cached_prefix=cached_prefix,
                          chunk=chunk, paged_block=self.paged_block,
-                         impl=impl)
+                         impl=impl, cache_dtype=self.cache_dtype)
         c = ac.mla_prefill_chunk_cost(self.mla, seq_len=seq_len, chunk=chunk,
                                       paged_block=self.paged_block,
                                       batch=batch,
                                       dtype_bytes=self.platform.dtype_bytes,
-                                      cached_prefix=cached_prefix, impl=impl)
+                                      cached_prefix=cached_prefix, impl=impl,
+                                      cache_dtype_bytes=cache_width(
+                                          self.mla, self.platform,
+                                          self.cache_dtype))
         self.rows.append(DriftRow("prefill", scheme, batch, seq_len,
                                   t, c.bytes, meas_time_s))
 
@@ -188,6 +203,7 @@ class RooflineDrift:
             "platform": self.platform.name if self.platform else None,
             "paged_block": self.paged_block,
             "dp_shards": self.dp_shards,
+            "cache_dtype": self.cache_dtype or "bf16",
             "rows": len(self.rows),
             "kinds": kinds,
             "buckets": out_buckets,

@@ -126,6 +126,7 @@ class PagedMLAEngine:
                  mesh=None, shard_policy: str = "serve",
                  spec_k: int = 0, draft_cfg: Optional[ModelConfig] = None,
                  draft_params=None,
+                 cache_dtype: str = "bf16",
                  telemetry: Optional[Telemetry] = None):
         if cfg.attn_kind != "mla":
             raise NotImplementedError("PagedMLAEngine requires an MLA model")
@@ -133,6 +134,12 @@ class PagedMLAEngine:
             raise ValueError("scheme='auto' needs a PlatformPoint")
         if prefill_mode not in ("chunked", "per_request"):
             raise ValueError(f"unknown prefill_mode {prefill_mode!r}")
+        cache_dtype = "bf16" if cache_dtype is None else cache_dtype
+        cachelib.cache_dtype_info(cache_dtype)   # validate the name early
+        if cache_dtype != "bf16" and prefill_mode != "chunked":
+            raise NotImplementedError(
+                "quantized cache_dtype requires prefill_mode='chunked' "
+                "(the per-request scatter carries no scales)")
         if mesh is not None and prefill_mode != "chunked":
             # the per-request path jits an UNSHARDED contiguous prefill and
             # scatters into the (replicated) pool — keep the A/B baseline
@@ -195,6 +202,7 @@ class PagedMLAEngine:
             self.params = commit_params(self.params, cfg, mesh,
                                         shard_policy)
         self.compute_dtype = compute_dtype
+        self.cache_dtype = cache_dtype
         self.impl = impl
         self.scheme = scheme
         self.platform = platform
@@ -221,7 +229,8 @@ class PagedMLAEngine:
             enable_prefix_cache=enable_prefix_cache,
             decode_window=spec_k + 1)
         self.pool = models.init_paged_cache(cfg, num_blocks, block_size,
-                                            compute_dtype)
+                                            compute_dtype,
+                                            cache_dtype=cache_dtype)
         # -- speculative decoding: draft model + its own paged pool -------
         # The draft pool shares the scheduler's GEOMETRY (block size, block
         # ids, tables) with the target pool — one host-side allocator and
@@ -238,7 +247,8 @@ class PagedMLAEngine:
         self._draft_scheme = "seq"
         if spec_k:
             self.draft_pool = models.init_paged_cache(
-                draft_cfg, num_blocks, block_size, compute_dtype)
+                draft_cfg, num_blocks, block_size, compute_dtype,
+                cache_dtype=cache_dtype)
             if mesh is not None and draft_params is not params:
                 # shallow drafts alias embed/ln_f/first-N-layer leaves of
                 # the target: reuse the committed buffers instead of
@@ -274,6 +284,15 @@ class PagedMLAEngine:
         self._last_scheme: Optional[str] = None
         self._last_point = (1, 1)     # (batch, cache_len) of the last pick
         self.stats = EngineStats()
+        # bytes one cached token occupies across ALL layers at the POOL's
+        # storage dtype — the occupancy gauges below convert allocated
+        # blocks to HBM bytes through this, so telemetry prices the same
+        # pool the dispatcher does (int8 pools would otherwise report
+        # bf16-sized occupancy; pinned by tests/test_quant_cache.py)
+        self.cache_token_bytes = cfg.n_layers * cachelib.bytes_per_token_latent(
+            cfg.kv_lora_rank, cfg.qk_rope_dim,
+            dtype_bytes=jnp.dtype(compute_dtype).itemsize,
+            cache_dtype=cache_dtype)
         # -- telemetry (repro.obs): default is the no-op singleton, whose
         # span() returns a shared null context manager — the instrumented
         # hot path below costs one attribute check per site when off.
@@ -281,7 +300,8 @@ class PagedMLAEngine:
         if self.tel.drift is not None and not self.tel.drift.active \
                 and platform is not None:
             self.tel.drift.bind(mla=self.mla, platform=platform,
-                                paged_block=block_size, dp_shards=self._dp)
+                                paged_block=block_size, dp_shards=self._dp,
+                                cache_dtype=cache_dtype)
         if self.tel.enabled:
             self.sched.prefix.tel = self.tel
 
@@ -291,7 +311,8 @@ class PagedMLAEngine:
         if scheme not in self._decode_steps:
             self._decode_steps[scheme] = make_paged_serve_step(
                 self.cfg, self.mesh, compute_dtype=self.compute_dtype,
-                impl=self.impl, scheme=scheme, policy=self.shard_policy)
+                impl=self.impl, scheme=scheme, policy=self.shard_policy,
+                cache_dtype=self.cache_dtype)
         return self._decode_steps[scheme]
 
     def _prefill(self, cap: int):
@@ -321,7 +342,7 @@ class PagedMLAEngine:
             self._chunk_steps[chunk] = make_chunked_prefill_step(
                 self.cfg, self.mesh, compute_dtype=self.compute_dtype,
                 impl=self._chunk_impl(), scheme=scheme,
-                policy=self.shard_policy)
+                policy=self.shard_policy, cache_dtype=self.cache_dtype)
         return self._chunk_steps[chunk]
 
     def _draft_chunk_step(self, chunk: int):
@@ -331,7 +352,8 @@ class PagedMLAEngine:
             self._draft_chunk_steps[chunk] = make_chunked_prefill_step(
                 self.draft_cfg, self.mesh,
                 compute_dtype=self.compute_dtype, impl=self._chunk_impl(),
-                scheme=self._draft_scheme, policy=self.shard_policy)
+                scheme=self._draft_scheme, policy=self.shard_policy,
+                cache_dtype=self.cache_dtype)
         return self._draft_chunk_steps[chunk]
 
     def _draft_step(self):
@@ -339,7 +361,8 @@ class PagedMLAEngine:
             self._draft_decode_step = make_paged_serve_step(
                 self.draft_cfg, self.mesh,
                 compute_dtype=self.compute_dtype, impl=self.impl,
-                scheme=self._draft_scheme, policy=self.shard_policy)
+                scheme=self._draft_scheme, policy=self.shard_policy,
+                cache_dtype=self.cache_dtype)
         return self._draft_decode_step
 
     def _verify_step(self, scheme: str):
@@ -347,7 +370,7 @@ class PagedMLAEngine:
             self._verify_steps[scheme] = make_verify_step(
                 self.cfg, self.mesh, compute_dtype=self.compute_dtype,
                 impl=self._chunk_impl(), scheme=scheme,
-                policy=self.shard_policy)
+                policy=self.shard_policy, cache_dtype=self.cache_dtype)
         return self._verify_steps[scheme]
 
     @property
@@ -375,7 +398,8 @@ class PagedMLAEngine:
         s = auto_dispatch(self.mla, self.platform, cache_len=cache_len,
                           batch=max(len(active), 1),
                           paged_block=self.block_size,
-                          dp_shards=self._dp, verify_k=verify_k)
+                          dp_shards=self._dp, verify_k=verify_k,
+                          cache_dtype=self.cache_dtype)
         if self._last_scheme is not None and s != self._last_scheme:
             self.stats.scheme_switches += 1
         self._last_scheme = s
@@ -624,6 +648,9 @@ class PagedMLAEngine:
             m = self.tel.metrics
             m.histogram("step_ms").record(dt * 1e3)
             m.histogram("pool_occupancy").record(u["pool_frac"])
+            m.histogram("pool_allocated_bytes").record(
+                u["allocated_blocks"] * self.block_size
+                * self.cache_token_bytes)
 
     # ------------------------------------------------ speculative round ----
 
@@ -790,4 +817,6 @@ class PagedMLAEngine:
             self.sched.allocator.total_allocs)
         out["prefill_compiles"] = float(self.prefill_compiles)
         out["spec_compiles"] = float(self.spec_compiles)
+        out["cache_dtype"] = self.cache_dtype
+        out["cache_token_bytes"] = float(self.cache_token_bytes)
         return out

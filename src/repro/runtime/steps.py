@@ -405,12 +405,14 @@ def paged_param_shardings(params, cfg: ModelConfig, mesh: Mesh, rules):
 
 
 def _paged_pool_shardings(cfg: ModelConfig, mesh: Mesh, rules,
-                          compute_dtype):
+                          compute_dtype, cache_dtype=None):
     """Replicated NamedSharding tree for the paged latent pool.  Only the
     tree STRUCTURE matters (every leaf is PS()), so a dummy-sized
-    eval_shape stands in for the real pool."""
+    eval_shape stands in for the real pool.  ``cache_dtype`` must match
+    the engine's pool (quantized pools carry extra scale leaves)."""
     pool_t = jax.eval_shape(
-        lambda: models.init_paged_cache(cfg, 2, 1, compute_dtype))
+        lambda: models.init_paged_cache(cfg, 2, 1, compute_dtype,
+                                        cache_dtype=cache_dtype))
     cspecs = cache_pspecs(pool_t, rules, family=cfg.family, paged=True)
     return jax.tree.map(lambda s: NamedSharding(mesh, s), cspecs)
 
@@ -430,7 +432,8 @@ def _tag_obs(fn, *, kind: str, scheme: str, impl: str):
 
 def make_paged_serve_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
                           *, compute_dtype=jnp.bfloat16, impl: str = "ref",
-                          scheme: str = "seq", policy: str = "serve"):
+                          scheme: str = "seq", policy: str = "serve",
+                          cache_dtype: Optional[str] = None):
     """Continuous-batching decode step over the paged latent pool:
 
         fn(params, token (B,), pool_tree, block_tables (B, nb),
@@ -472,7 +475,8 @@ def make_paged_serve_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
                         kind="decode", scheme=scheme, impl=impl)
     rules = shd.make_rules(mesh, mode=policy, cfg=cfg)
     dp = rules["batch"]
-    pool_shard = _paged_pool_shardings(cfg, mesh, rules, compute_dtype)
+    pool_shard = _paged_pool_shardings(cfg, mesh, rules, compute_dtype,
+                                       cache_dtype)
     return _tag_obs(jax.jit(
         run,
         # params slot is UNSPECIFIED: committed shardings (device_put via
@@ -489,7 +493,8 @@ def make_paged_serve_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
 def make_chunked_prefill_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
                               *, compute_dtype=jnp.bfloat16,
                               impl: str = "ref", scheme: str = "seq",
-                              policy: str = "serve"):
+                              policy: str = "serve",
+                              cache_dtype: Optional[str] = None):
     """Batched chunked prefill straight into the paged pool:
 
         fn(params, tokens (B, C), pool_tree, block_tables (B, nb),
@@ -533,7 +538,8 @@ def make_chunked_prefill_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
                         kind="prefill", scheme=scheme, impl=impl)
     rules = shd.make_rules(mesh, mode=policy, cfg=cfg)
     dp = rules["batch"]
-    pool_shard = _paged_pool_shardings(cfg, mesh, rules, compute_dtype)
+    pool_shard = _paged_pool_shardings(cfg, mesh, rules, compute_dtype,
+                                       cache_dtype)
     return _tag_obs(jax.jit(
         run,
         in_shardings=(None, NamedSharding(mesh, PS(dp, None)), pool_shard,
@@ -547,7 +553,8 @@ def make_chunked_prefill_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
 
 def make_verify_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
                      *, compute_dtype=jnp.bfloat16, impl: str = "ref",
-                     scheme: str = "seq", policy: str = "serve"):
+                     scheme: str = "seq", policy: str = "serve",
+                     cache_dtype: Optional[str] = None):
     """Speculative-decode verify step over the paged latent pool:
 
         fn(params, tokens (B, C), pool_tree, block_tables (B, nb),
@@ -582,7 +589,8 @@ def make_verify_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
                         kind="verify", scheme=scheme, impl=impl)
     rules = shd.make_rules(mesh, mode=policy, cfg=cfg)
     dp = rules["batch"]
-    pool_shard = _paged_pool_shardings(cfg, mesh, rules, compute_dtype)
+    pool_shard = _paged_pool_shardings(cfg, mesh, rules, compute_dtype,
+                                       cache_dtype)
     return _tag_obs(jax.jit(
         run,
         in_shardings=(None, NamedSharding(mesh, PS(dp, None)), pool_shard,
@@ -615,12 +623,27 @@ def _scatter_entries(pool_leaf, contig_leaf, pages, block_size: int):
     return cachelib.write_blocks_paged(pool_leaf, pages[:n_pg], vals)
 
 
+def _tree_has_quantized_pool(tree) -> bool:
+    if isinstance(tree, dict):
+        return "ckv_scale" in tree \
+            or any(_tree_has_quantized_pool(v) for v in tree.values())
+    return False
+
+
 @functools.partial(jax.jit, donate_argnums=(0,))
 def scatter_prefill_to_paged(pool_tree, entries_tree, pages):
     """Scatter one request's contiguous prefill cache (batch dim 1) into
     the paged pool at its allocated ``pages`` ((max_blocks,) int32, padded
     with the null block).  Whole blocks are written; the tail garbage
-    inside the last block is masked at attention time."""
+    inside the last block is masked at attention time.
+
+    Quantized pools are not supported on this legacy per-request path (the
+    contiguous prefill cache carries no scales) — use chunked prefill,
+    whose scatter quantizes on write."""
+    if _tree_has_quantized_pool(pool_tree):
+        raise NotImplementedError(
+            "scatter_prefill_to_paged does not support quantized pools; "
+            "use prefill_mode='chunked'")
     pages = jnp.asarray(pages, jnp.int32)
 
     def leaf(pool_leaf, contig_leaf):

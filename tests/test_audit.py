@@ -198,6 +198,93 @@ def test_injected_f32_pool_promotion_detected():
     assert audit.audit_dtypes(jaxpr, pool, "clean") == []
 
 
+def test_injected_wide_dequant_of_quantized_pool_detected():
+    """PR 8 rule: a wide-float buffer AT a quantized pool's shape means
+    the whole pool was dequantized in HBM — the int8 cache-traffic win
+    silently forfeited.  Dequantizing the GATHERED view stays clean."""
+    pool = {
+        "ckv": jnp.zeros((9, 8, 32), jnp.int8),
+        "ckv_scale": jnp.ones((9, 8, 1), jnp.float32),
+        "krope": jnp.zeros((9, 8, 8), jnp.int8),
+        "krope_scale": jnp.ones((9, 8, 1), jnp.float32),
+    }
+    bt = jnp.asarray([[1, 2], [3, 4]], jnp.int32)
+
+    def leaky(p):
+        # the hazard: astype on the POOL leaf hoists a full f32 copy
+        wide = p["ckv"].astype(jnp.float32) * p["ckv_scale"]
+        return wide[bt].sum()
+
+    jaxpr = jax.make_jaxpr(leaky)(pool)
+    findings = audit.audit_dtypes(jaxpr, pool, "leaky")
+    assert any(f.rule == "dtype" and "dequantized pool-sized" in f.detail
+               for f in findings), [str(f) for f in findings]
+
+    def clean(p):
+        # gather first: the dequantized buffer is (B, nb*bs, D), never
+        # pool-shaped
+        g = p["ckv"][bt].reshape(2, 16, 32)
+        s = p["ckv_scale"][bt].reshape(2, 16, 1)
+        return (g.astype(jnp.float32) * s).sum()
+
+    jaxpr = jax.make_jaxpr(clean)(pool)
+    assert audit.audit_dtypes(jaxpr, pool, "clean") == []
+
+
+def test_injected_scale_leaf_dropped_from_donation_detected():
+    """PR 8 fixture: a step that re-emits the per-block scale leaves at a
+    different dtype breaks their input_output_alias — the donation audit
+    must flag exactly the two scale leaves."""
+    pool = {
+        "ckv": jnp.zeros((4, 8, 32), jnp.int8),
+        "ckv_scale": jnp.ones((4, 8, 1), jnp.float32),
+        "krope": jnp.zeros((4, 8, 8), jnp.int8),
+        "krope_scale": jnp.ones((4, 8, 1), jnp.float32),
+    }
+
+    def step(p, narrow_scales):
+        out = dict(p)
+        out["ckv"] = (p["ckv"].astype(jnp.int32) + 1).astype(jnp.int8)
+        out["krope"] = (p["krope"].astype(jnp.int32) + 1).astype(jnp.int8)
+        if narrow_scales:
+            # the bug: scales written back at f16 — cannot alias f32 in
+            out["ckv_scale"] = p["ckv_scale"].astype(jnp.float16)
+            out["krope_scale"] = p["krope_scale"].astype(jnp.float16)
+        else:
+            out["ckv_scale"] = p["ckv_scale"] * 2.0
+            out["krope_scale"] = p["krope_scale"] * 2.0
+        return out
+
+    fine = jax.jit(functools.partial(step, narrow_scales=False),
+                   donate_argnums=(0,)).lower(pool).compile()
+    assert audit.audit_donation(fine, pool, "fine") == []
+
+    broken = jax.jit(functools.partial(step, narrow_scales=True),
+                     donate_argnums=(0,)).lower(pool).compile()
+    findings = audit.audit_donation(broken, pool, "broken")
+    assert len(findings) == 2, [str(f) for f in findings]
+    assert all(f.rule == "donation" for f in findings)
+
+
+def test_matrix_includes_quantized_cells_and_tolerances():
+    """The single-device matrix must carry the int8 cells (both impls,
+    all three kinds) and tolerances_for must resolve their calibrated
+    bands, falling back to the wide-pool table otherwise."""
+    quant = [s for s in audit.single_device_matrix()
+             if s.cache_dtype == "int8"]
+    assert {(s.kind, s.impl) for s in quant} == {
+        (k, i) for k in ("decode", "prefill", "verify")
+        for i in ("gather", "pallas")}
+    assert all(s.where.endswith("/int8") for s in quant)
+    for s in quant:
+        tol = audit.tolerances_for(s)
+        assert tol == audit.QUANT_TOLERANCES[(s.kind, s.impl, "1dev",
+                                              "int8")]
+    wide = audit.StepSpec("decode", "gather", "seq")
+    assert audit.tolerances_for(wide) == audit.TOLERANCES[
+        ("decode", "gather", "1dev")]
+
+
 def test_injected_f64_hlo_text_detected():
     pool = {"ckv": jnp.zeros((2, 4, 8, 32), jnp.bfloat16)}
     jaxpr = jax.make_jaxpr(lambda p: jax.tree.map(lambda x: x * 2, p))(pool)

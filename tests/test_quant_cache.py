@@ -1,0 +1,620 @@
+"""Quantized latent-KV block pool + AMLA exponent-add rescaling, gated
+by the fp32 oracle (PR 8).
+
+Every quantized kernel path is held against TWO references:
+
+  1. the fp32 oracle on the exact (pre-quantization) latents — the
+     committed per-dtype max-logit-error bounds in ``ORACLE_TOL`` bound
+     the QUANTIZATION error end to end;
+  2. the quantized oracle (``ref.mla_*_paged_ref`` with scales, which
+     dequantizes the gathered f32 view) — ``KERNEL_TOL`` bounds the
+     KERNEL error separately, so a kernel bug cannot hide inside the
+     quantization budget.
+
+Sweeps: schemes x decode/prefill x storage dtypes x ragged lengths x
+adversarial block tables (null blocks, inactive slots, stale entries
+outside the table).  The AMLA section pins the exp-add online-softmax
+rescaling against the classic multiply path and the chunk-1 ==
+decode-kernel triangle identity; hypothesis drives quantize/dequant
+round-trip error and per-block scale invariants under CoW
+fork/release.  Everything runs on CPU via interpret mode — the
+``kernel`` marker wires the module into the CI kernel lane."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as configs
+import repro.models as models
+from repro.core import cache as cachelib
+from repro.core import mla as mlalib
+from repro.core import schemes as schemeslib
+from repro.hwmodel import attention_costs as ac
+from repro.hwmodel.platforms import PLATFORMS
+from repro.kernels import ops as kops
+from repro.kernels import ref
+from repro.kernels.mla_decode import (RESCALES, exp_add_rescale,
+                                      mla_decode_paged_kernel)
+from repro.kernels.mla_prefill import mla_prefill_paged_kernel
+from repro.nn import module as nnm
+from repro.obs import Telemetry
+from repro.obs.drift import RooflineDrift
+from repro.runtime import BlockAllocator, PagedMLAEngine, Request
+
+pytestmark = pytest.mark.kernel
+
+CACHE_DTYPES = ("int8",) + (("fp8",) if hasattr(jnp, "float8_e4m3fn") else ())
+
+# Committed kernel-vs-fp32-oracle max-logit-error bounds per storage
+# dtype (unit-normal latents; measured int8 ~7e-3, fp8 ~7e-2 — the
+# bounds leave ~3-5x headroom without letting a broken dequant through).
+ORACLE_TOL = {"int8": 5e-2, "fp8": 2e-1}
+# kernel vs the QUANTIZED oracle on identical inputs (pure kernel error;
+# measured ~5e-7)
+KERNEL_TOL = 2e-5
+# exp-add vs classic-mul online softmax (measured ~2e-7)
+RESCALE_TOL = 1e-5
+
+MCFG = mlalib.MLAConfig(d_model=64, n_heads=4, q_lora_rank=48,
+                        kv_lora_rank=32, qk_nope_dim=16, qk_rope_dim=8,
+                        v_head_dim=16)
+
+
+def _qinfo(name):
+    return cachelib.cache_dtype_info(name)
+
+
+def _latents(N, bs, Dl, Dr, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    ckv = jax.random.normal(ks[0], (N, bs, Dl), jnp.float32)
+    krope = jax.random.normal(ks[1], (N, bs, Dr), jnp.float32)
+    return ckv, krope
+
+
+def _quantize(ckv, krope, cache_dtype):
+    qdtype, qmax = _qinfo(cache_dtype)
+    cq, cs = cachelib.quantize_latent(ckv, qmax, qdtype)
+    rq, rs = cachelib.quantize_latent(krope, qmax, qdtype)
+    return cq, cs, rq, rs
+
+
+# ------------------------------------------- kernel vs fp32 oracle: decode --
+
+
+@pytest.mark.parametrize("B,H,Dl,Dr,bs,nb,N,idx,table", [
+    # plain ragged batch, scrambled table
+    (3, 4, 32, 8, 8, 4, 16, [5, 31, 12], "scrambled"),
+    # adversarial: NULL blocks interleaved in the table + inactive slot
+    (2, 4, 32, 8, 8, 4, 12, [17, -1], "null_holes"),
+    # stale entries: table points at blocks holding garbage BEYOND each
+    # request's valid extent (must be masked, not dequantized into play)
+    (2, 8, 64, 16, 4, 3, 10, [0, 9], "stale"),
+])
+@pytest.mark.parametrize("cache_dtype", CACHE_DTYPES)
+def test_decode_kernel_vs_fp32_oracle(B, H, Dl, Dr, bs, nb, N, idx, table,
+                                      cache_dtype):
+    ckv, krope = _latents(N, bs, Dl, Dr, seed=B + N)
+    q = jax.random.normal(jax.random.PRNGKey(7), (B, H, Dl + Dr),
+                          jnp.float32)
+    rng = np.random.default_rng(3)
+    if table == "scrambled":
+        bt = rng.permutation(np.arange(1, N))[:B * nb].reshape(B, nb)
+    elif table == "null_holes":
+        bt = rng.integers(1, N, (B, nb))
+        bt[:, 1] = 0                      # a NULL block mid-table
+    else:  # stale: poison everything outside the table
+        bt = rng.permutation(np.arange(1, N))[:B * nb].reshape(B, nb)
+        outside = np.setdiff1d(np.arange(N), bt.ravel())
+        ckv = ckv.at[jnp.asarray(outside)].set(1e4)
+        krope = krope.at[jnp.asarray(outside)].set(1e4)
+    bt = jnp.asarray(bt, jnp.int32)
+    idx = jnp.asarray(idx, jnp.int32)
+    oracle = ref.mla_decode_paged_ref(q, ckv, krope, bt, idx)
+    cq, cs, rq, rs = _quantize(ckv, krope, cache_dtype)
+    got = mla_decode_paged_kernel(q, cq, rq, bt, idx, ckv_scales=cs,
+                                  krope_scales=rs, interpret=True)
+    err = float(jnp.max(jnp.abs(got - oracle)))
+    assert err <= ORACLE_TOL[cache_dtype], (cache_dtype, err)
+    # the kernel must agree with the quantized oracle far tighter — the
+    # bound above is quantization error, not kernel slack
+    qref = ref.mla_decode_paged_ref(q, cq, rq, bt, idx, ckv_scales=cs,
+                                    krope_scales=rs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(qref),
+                               atol=KERNEL_TOL, rtol=KERNEL_TOL)
+
+
+@pytest.mark.parametrize("B,C,H,Dl,Dr,bs,nb,N,lengths,n_valid", [
+    (3, 6, 4, 32, 8, 4, 8, 16, [0, 5, 11], [6, 3, 0]),   # ragged + idle row
+    (2, 4, 4, 32, 8, 8, 3, 8, [8, 15], [4, 1]),  # boundary start + 1-tail
+])
+@pytest.mark.parametrize("cache_dtype", CACHE_DTYPES)
+def test_prefill_kernel_vs_fp32_oracle(B, C, H, Dl, Dr, bs, nb, N, lengths,
+                                       n_valid, cache_dtype):
+    ckv, krope = _latents(N, bs, Dl, Dr, seed=11)
+    q = jax.random.normal(jax.random.PRNGKey(5), (B, C, H, Dl + Dr),
+                          jnp.float32)
+    rng = np.random.default_rng(9)
+    bt = rng.integers(1, N, (B, nb))
+    bt[0, -1] = 0                         # null tail block
+    bt = jnp.asarray(bt, jnp.int32)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    n_valid = jnp.asarray(n_valid, jnp.int32)
+    oracle = ref.mla_prefill_paged_ref(q, ckv, krope, bt, lengths, n_valid)
+    cq, cs, rq, rs = _quantize(ckv, krope, cache_dtype)
+    got = mla_prefill_paged_kernel(q, cq, rq, bt, lengths, n_valid,
+                                   ckv_scales=cs, krope_scales=rs,
+                                   interpret=True)
+    err = float(jnp.max(jnp.abs(got - oracle)))
+    assert err <= ORACLE_TOL[cache_dtype], (cache_dtype, err)
+    qref = ref.mla_prefill_paged_ref(q, cq, rq, bt, lengths, n_valid,
+                                     ckv_scales=cs, krope_scales=rs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(qref),
+                               atol=KERNEL_TOL, rtol=KERNEL_TOL)
+
+
+# ------------------------------------------------ scheme sweep, core level --
+
+
+def _scatter_history(pool, bt, ckv_hist, krope_hist):
+    """Scatter a (B, S, D) latent history token-by-token through the
+    production write path (exercises quantize-on-write for quantized
+    pools).  Every row fills its whole table — content past a request's
+    ragged length is exactly the stale garbage attention must mask."""
+    B, S = ckv_hist.shape[:2]
+    for t in range(S):
+        pool = cachelib.update_latent_paged(
+            pool, bt, jnp.full((B,), t, jnp.int32), ckv_hist[:, t],
+            krope_hist[:, t])
+    return pool
+
+
+@pytest.fixture(scope="module")
+def mla_params():
+    params = nnm.init_params(jax.random.PRNGKey(0), mlalib.mla_defs(MCFG),
+                             jnp.float32)
+    return mlalib.prepare_serving(params, MCFG, "ru")
+
+
+@pytest.mark.parametrize("scheme", ["seq", "rc", "ru", "naive"])
+@pytest.mark.parametrize("cache_dtype", CACHE_DTYPES)
+def test_decode_schemes_quantized_pool_vs_fp32(scheme, cache_dtype,
+                                               mla_params):
+    """Full decode layer over a quantize-on-write pool, every scheme, vs
+    the same layer over the exact f32 pool.  The kernel path covers
+    seq/rc/ru; naive exercises the gathered-view dequant path."""
+    bs, nb, N = 4, 3, 12
+    lengths = np.asarray([3, 11, 7], np.int32)
+    B, S = len(lengths), bs * nb
+    rng = np.random.default_rng(21)
+    hist = jnp.asarray(rng.standard_normal((B, S, MCFG.d_model)) * 0.1,
+                       jnp.float32)
+    pos = jnp.arange(S)[None].repeat(B, 0)
+    ckv_h, krope_h = mlalib._kv_latent(mla_params, MCFG, hist, pos)
+    bt = jnp.asarray(rng.permutation(np.arange(1, N))[:B * nb].reshape(B, nb),
+                     jnp.int32)
+    pool_f = _scatter_history(
+        cachelib.paged_latent_cache(N, bs, MCFG.kv_lora_rank,
+                                    MCFG.qk_rope_dim, jnp.float32),
+        bt, ckv_h, krope_h)
+    pool_q = _scatter_history(
+        cachelib.paged_latent_cache(N, bs, MCFG.kv_lora_rank,
+                                    MCFG.qk_rope_dim, jnp.float32,
+                                    cache_dtype=cache_dtype),
+        bt, ckv_h, krope_h)
+    qdtype, _ = _qinfo(cache_dtype)
+    assert pool_q["ckv"].dtype == qdtype
+    x_t = jax.random.normal(jax.random.PRNGKey(3), (B, MCFG.d_model),
+                            jnp.float32) * 0.1
+
+    decode_kernel = None
+    if scheme != "naive":
+        def decode_kernel(q_full, ckv, krope, tables, idx, softmax_scale,
+                          **qkw):
+            return kops.mla_decode_paged_attention(
+                q_full, ckv, krope, tables, idx, impl="kernel",
+                softmax_scale=softmax_scale, **qkw)
+    want, _ = mlalib.mla_decode_paged(mla_params, MCFG, x_t, pool_f, bt,
+                                      lengths, scheme=scheme)
+    got, pool_q2 = mlalib.mla_decode_paged(mla_params, MCFG, x_t, pool_q, bt,
+                                           lengths, scheme=scheme,
+                                           decode_kernel=decode_kernel)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=ORACLE_TOL[cache_dtype],
+                               rtol=ORACLE_TOL[cache_dtype])
+    # the write-back stayed quantized and refreshed the written scales
+    assert pool_q2["ckv"].dtype == qdtype
+    for b in range(B):
+        L = int(lengths[b])
+        page, slot = int(bt[b, L // bs]), L % bs
+        s = float(pool_q2["ckv_scale"][page, slot, 0])
+        amax = float(jnp.max(jnp.abs(
+            cachelib.dequantize_latent(pool_q2["ckv"], pool_q2["ckv_scale"])
+            [page, slot])))
+        assert s > 0 and (amax == 0 or s == pytest.approx(
+            amax / _qinfo(cache_dtype)[1], rel=0.2))
+
+
+@pytest.mark.parametrize("scheme", ["seq", "rc", "ru"])
+@pytest.mark.parametrize("cache_dtype", CACHE_DTYPES)
+def test_prefill_schemes_quantized_pool_vs_fp32(scheme, cache_dtype,
+                                                mla_params):
+    """Chunked prefill through the Pallas kernel over a quantized pool,
+    every kernel scheme, vs the f32 gather reference."""
+    bs, nb, N, C = 4, 3, 10, 5
+    lengths = np.asarray([0, 4], np.int32)
+    n_valid = np.asarray([5, 3], np.int32)
+    B = len(lengths)
+    rng = np.random.default_rng(33)
+    x = jnp.asarray(rng.standard_normal((B, C, MCFG.d_model)) * 0.1,
+                    jnp.float32)
+    bt = jnp.asarray(rng.permutation(np.arange(1, N))[:B * nb].reshape(B, nb),
+                     jnp.int32)
+    pool_f = cachelib.paged_latent_cache(N, bs, MCFG.kv_lora_rank,
+                                         MCFG.qk_rope_dim, jnp.float32)
+    pool_q = cachelib.paged_latent_cache(N, bs, MCFG.kv_lora_rank,
+                                         MCFG.qk_rope_dim, jnp.float32,
+                                         cache_dtype=cache_dtype)
+    want, _ = mlalib.mla_prefill_chunk_paged(
+        mla_params, MCFG, x, pool_f, bt, lengths, n_valid, scheme=scheme,
+        impl="gather")
+    got, pool_q2 = mlalib.mla_prefill_chunk_paged(
+        mla_params, MCFG, x, pool_q, bt, lengths, n_valid, scheme=scheme,
+        impl="pallas")
+    # idle tail rows are garbage by contract: compare valid rows only
+    for b in range(B):
+        nv = int(n_valid[b])
+        np.testing.assert_allclose(np.asarray(got[b, :nv]),
+                                   np.asarray(want[b, :nv]),
+                                   atol=ORACLE_TOL[cache_dtype],
+                                   rtol=ORACLE_TOL[cache_dtype])
+    assert pool_q2["ckv"].dtype == _qinfo(cache_dtype)[0]
+
+
+# --------------------------------------------------------- AMLA rescaling --
+
+
+def test_exp_add_rescale_is_exact_power_of_two_scaling():
+    x = jnp.asarray([1.5, -3.25, 0.0, 2.0 ** -126, 1e30], jnp.float32)
+    d = jnp.asarray([-3, -1, -4, -5, -20], jnp.int32)
+    got = exp_add_rescale(x, d)
+    # zero stays zero; exponent underflow flushes to zero (2**-126 has
+    # biased exponent 1: any d <= -1 underflows)
+    want = np.asarray([1.5 * 2.0 ** -3, -3.25 * 0.5, 0.0, 0.0,
+                       1e30 * 2.0 ** -20], np.float32)
+    np.testing.assert_array_equal(np.asarray(got), want)
+    # d = 0 is the identity
+    np.testing.assert_array_equal(
+        np.asarray(exp_add_rescale(x, jnp.zeros_like(d))), np.asarray(x))
+
+
+@pytest.mark.parametrize("cache_dtype", (None,) + CACHE_DTYPES)
+def test_decode_exp_add_matches_mul(cache_dtype):
+    """The AMLA exponent-add correction agrees with the classic
+    FlashAttention multiply path on the decode kernel, quantized or not."""
+    B, H, Dl, Dr, bs, nb, N = 3, 4, 32, 8, 8, 4, 16
+    ckv, krope = _latents(N, bs, Dl, Dr, seed=2)
+    q = jax.random.normal(jax.random.PRNGKey(1), (B, H, Dl + Dr),
+                          jnp.float32)
+    rng = np.random.default_rng(5)
+    bt = jnp.asarray(rng.integers(0, N, (B, nb)), jnp.int32)
+    idx = jnp.asarray([31, 0, 12], jnp.int32)
+    kw = {}
+    if cache_dtype is not None:
+        cq, cs, rq, rs = _quantize(ckv, krope, cache_dtype)
+        ckv, krope = cq, rq
+        kw = dict(ckv_scales=cs, krope_scales=rs)
+    outs = {r: mla_decode_paged_kernel(q, ckv, krope, bt, idx, rescale=r,
+                                       interpret=True, **kw)
+            for r in RESCALES}
+    np.testing.assert_allclose(np.asarray(outs["exp_add"]),
+                               np.asarray(outs["mul"]),
+                               atol=RESCALE_TOL, rtol=RESCALE_TOL)
+
+
+@pytest.mark.parametrize("cache_dtype", (None,) + CACHE_DTYPES)
+def test_prefill_exp_add_matches_mul(cache_dtype):
+    B, C, H, Dl, Dr, bs, nb, N = 2, 6, 4, 32, 8, 4, 6, 12
+    ckv, krope = _latents(N, bs, Dl, Dr, seed=4)
+    q = jax.random.normal(jax.random.PRNGKey(6), (B, C, H, Dl + Dr),
+                          jnp.float32)
+    rng = np.random.default_rng(8)
+    bt = jnp.asarray(rng.integers(0, N, (B, nb)), jnp.int32)
+    lengths = jnp.asarray([0, 9], jnp.int32)
+    n_valid = jnp.asarray([6, 4], jnp.int32)
+    kw = {}
+    if cache_dtype is not None:
+        cq, cs, rq, rs = _quantize(ckv, krope, cache_dtype)
+        ckv, krope = cq, rq
+        kw = dict(ckv_scales=cs, krope_scales=rs)
+    outs = {r: mla_prefill_paged_kernel(q, ckv, krope, bt, lengths, n_valid,
+                                        rescale=r, interpret=True, **kw)
+            for r in RESCALES}
+    np.testing.assert_allclose(np.asarray(outs["exp_add"]),
+                               np.asarray(outs["mul"]),
+                               atol=RESCALE_TOL, rtol=RESCALE_TOL)
+
+
+@pytest.mark.parametrize("cache_dtype", (None,) + CACHE_DTYPES)
+def test_chunk1_prefill_equals_decode_kernel(cache_dtype):
+    """Triangle identity: a 1-token prefill chunk at position L sees
+    exactly the decode kernel's window (pos <= L) — the two kernels must
+    agree on the same pool."""
+    B, H, Dl, Dr, bs, nb, N = 3, 4, 32, 8, 8, 3, 10
+    ckv, krope = _latents(N, bs, Dl, Dr, seed=9)
+    q = jax.random.normal(jax.random.PRNGKey(2), (B, H, Dl + Dr),
+                          jnp.float32)
+    rng = np.random.default_rng(13)
+    bt = jnp.asarray(rng.integers(0, N, (B, nb)), jnp.int32)
+    L = jnp.asarray([0, 7, 23], jnp.int32)
+    kw = {}
+    if cache_dtype is not None:
+        cq, cs, rq, rs = _quantize(ckv, krope, cache_dtype)
+        ckv, krope = cq, rq
+        kw = dict(ckv_scales=cs, krope_scales=rs)
+    dec = mla_decode_paged_kernel(q, ckv, krope, bt, L, interpret=True, **kw)
+    pre = mla_prefill_paged_kernel(q[:, None], ckv, krope, bt, L,
+                                   jnp.ones((B,), jnp.int32),
+                                   interpret=True, **kw)
+    np.testing.assert_allclose(np.asarray(pre[:, 0]), np.asarray(dec),
+                               atol=RESCALE_TOL, rtol=RESCALE_TOL)
+
+
+def test_kernel_rejects_unknown_rescale():
+    B, H, Dl, Dr, bs, nb, N = 1, 2, 16, 8, 4, 2, 4
+    ckv, krope = _latents(N, bs, Dl, Dr)
+    q = jnp.zeros((B, H, Dl + Dr), jnp.float32)
+    bt = jnp.zeros((B, nb), jnp.int32)
+    with pytest.raises(ValueError, match="rescale"):
+        mla_decode_paged_kernel(q, ckv, krope, bt,
+                                jnp.zeros((B,), jnp.int32),
+                                rescale="fma", interpret=True)
+
+
+def test_rescale_multiplies_model_drops_to_zero():
+    """Cost-model term the AMLA rewrite removes: the per-tile rescale
+    multiplies on the (acc, l) state vanish under exp_add."""
+    kw = dict(cache_len=4096, batch=16, paged_block=128)
+    mul = ac.rescale_multiplies(ac.DSV3_MLA, rescale="mul", **kw)
+    add = ac.rescale_multiplies(ac.DSV3_MLA, rescale="exp_add", **kw)
+    n_tiles = -(-4096 // 128)
+    assert add == 0.0
+    assert mul == 16 * n_tiles * ac.DSV3_MLA.n_heads * (
+        ac.DSV3_MLA.kv_lora_rank + 1)
+    with pytest.raises(ValueError):
+        ac.rescale_multiplies(ac.DSV3_MLA, rescale="fma", **kw)
+
+
+# ----------------------------------------------------- cost-model dtype axis
+
+
+def test_cache_dtype_bytes_axis_shrinks_cache_terms_only():
+    kw = dict(scheme="seq", cache_len=4096, batch=16, paged_block=128)
+    w8 = cachelib.cache_element_bytes(ac.DSV3_MLA.kv_lora_rank,
+                                      ac.DSV3_MLA.qk_rope_dim, 2, "int8")
+    base = ac.mla_decode_cost(ac.DSV3_MLA, **kw)
+    quant = ac.mla_decode_cost(ac.DSV3_MLA, cache_dtype_bytes=w8, **kw)
+    assert quant.flops == base.flops
+    rd = quant.breakdown["B:cache_read"] / base.breakdown["B:cache_read"]
+    assert rd == pytest.approx(w8 / 2) and rd <= 0.55   # ISSUE acceptance
+    assert (quant.breakdown["B:cache_write"]
+            < base.breakdown["B:cache_write"])
+    assert quant.breakdown["B:w_common"] == base.breakdown["B:w_common"]
+    vkw = dict(scheme="seq", cache_len=4096, k=2, batch=16, paged_block=128)
+    bv = ac.mla_verify_cost(ac.DSV3_MLA, **vkw)
+    qv = ac.mla_verify_cost(ac.DSV3_MLA, cache_dtype_bytes=w8, **vkw)
+    assert qv.bytes < bv.bytes and qv.flops == bv.flops
+    pkw = dict(seq_len=1024, chunk=128, paged_block=128, batch=16)
+    bp = ac.mla_prefill_chunk_cost(ac.DSV3_MLA, **pkw)
+    qp = ac.mla_prefill_chunk_cost(ac.DSV3_MLA, cache_dtype_bytes=w8, **pkw)
+    assert qp.bytes < bp.bytes and qp.flops == bp.flops
+
+
+def test_bytes_per_token_and_schemes_cache_width():
+    K, dr = 512, 64
+    assert cachelib.bytes_per_token_latent(K, dr, 2) == (K + dr) * 2
+    assert cachelib.bytes_per_token_latent(K, dr, 2, "int8") == (K + dr) + 8
+    w = cachelib.cache_element_bytes(K, dr, 2, "int8")
+    assert 0 < w < 2
+    plat = PLATFORMS["tpu_v5e"]
+    assert schemeslib.cache_width(ac.DSV3_MLA, plat, "int8") < \
+        schemeslib.cache_width(ac.DSV3_MLA, plat, None)
+    t16 = schemeslib.step_time("seq", ac.DSV3_MLA, plat, cache_len=4096,
+                               batch=16, paged_block=128)
+    t8 = schemeslib.step_time("seq", ac.DSV3_MLA, plat, cache_len=4096,
+                              batch=16, paged_block=128, cache_dtype="int8")
+    assert t8 < t16
+    s = schemeslib.auto_dispatch(ac.DSV3_MLA, plat, cache_len=4096, batch=8,
+                                 paged_block=64, cache_dtype="int8")
+    assert s in ("seq", "rc", "ru")
+
+
+# ------------------------------------------------- drift/telemetry dtype pin
+
+
+def test_drift_predictions_are_dispatcher_exact_for_quantized_pool():
+    """Satellite fix pin: a drift channel bound with cache_dtype must
+    price the quantized cache stream (modeled bytes AND time shrink) and
+    stamp the dtype into its report."""
+    plat = PLATFORMS["tpu_v5e"]
+    rows = {}
+    for cd in (None, "int8"):
+        d = RooflineDrift(mla=ac.DSV3_MLA, platform=plat, paged_block=128,
+                          cache_dtype=cd)
+        d.record_decode("seq", 16, 4096, 1e-3)
+        rows[cd] = d.rows[0]
+        assert d.report()["cache_dtype"] == (cd or "bf16")
+    assert rows["int8"].pred_bytes < rows[None].pred_bytes
+    assert rows["int8"].pred_time_s < rows[None].pred_time_s
+    assert rows["int8"].pred_time_s == pytest.approx(
+        schemeslib.step_time("seq", ac.DSV3_MLA, plat, cache_len=4096,
+                             batch=16, paged_block=128, cache_dtype="int8"))
+
+
+# ----------------------------------------------------------- engine, e2e ---
+
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    cfg = configs.smoke("deepseek-v2-236b")
+    params = nnm.init_params(jax.random.PRNGKey(0), models.model_defs(cfg),
+                             jnp.float32)
+    return cfg, params
+
+
+def _engine_run(cfg, params, reqs, cache_dtype, telemetry=None):
+    eng = PagedMLAEngine(cfg, params, num_blocks=24, block_size=8,
+                         max_batch=2, compute_dtype=jnp.float32,
+                         scheme="seq", impl="kernel",
+                         prefill_mode="chunked", prefill_chunk=8,
+                         cache_dtype=cache_dtype, telemetry=telemetry)
+    summary = eng.run([Request(rid=r.rid, prompt=r.prompt.copy(),
+                               max_new=r.max_new, arrival=r.arrival)
+                       for r in reqs])
+    if telemetry is not None:
+        telemetry.finalize(eng)
+    return eng, summary, {r.rid: r.output for r in eng.sched.finished}
+
+
+def test_engine_int8_greedy_token_parity(smoke_model):
+    """End-to-end acceptance: the engine serving from an int8 pool emits
+    exactly the greedy tokens of the wide-pool engine, and the metrics
+    pool-occupancy gauge prices the quantized bytes."""
+    cfg, params = smoke_model
+    rng = np.random.default_rng(7)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab, (p,)).astype(np.int32),
+                    max_new=g, arrival=a)
+            for i, (p, g, a) in enumerate([(9, 4, 0), (13, 3, 1), (5, 5, 3)])]
+    tel16 = Telemetry.on(metrics=True)
+    tel8 = Telemetry.on(metrics=True)
+    _, s16, out16 = _engine_run(cfg, params, reqs, "bf16", telemetry=tel16)
+    _, s8, out8 = _engine_run(cfg, params, reqs, "int8", telemetry=tel8)
+    assert out8 == out16 and len(out8) == len(reqs)
+    assert s8["cache_dtype"] == "int8" and s16["cache_dtype"] == "bf16"
+    # compute runs f32 here, so the wide pool is 4 B/elem: int8+scales
+    # must land at <= 0.55x of it (the ISSUE bound is vs bf16 = 2 B/elem,
+    # strictly looser)
+    ratio = s8["cache_token_bytes"] / s16["cache_token_bytes"]
+    assert ratio <= 0.55, ratio
+    g16 = tel16.metrics.histogram("pool_allocated_bytes").summary()
+    g8 = tel8.metrics.histogram("pool_allocated_bytes").summary()
+    assert g8["count"] == s8["steps"] and g8["count"] > 0
+    # identical tokens -> identical allocation trajectory -> the gauges
+    # differ by exactly the bytes/token ratio
+    assert g8["max"] == pytest.approx(ratio * g16["max"])
+
+
+def test_engine_rejects_bad_cache_dtype_configs(smoke_model):
+    cfg, params = smoke_model
+    with pytest.raises(ValueError, match="cache_dtype"):
+        PagedMLAEngine(cfg, params, num_blocks=8, block_size=8, max_batch=1,
+                       compute_dtype=jnp.float32, scheme="seq",
+                       cache_dtype="int4")
+    with pytest.raises(NotImplementedError, match="chunked"):
+        PagedMLAEngine(cfg, params, num_blocks=8, block_size=8, max_batch=1,
+                       compute_dtype=jnp.float32, scheme="seq",
+                       prefill_mode="per_request", cache_dtype="int8")
+
+
+# ------------------------------------------------------- hypothesis drives --
+
+
+def test_quantize_roundtrip_error_property():
+    """Round-trip |dequant(quantize(x)) - x| stays inside the per-row
+    half-step bound across magnitudes from subnormal-feeding tiny to 1e8,
+    and zero rows quantize exactly (scale 1, payload 0)."""
+    pytest.importorskip(
+        "hypothesis", reason="optional dev dep: property-based sweeps")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.data())
+    def drive(data):
+        name = data.draw(st.sampled_from(CACHE_DTYPES), label="dtype")
+        rows = data.draw(st.integers(1, 4), label="rows")
+        D = data.draw(st.sampled_from([1, 8, 32]), label="D")
+        mag = data.draw(st.integers(-6, 8), label="mag")
+        seed = data.draw(st.integers(0, 2 ** 16), label="seed")
+        zero_row = data.draw(st.booleans(), label="zero_row")
+        rng = np.random.default_rng(seed)
+        x = rng.standard_normal((rows, D)).astype(np.float32) * 10.0 ** mag
+        if zero_row:
+            x[0] = 0.0
+        qdtype, qmax = _qinfo(name)
+        q, s = cachelib.quantize_latent(jnp.asarray(x), qmax, qdtype)
+        dq = np.asarray(cachelib.dequantize_latent(q, s))
+        s = np.asarray(s)
+        amax = np.max(np.abs(x), axis=-1, keepdims=True)
+        # scale invariant: amax/qmax, or exactly 1 for an all-zero row
+        np.testing.assert_allclose(
+            s, np.where(amax > 0, amax / qmax, 1.0), rtol=1e-6)
+        if name == "int8":
+            # symmetric round-to-nearest: half a step per element
+            bound = s * (0.5 + 1e-3)
+        else:
+            # e4m3: 3 mantissa bits -> rel err <= 2^-4, plus one
+            # subnormal step (2^-9 of the scaled unit) near zero
+            bound = np.abs(x) * 2.0 ** -4 + s * 2.0 ** -9 + s * 1e-3
+        assert np.all(np.abs(dq - x) <= bound), name
+        if zero_row:
+            assert np.all(dq[0] == 0.0) and s[0, 0] == 1.0
+
+    drive()
+
+
+def test_cow_fork_release_scale_invariants_property():
+    """Hypothesis drive of the CoW machinery over a QUANTIZED pool:
+    fork/release refcounts follow the model, copy_block_paged clones
+    data AND scale leaves, and writes never leak scales into untouched
+    blocks."""
+    pytest.importorskip(
+        "hypothesis", reason="optional dev dep: property-based sweeps")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.data())
+    def drive(data):
+        name = data.draw(st.sampled_from(CACHE_DTYPES), label="dtype")
+        bs = data.draw(st.sampled_from([2, 4]), label="bs")
+        N = data.draw(st.integers(4, 8), label="N")
+        seed = data.draw(st.integers(0, 2 ** 16), label="seed")
+        rng = np.random.default_rng(seed)
+        pool = cachelib.paged_latent_cache(N, bs, 16, 8, jnp.float32,
+                                           cache_dtype=name)
+        alloc = BlockAllocator(N)
+        blocks = alloc.alloc(3)
+        assert blocks is not None and 0 not in blocks
+        src, dst, other = blocks
+        # write a few tokens into src through the production scatter
+        bt = jnp.asarray([[src]], jnp.int32)
+        n_tok = data.draw(st.integers(1, bs), label="n_tok")
+        for t in range(n_tok):
+            pool = cachelib.update_latent_paged(
+                pool, bt, jnp.asarray([t], jnp.int32),
+                jnp.asarray(rng.standard_normal((1, 16)), jnp.float32),
+                jnp.asarray(rng.standard_normal((1, 8)), jnp.float32))
+        # written slots carry real scales; untouched blocks keep the
+        # init scale of exactly 1 (no write leakage)
+        assert float(pool["ckv_scale"][src, 0, 0]) != 1.0 or n_tok == 0
+        np.testing.assert_array_equal(
+            np.asarray(pool["ckv_scale"][other]), 1.0)
+        np.testing.assert_array_equal(
+            np.asarray(pool["krope_scale"][other]), 1.0)
+        # CoW break: the copy must clone every leaf, scales included
+        before = jax.tree.map(jnp.copy, pool)
+        pool = cachelib.copy_block_paged(pool, src, dst)
+        for leaf in ("ckv", "ckv_scale", "krope", "krope_scale"):
+            np.testing.assert_array_equal(np.asarray(pool[leaf][dst]),
+                                          np.asarray(pool[leaf][src]))
+            np.testing.assert_array_equal(np.asarray(pool[leaf][other]),
+                                          np.asarray(before[leaf][other]))
+        # refcount model: fork adds a holder, release peels them off,
+        # the block only zeroes at the last release
+        alloc.fork([src])
+        assert alloc.release([src]) == []
+        assert alloc.release([src]) == [src]
+        alloc.free([src])
+        with pytest.raises(ValueError):
+            alloc.release([src])
+
+    drive()
