@@ -26,7 +26,7 @@ FAST_LANE_EXPR := not $(KERNEL_MARKER) and not $(MESH_MARKER) \
 	and not $(AUDIT_MARKER)
 
 .PHONY: test test-fast test-lane-fast test-kernels test-mesh test-audit \
-	audit lint bench-serving bench-smoke bench-gate
+	audit lint bench-serving bench-smoke bench-gate docs-check
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q $(PYTEST_FLAGS)
@@ -87,6 +87,7 @@ FORMAT_PATHS := \
 	benchmarks/roofline_report.py \
 	benchmarks/run.py \
 	scripts/audit_steps.py \
+	scripts/check_docs.py \
 	scripts/junit_summary.py \
 	src/repro/analysis/__init__.py \
 	src/repro/analysis/audit.py \
@@ -118,3 +119,9 @@ bench-smoke:
 # `python benchmarks/check_regression.py --update`.
 bench-gate: bench-smoke
 	$(PY) benchmarks/check_regression.py
+
+# CI `docs` job: intra-repo markdown links resolve, the README flag
+# table covers every launch/serve.py flag, and the serving CLIs'
+# module docstrings document their own argparse (static — no jax).
+docs-check:
+	$(PY) scripts/check_docs.py

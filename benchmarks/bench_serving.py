@@ -58,6 +58,20 @@ wide-pool row, the modeled cache-byte shrink (<= 0.55x bf16), the attn
 operational-intensity rise, and a kernel-vs-fp32-oracle max-logit-error
 bound on a ragged random pool.
 
+The load-harness rows (PR 9) run OPEN-LOOP: Poisson arrivals at a swept
+rate (and a committed bursty trace schedule) that do not back off when
+the engine saturates, all served by the async double-buffered engine.
+TTFT/TPOT/queue-delay percentiles come from the PR-7 telemetry
+histograms — no new timing code; achieved tokens/step and the
+step-budget goodput are arithmetic over Request bookkeeping, so the
+regression gate holds them exactly.  The sweep locates the saturation
+knee and gates it against the decode roofline in step space (max_batch
+tokens per fused step); the deepest-saturation run is traced and gated
+on device_step spans (their own Perfetto track) wall-overlapping host
+schedule spans — the overlap the sync engine cannot show.  The bursty
+trace is served by BOTH engines and gated token-identical.  Artifact:
+bench_load.json.
+
     PYTHONPATH=src python benchmarks/bench_serving.py --requests 12
     PYTHONPATH=src python benchmarks/bench_serving.py --shared-prefix-len 0
     PYTHONPATH=src python benchmarks/bench_serving.py --trace out.json
@@ -81,6 +95,7 @@ from repro.envflags import force_host_device_count
 force_host_device_count(8)
 
 import argparse
+import json
 import time
 
 import jax
@@ -259,6 +274,121 @@ def run_paged(
     return out
 
 
+def open_loop_requests(
+    n, vocab, rate, *, body_seed, arrival_seed, shared_prefix_len=16
+):
+    """Open-loop request stream: Poisson arrivals at ``rate`` requests
+    per engine step, INDEPENDENT of completions (the load does not back
+    off when the engine saturates — that is what makes the knee visible).
+    Request bodies come from ``body_seed`` so every rate in a sweep
+    serves the identical work; only the arrival clock changes."""
+    body = np.random.default_rng(body_seed)
+    arr = np.random.default_rng(arrival_seed)
+    arrivals = np.floor(np.cumsum(arr.exponential(1.0 / rate, n))).astype(int)
+    preamble = body.integers(0, vocab, (shared_prefix_len,)).astype(np.int32)
+    reqs = []
+    for i in range(n):
+        tlen = int(body.choice([8, 16, 24, 32]))
+        tail = body.integers(0, vocab, (tlen,)).astype(np.int32)
+        reqs.append(
+            Request(
+                rid=i,
+                prompt=np.concatenate([preamble, tail]),
+                max_new=int(body.integers(4, 20)),
+                arrival=int(arrivals[i]),
+            )
+        )
+    return reqs
+
+
+def trace_requests(path, vocab, *, body_seed, shared_prefix_len=16):
+    """Trace-driven arrivals: the committed schedule in ``path`` fixes
+    (arrival step, prompt len, max_new) per request; token bodies are
+    generated deterministically from ``body_seed``."""
+    with open(path) as f:
+        doc = json.load(f)
+    body = np.random.default_rng(body_seed)
+    preamble = body.integers(0, vocab, (shared_prefix_len,)).astype(np.int32)
+    reqs = []
+    for i, spec in enumerate(doc["requests"]):
+        tail = body.integers(0, vocab, (spec["plen"],)).astype(np.int32)
+        reqs.append(
+            Request(
+                rid=i,
+                prompt=np.concatenate([preamble, tail]),
+                max_new=int(spec["max_new"]),
+                arrival=int(spec["arrival"]),
+            )
+        )
+    return reqs
+
+
+def run_load(
+    cfg, params, reqs, args, *, engine_cls, trace=False, max_steps=6000, slo_steps=30
+):
+    """One open-loop load-harness run.  Latency percentiles come from the
+    telemetry histograms (repro.obs — the spans/metrics PR 7 shipped),
+    NOT from new timing code; the step-denominated metrics (achieved
+    tokens/step, goodput against a step-budget SLO) are arithmetic over
+    Request bookkeeping, so they are machine-speed-invariant and the
+    regression gate can hold them exactly."""
+    from repro.obs import Telemetry
+
+    bs = args.block_size
+    per_req = max(blocks_for(r.plen + r.max_new + 1, bs) for r in reqs)
+    # ample pool: the open-loop queue forms at the decode slots
+    # (max_batch), not at block exhaustion
+    num_blocks = 1 + (args.max_batch + 1) * per_req
+    tel = Telemetry.on(trace=trace, metrics=True, drift=False)
+    eng = engine_cls(
+        cfg,
+        params,
+        num_blocks=num_blocks,
+        block_size=bs,
+        max_batch=args.max_batch,
+        max_blocks_per_req=per_req,
+        compute_dtype=jnp.float32,
+        scheme="auto",
+        platform=PLATFORMS["tpu_v5e"],
+        enable_prefix_cache=True,
+        prefill_mode="chunked",
+        prefill_chunk=args.prefill_chunk,
+        telemetry=tel,
+    )
+    out = eng.run(
+        [
+            Request(
+                rid=r.rid,
+                prompt=r.prompt.copy(),
+                max_new=r.max_new,
+                arrival=r.arrival,
+            )
+            for r in reqs
+        ],
+        max_steps=max_steps,
+    )
+    tel.finalize(eng)
+    fin = eng.sched.finished
+    lat = [r.finished_step - r.arrival for r in fin]
+    row = {
+        "steps": out["steps"],
+        "decode_tokens": out["decode_tokens"],
+        "finished": len(fin),
+        "achieved_tok_per_step": out["decode_tokens"] / max(out["steps"], 1),
+        "tokens_per_s": out["tokens_per_s"],
+        "preemptions": out["preemptions"],
+        "slo_steps": slo_steps,
+        "goodput_slo": sum(1 for v in lat if v <= slo_steps) / max(len(reqs), 1),
+        "latency_steps_p50": float(np.median(lat)) if lat else 0.0,
+        "latency_steps_max": float(max(lat)) if lat else 0.0,
+        "ttft_ms": tel.metrics.histogram("ttft_ms").summary(),
+        "tpot_ms": tel.metrics.histogram("tpot_ms").summary(),
+        "queue_delay_ms": tel.metrics.histogram("queue_delay_ms").summary(),
+    }
+    outputs = {r.rid: [int(t) for t in r.output] for r in fin}
+    return row, outputs, tel
+
+
 def bench_prefill_kernel(cfg, params, args):
     """Prefill-kernel row: ONE jitted chunked-prefill step over a paged
     pool with a resident prefix, gather path vs Pallas kernel —
@@ -385,6 +515,24 @@ def main():
         help="also export the telemetry row's Perfetto trace "
         "to this path (the trace is always saved to "
         "benchmarks/artifacts/trace_serving.json)",
+    )
+    ap.add_argument(
+        "--load-rates",
+        default="0.05,0.125,0.25,0.5",
+        help="open-loop sweep: Poisson arrival rates in requests per "
+        "engine step (comma list, ascending)",
+    )
+    ap.add_argument(
+        "--load-requests",
+        type=int,
+        default=10,
+        help="requests per open-loop sweep point",
+    )
+    ap.add_argument(
+        "--arrival-trace",
+        default=os.path.join(os.path.dirname(__file__), "data", "arrival_trace.json"),
+        help="trace-driven arrival schedule for the load harness "
+        "(committed JSON: arrival step + plen + max_new per request)",
     )
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -693,6 +841,127 @@ def main():
 
     gain = pp["cache_utilization"] / max(base["cache_utilization"], 1e-9)
 
+    print("== open-loop SLO load harness, async engine (PR 9) ==")
+    from repro.core.schemes import step_time
+    from repro.runtime import AsyncPagedMLAEngine
+    from repro.runtime.engine import TID_DEVICE
+
+    rates = [float(r) for r in args.load_rates.split(",")]
+    sweep = {}
+    trace_load = None
+    for ri, rate in enumerate(rates):
+        reqs_r = open_loop_requests(
+            args.load_requests,
+            cfg.vocab,
+            rate,
+            body_seed=args.seed + 101,
+            arrival_seed=args.seed + 201 + ri,
+            shared_prefix_len=args.shared_prefix_len,
+        )
+        # the deepest-saturation point doubles as the overlap probe: arm
+        # the tracer so the device-stream track is recorded
+        row, _, tel_r = run_load(
+            cfg,
+            params,
+            reqs_r,
+            args,
+            engine_cls=AsyncPagedMLAEngine,
+            trace=(ri == len(rates) - 1),
+        )
+        if ri == len(rates) - 1:
+            trace_load = tel_r.tracer.to_dict()
+        mean_new = sum(r.max_new for r in reqs_r) / len(reqs_r)
+        row["rate"] = rate
+        row["offered_tok_per_step"] = rate * mean_new
+        sweep[f"r{ri}"] = row
+        print(
+            f"  rate {rate:.3f} req/step (offered "
+            f"{row['offered_tok_per_step']:.2f} tok/step): achieved "
+            f"{row['achieved_tok_per_step']:.2f} tok/step, goodput "
+            f"{row['goodput_slo']:.2f} @ {row['slo_steps']}-step SLO, "
+            f"TTFT p99 {row['ttft_ms'].get('p99', 0):.0f} ms, "
+            f"latency p50 {row['latency_steps_p50']:.0f} steps"
+        )
+    # saturation knee: the decode roofline in step space is max_batch
+    # tokens/step (one fused decode+sample step serves <= max_batch
+    # rows) — locate the sweep point that gets closest to it
+    achieved = [sweep[f"r{i}"]["achieved_tok_per_step"] for i in range(len(rates))]
+    knee_i = int(np.argmax(achieved))
+    ceiling = float(args.max_batch)
+    mla = cfg.mla_config()
+    plen_typ = 16 + args.shared_prefix_len
+    t_model = step_time(
+        "seq",
+        mla,
+        PLATFORMS["tpu_v5e"],
+        cache_len=plen_typ + 16,
+        batch=args.max_batch,
+        paged_block=args.block_size,
+    )
+    knee = {
+        "rate": rates[knee_i],
+        "achieved_tok_per_step": achieved[knee_i],
+        "decode_tokens": sweep[f"r{knee_i}"]["decode_tokens"],
+        "tokens_per_s": sweep[f"r{knee_i}"]["tokens_per_s"],
+        "ceiling_tok_per_step": ceiling,
+        "knee_frac": achieved[knee_i] / ceiling,
+        "model": {
+            "platform": "tpu_v5e",
+            "step_time_us": t_model * 1e6,
+            "predicted_tok_per_s": args.max_batch / t_model,
+        },
+    }
+    print(
+        f"  knee @ rate {knee['rate']:.3f}: "
+        f"{knee['achieved_tok_per_step']:.2f} of {ceiling:.0f} tok/step "
+        f"roofline ceiling ({knee['knee_frac']:.2f}); modeled tpu_v5e "
+        f"step {t_model * 1e9:.0f} ns -> "
+        f"{knee['model']['predicted_tok_per_s'] / 1e3:.1f}k tok/s"
+    )
+    # trace-driven arrivals: committed burst schedule, sync-vs-async
+    # token parity is the double-buffer acceptance gate
+    reqs_t = trace_requests(
+        args.arrival_trace,
+        cfg.vocab,
+        body_seed=args.seed + 101,
+        shared_prefix_len=args.shared_prefix_len,
+    )
+    ld_sync, out_sync, _ = run_load(
+        cfg, params, reqs_t, args, engine_cls=PagedMLAEngine
+    )
+    ld_async, out_async, _ = run_load(
+        cfg, params, reqs_t, args, engine_cls=AsyncPagedMLAEngine
+    )
+    ld_async["parity"] = out_sync == out_async
+    print(
+        f"  trace-driven ({len(reqs_t)} reqs, bursty): async "
+        f"{ld_async['achieved_tok_per_step']:.2f} tok/step over "
+        f"{ld_async['steps']:.0f} steps, TTFT p99 "
+        f"{ld_async['ttft_ms'].get('p99', 0):.0f} ms, sync parity "
+        f"{ld_async['parity']}"
+    )
+    # host/device overlap: the async tick's device_step spans live on
+    # their own track and must wall-overlap a host schedule span — with
+    # the sync engine those phases are strictly serialized
+    load_trace_problems = validate_trace(trace_load)
+    xs = [
+        e
+        for e in trace_load["traceEvents"]
+        if e.get("ph") == "X" and e["pid"] == PID_ENGINE
+    ]
+    dev_spans = [e for e in xs if e["tid"] == TID_DEVICE and e["name"] == "device_step"]
+    sch_spans = [e for e in xs if e["tid"] == 0 and e["name"] == "schedule"]
+    load_overlap = any(
+        d["ts"] < s["ts"] + s["dur"] and s["ts"] < d["ts"] + d["dur"]
+        for d in dev_spans
+        for s in sch_spans
+    )
+    print(
+        f"  overlap probe: {len(dev_spans)} device-stream spans, "
+        f"{len(load_trace_problems)} trace problems, device_step "
+        f"overlaps host schedule: {load_overlap}"
+    )
+
     def paged_row(label, row):
         return [
             label,
@@ -990,6 +1259,55 @@ def main():
         f"{qp['tokens_per_s']:.1f} vs {pp['tokens_per_s']:.1f} tok/s",
     )
 
+    # ---- load-harness gates (ISSUE 9 acceptance) ------------------------
+    ok &= common.check(
+        "async engine token-identical to sync on the bursty trace",
+        ld_async["parity"],
+    )
+    ok &= common.check(
+        "open-loop sweep drains every request at every rate",
+        all(sweep[f"r{i}"]["finished"] == args.load_requests for i in range(len(rates)))
+        and ld_async["finished"] == len(reqs_t),
+    )
+    ok &= common.check(
+        "saturation knee sits inside the roofline band",
+        0.5 <= knee["knee_frac"] <= 1.0 + 1e-9,
+        f"{knee['achieved_tok_per_step']:.2f} of {ceiling:.0f} tok/step "
+        f"({knee['knee_frac']:.2f}; decode roofline = max_batch "
+        f"tokens per fused step)",
+    )
+    ok &= common.check(
+        "offered load crosses the knee (the sweep actually saturates)",
+        sweep[f"r{len(rates) - 1}"]["offered_tok_per_step"] > ceiling
+        and achieved[-1] >= 0.8 * max(achieved),
+        f"offered {sweep[f'r{len(rates) - 1}']['offered_tok_per_step']:.2f} "
+        f"vs ceiling {ceiling:.0f} tok/step",
+    )
+    ok &= common.check(
+        "goodput degrades monotonically-ish past the knee",
+        sweep[f"r{len(rates) - 1}"]["goodput_slo"] <= sweep["r0"]["goodput_slo"] + 1e-9,
+        f"{sweep['r0']['goodput_slo']:.2f} -> "
+        f"{sweep[f'r{len(rates) - 1}']['goodput_slo']:.2f}",
+    )
+    ok &= common.check(
+        "load-harness TTFT/TPOT come from the telemetry histograms",
+        ld_async["ttft_ms"]["count"] == len(reqs_t)
+        and ld_async["tpot_ms"]["count"] == len(reqs_t),
+        f"{ld_async['ttft_ms']['count']} / {ld_async['tpot_ms']['count']} "
+        f"of {len(reqs_t)}",
+    )
+    ok &= common.check(
+        "async load trace validates (device-stream track nests)",
+        not load_trace_problems,
+        "; ".join(load_trace_problems[:3]),
+    )
+    ok &= common.check(
+        "device_step spans overlap host schedule spans (double-buffering "
+        "visible in the trace)",
+        load_overlap,
+        f"{len(dev_spans)} device spans x {len(sch_spans)} schedule spans",
+    )
+
     pp_save = {k: v for k, v in pp.items() if k != "outputs"}
     pr1_save = {k: v for k, v in pr1.items() if k != "outputs"}
     pk_save = {k: v for k, v in pk.items() if k != "outputs"}
@@ -1054,6 +1372,30 @@ def main():
         },
     )
     common.save("bench_prefill_kernel.json", kb_save)
+    # load-harness artifact (PR 9): the open-loop sweep, the located
+    # knee vs the roofline ceiling, and the trace-driven parity row —
+    # check_regression.py holds the step-denominated fields exactly and
+    # the wall-clock ones with wide ratio bands.
+    common.save(
+        "bench_load.json",
+        {
+            "rates": rates,
+            "requests_per_rate": args.load_requests,
+            "sweep": sweep,
+            "knee": knee,
+            "trace_driven": {
+                "sync": ld_sync,
+                "async": ld_async,
+                "trace_file": os.path.basename(args.arrival_trace),
+            },
+            "overlap": {
+                "validated": not load_trace_problems,
+                "device_spans": len(dev_spans),
+                "schedule_spans": len(sch_spans),
+                "device_overlaps_schedule": load_overlap,
+            },
+        },
+    )
     # telemetry artifacts (PR 7): the Perfetto trace of the armed run,
     # the metrics snapshot, and the drift report the regression gate
     # diffs against benchmarks/baselines/bench_drift.json.

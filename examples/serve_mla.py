@@ -102,9 +102,22 @@ against measured step times:
                          table.  Either flag also records predicted-vs-
                          measured drift per dispatched scheme.
 
+PR 9 overlaps host and device — ``--engine async`` runs the double-
+buffered AsyncPagedMLAEngine: the fused decode+sample step for tick N is
+dispatched and the host immediately schedules tick N+1 (admission, block
+growth, CoW drain) while the device executes; only the sampled token ids
+sync back, one tick later.  Tokens are identical to the synchronous
+engine under greedy AND seeded sampling, preemption and speculation
+included (tests/test_async_engine.py).
+
 Serving-flags summary (all compose):
 
   flag              default   effect
+  --requests        10        number of requests in the Poisson stream
+  --arrival-rate    0.4       mean requests per decode step (Poisson)
+  --seed            0         weight init + sampling PRNG + workload seed
+  --platform        tpu_v5e   hwmodel deployment point for auto-dispatch
+  --engine          sync      paged engine: 'sync' | 'async' (overlapped)
   --max-batch       4         decode slots (continuous batching)
   --block-size      8         tokens per pool block
   --num-blocks      48        pool capacity
@@ -155,7 +168,8 @@ import repro.models as models
 from repro.core.schemes import auto_dispatch, step_time
 from repro.hwmodel.platforms import PLATFORMS
 from repro.nn import module as nnm
-from repro.runtime import PagedMLAEngine, Request, blocks_for
+from repro.runtime import (AsyncPagedMLAEngine, PagedMLAEngine, Request,
+                           blocks_for)
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--requests", type=int, default=10)
@@ -192,6 +206,10 @@ ap.add_argument("--metrics", default="",
                 help="write metrics-registry JSON to this path and print "
                      "the metrics table")
 ap.add_argument("--seed", type=int, default=0)
+ap.add_argument("--engine", default="sync", choices=("sync", "async"),
+                help="paged engine: 'sync' waits on the device each tick; "
+                     "'async' double-buffers host scheduling against device "
+                     "execution (token-identical)")
 args = ap.parse_args()
 
 cfg = configs.smoke("deepseek-v2-236b")
@@ -243,21 +261,22 @@ if args.trace or args.metrics:
     from repro.obs import Telemetry
     tel = Telemetry.on(trace=bool(args.trace), metrics=bool(args.metrics),
                        drift=True)
-engine = PagedMLAEngine(cfg, params, num_blocks=args.num_blocks,
-                        block_size=bs, max_batch=args.max_batch,
-                        max_blocks_per_req=per_req,
-                        compute_dtype=jnp.float32, impl=args.impl,
-                        scheme="auto", platform=plat,
-                        enable_prefix_cache=not args.no_prefix_cache,
-                        prefill_mode="chunked" if args.prefill_chunk
-                        else "per_request",
-                        prefill_impl=args.prefill_impl,
-                        prefill_chunk=args.prefill_chunk or 32,
-                        temperature=args.temperature, top_k=args.top_k,
-                        sample_seed=args.seed, mesh=mesh,
-                        spec_k=args.spec_k, draft_cfg=draft_cfg,
-                        draft_params=draft_params,
-                        cache_dtype=args.cache_dtype, telemetry=tel)
+engine_cls = AsyncPagedMLAEngine if args.engine == "async" else PagedMLAEngine
+engine = engine_cls(cfg, params, num_blocks=args.num_blocks,
+                    block_size=bs, max_batch=args.max_batch,
+                    max_blocks_per_req=per_req,
+                    compute_dtype=jnp.float32, impl=args.impl,
+                    scheme="auto", platform=plat,
+                    enable_prefix_cache=not args.no_prefix_cache,
+                    prefill_mode="chunked" if args.prefill_chunk
+                    else "per_request",
+                    prefill_impl=args.prefill_impl,
+                    prefill_chunk=args.prefill_chunk or 32,
+                    temperature=args.temperature, top_k=args.top_k,
+                    sample_seed=args.seed, mesh=mesh,
+                    spec_k=args.spec_k, draft_cfg=draft_cfg,
+                    draft_params=draft_params,
+                    cache_dtype=args.cache_dtype, telemetry=tel)
 total_need = sum(blocks_for(r.plen + r.max_new + 1, bs) for r in reqs)
 print(f"\n{args.requests} requests (prompts 8-32, gen 4-19), pool "
       f"{args.num_blocks - 1} usable blocks x {bs} tokens "

@@ -1,0 +1,137 @@
+"""Docs gate (`make docs-check`, CI `docs` job): fail on stale documentation.
+
+Three checks, all static — no jax import, so the CI job needs nothing
+but a Python interpreter:
+
+  links      every intra-repo markdown link in README.md and docs/*.md
+             resolves to an existing file (anchors and external URLs
+             are skipped; a rename that orphans a link fails here).
+  readme     every ``--flag`` defined by launch/serve.py's argparse
+             appears in README.md — the flag table cannot silently
+             fall behind the CLI.
+  docstrings every argparse flag of the serving CLIs (launch/serve.py,
+             examples/serve_mla.py) is mentioned in that module's own
+             docstring — the long-form docs ride in the files and this
+             pins them to the code (tests/test_docs.py runs the same
+             functions inside tier 1).
+
+Flags are collected by ast-walking the source for ``add_argument``
+calls, so the check never imports (or executes) the CLIs.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# CLIs whose module docstring must document every argparse flag.
+DOCSTRING_CLIS = (
+    os.path.join("src", "repro", "launch", "serve.py"),
+    os.path.join("examples", "serve_mla.py"),
+)
+
+SERVE_CLI = os.path.join("src", "repro", "launch", "serve.py")
+
+_LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def md_files():
+    """README.md plus everything under docs/, repo-relative paths."""
+    out = ["README.md"]
+    docs = os.path.join(ROOT, "docs")
+    if os.path.isdir(docs):
+        for name in sorted(os.listdir(docs)):
+            if name.endswith(".md"):
+                out.append(os.path.join("docs", name))
+    return out
+
+
+def check_links():
+    """Every intra-repo markdown link resolves.  Returns problem strings."""
+    problems = []
+    for rel in md_files():
+        path = os.path.join(ROOT, rel)
+        base = os.path.dirname(path)
+        with open(path) as f:
+            text = f.read()
+        for target in _LINK_RE.findall(text):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            dest = os.path.normpath(os.path.join(base, target.split("#", 1)[0]))
+            if not os.path.exists(dest):
+                problems.append(f"{rel}: broken link -> {target}")
+    return problems
+
+
+def argparse_flags(rel_path):
+    """All ``--flag`` strings passed to add_argument in the file (by ast)."""
+    with open(os.path.join(ROOT, rel_path)) as f:
+        tree = ast.parse(f.read())
+    flags = []
+    for node in ast.walk(tree):
+        if not (
+            isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Attribute)
+            and node.func.attr == "add_argument"
+        ):
+            continue
+        for arg in node.args:
+            if isinstance(arg, ast.Constant) and str(arg.value).startswith("--"):
+                flags.append(arg.value)
+    return flags
+
+
+def _missing_flags(flags, text):
+    return [
+        flag
+        for flag in flags
+        if not re.search(r"(?<![\w-])" + re.escape(flag) + r"(?![\w-])", text)
+    ]
+
+
+def check_readme_flags():
+    """Every launch/serve.py flag appears in README.md."""
+    with open(os.path.join(ROOT, "README.md")) as f:
+        text = f.read()
+    return [
+        f"README.md: launch/serve.py flag missing from the flag table: {flag}"
+        for flag in _missing_flags(argparse_flags(SERVE_CLI), text)
+    ]
+
+
+def check_docstring_parity():
+    """Every CLI flag is mentioned in its module's own docstring."""
+    problems = []
+    for rel in DOCSTRING_CLIS:
+        with open(os.path.join(ROOT, rel)) as f:
+            doc = ast.get_docstring(ast.parse(f.read())) or ""
+        for flag in _missing_flags(argparse_flags(rel), doc):
+            problems.append(f"{rel}: flag {flag} missing from the module docstring")
+    return problems
+
+
+def main():
+    problems = check_links() + check_readme_flags() + check_docstring_parity()
+    for p in problems:
+        print(f"[FAIL] {p}")
+    if problems:
+        print(f"\n{len(problems)} docs problem(s)")
+        return 1
+    n_links = sum(
+        len(_LINK_RE.findall(open(os.path.join(ROOT, rel)).read()))
+        for rel in md_files()
+    )
+    n_flags = len(argparse_flags(SERVE_CLI))
+    print(
+        f"docs check: {len(md_files())} markdown files, {n_links} links, "
+        f"{n_flags} serve.py flags covered — all good"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -95,6 +95,34 @@ Quantized latent pool (PR 8) — composes with every paged flag:
                       carries no scales).  'bf16' (default) is the
                       unquantized pool at the compute dtype.
 
+Async double-buffered engine + HTTP frontend (PR 9):
+
+  --engine {sync,async}
+                      which paged engine runs the load.  'async'
+                      (AsyncPagedMLAEngine) dispatches the fused
+                      decode+sample step and returns WITHOUT syncing:
+                      the host prepares tick N+1 (admission, block
+                      growth, CoW drain) while the device executes
+                      tick N, and only the sampled token ids sync back
+                      a tick later.  Token-identical to 'sync' under
+                      greedy AND seeded sampling, preemption included
+                      (tests/test_async_engine.py).
+  --serve             instead of running the synthetic batch, start the
+                      stdlib HTTP/SSE frontend (launch.server) on
+                      --host:--port and serve live requests:
+                      POST /v1/generate (SSE streaming or blocking
+                      JSON; per-request max_tokens + stop sequences),
+                      POST /v1/cancel, GET /v1/health, GET
+                      /v1/metrics.  Requires --paged.  A client
+                      disconnect mid-stream cancels the request and
+                      frees its pool blocks.
+  --host / --port     frontend bind address (default 127.0.0.1:8000).
+
+Common knobs: --arch picks the model family/config, --smoke shrinks it
+to CI size, --platform names the hwmodel deployment point that
+auto_dispatch prices schemes against, and --seed seeds weight init and
+the sampling PRNG.
+
 Telemetry (PR 7) — composes with every paged flag:
 
   --trace PATH        record per-request lifecycle spans (arrival ->
@@ -134,6 +162,10 @@ Serving-flags summary (the paged runtime; all compose):
   --draft           shallow:2 draft spec ('shallow:N' | 'self')
   --trace           ''        Perfetto trace-event JSON output path
   --metrics         ''        metrics-registry JSON output path
+  --engine          sync      paged engine: 'sync' | 'async' (overlapped)
+  --serve           off       HTTP/SSE frontend instead of batch mode
+  --host            127.0.0.1 frontend bind host (with --serve)
+  --port            8000      frontend bind port (with --serve)
 
 Static audit (PR 6): every step factory this CLI dispatches to
 (decode/prefill/verify x gather/pallas x scheme, single-device and
@@ -229,6 +261,18 @@ def main():
                     help="write metrics-registry JSON (counters/gauges/"
                          "histograms + engine summary) to this path and "
                          "print the table; requires --paged")
+    ap.add_argument("--engine", default="sync", choices=("sync", "async"),
+                    help="paged engine: 'sync' steps the device and waits; "
+                         "'async' double-buffers — host schedules tick N+1 "
+                         "while the device runs tick N (token-identical)")
+    ap.add_argument("--serve", action="store_true",
+                    help="start the HTTP/SSE frontend (launch.server) on "
+                         "--host:--port instead of running the synthetic "
+                         "batch; requires --paged")
+    ap.add_argument("--host", default="127.0.0.1",
+                    help="frontend bind host (with --serve)")
+    ap.add_argument("--port", type=int, default=8000,
+                    help="frontend bind port (with --serve)")
     args = ap.parse_args()
 
     cfg = configs.smoke(args.arch) if args.smoke else configs.full(args.arch)
@@ -249,6 +293,10 @@ def main():
         raise SystemExit("--trace/--metrics require --paged (the "
                          "telemetry subsystem instruments the "
                          "continuous-batching engine)")
+    if args.serve or args.engine != "sync":
+        raise SystemExit("--serve/--engine require --paged (the frontend "
+                         "and the async double-buffer run on the paged "
+                         "runtime)")
 
     scheme = args.scheme
     if scheme == "auto":
@@ -340,8 +388,11 @@ def _serve_paged(args, cfg, params, dtype, mesh=None):
     becomes a staggered request stream against the paged runtime.  With a
     mesh, batch rows shard over 'data', heads over 'model', and the pool
     replicates (runtime.steps) — same tokens as single-host serving."""
-    from repro.runtime import PagedMLAEngine, Request, blocks_for
+    from repro.runtime import (AsyncPagedMLAEngine, PagedMLAEngine, Request,
+                               blocks_for)
 
+    engine_cls = AsyncPagedMLAEngine if args.engine == "async" \
+        else PagedMLAEngine
     bs = args.block_size
     per_req = blocks_for(args.prompt_len + args.gen + 1, bs)
     num_blocks = args.num_blocks or (1 + args.batch * per_req)
@@ -356,7 +407,7 @@ def _serve_paged(args, cfg, params, dtype, mesh=None):
         from repro.obs import Telemetry
         tel = Telemetry.on(trace=bool(args.trace),
                            metrics=bool(args.metrics), drift=True)
-    engine = PagedMLAEngine(
+    engine = engine_cls(
         cfg, params, num_blocks=num_blocks, block_size=bs,
         max_batch=args.batch, max_blocks_per_req=per_req,
         compute_dtype=dtype, impl=args.impl, scheme=args.scheme,
@@ -369,6 +420,13 @@ def _serve_paged(args, cfg, params, dtype, mesh=None):
         sample_seed=args.seed, mesh=mesh, shard_policy=args.policy,
         spec_k=args.spec_k, draft_cfg=draft_cfg, draft_params=draft_params,
         cache_dtype=args.cache_dtype, telemetry=tel)
+    if args.serve:
+        from repro.launch.server import Frontend
+        fe = Frontend(engine, host=args.host, port=args.port)
+        print(f"[serve] HTTP/SSE frontend on http://{fe.host}:{fe.port} "
+              f"(engine={args.engine}; POST /v1/generate, /v1/cancel; "
+              f"GET /v1/health, /v1/metrics; Ctrl-C to stop)")
+        return fe.serve_forever()
     rng = np.random.default_rng(args.seed + 1)
     reqs = [Request(rid=i,
                     prompt=rng.integers(0, cfg.vocab,

@@ -1,0 +1,264 @@
+"""Stdlib HTTP/SSE frontend for the paged MLA engines.
+
+One ``EngineWorker`` thread owns the engine (the engines are NOT
+thread-safe; only ``request_cancel`` may be called from other threads)
+and runs the tick loop: drain client submissions into ``engine.submit``,
+``engine.step`` while work is pending, then publish newly visible tokens
+into per-request stream queues that the HTTP handler threads block on.
+With the async engine the worker's host work for tick N+1 overlaps the
+device executing tick N — the frontend code is identical either way.
+
+Endpoints (JSON in / JSON or SSE out; stdlib ``http.server`` only):
+
+  POST /v1/generate   {"prompt": [ids], "max_tokens": N,
+                       "stop": [[ids], ...], "stream": bool}
+                      stream=true: ``text/event-stream`` with one
+                      ``event: token`` per generated token and a final
+                      ``event: done`` carrying finish_reason + the full
+                      (stop-truncated) output.  stream=false: a single
+                      JSON body after completion.
+  POST /v1/cancel     {"rid": N} — thread-safe cancel; mid-decode the
+                      request frees its slot/blocks at the next tick and
+                      finishes with finish_reason="cancelled".
+  GET  /v1/health     liveness + engine step/queue counters.
+  GET  /v1/metrics    metrics-registry snapshot (when telemetry is on)
+                      plus the engine summary.
+
+Streaming holds back ``max(len(stop_seq)) - 1`` tokens so a stop
+sequence completing across several ticks never leaks its own prefix to
+the client; the held tokens flush with ``event: done``.  A client
+disconnect mid-stream (BrokenPipeError on write) cancels the request so
+its blocks return to the pool instead of decoding to max_tokens.
+"""
+from __future__ import annotations
+
+import itertools
+import json
+import queue
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..runtime.scheduler import Request
+
+
+class _Stream:
+    """Per-request token channel between the worker and a handler."""
+
+    __slots__ = ("rid", "req", "q", "emitted", "hold")
+
+    def __init__(self, rid: int, req: Request):
+        self.rid = rid
+        self.req = req
+        self.q: "queue.Queue[Tuple]" = queue.Queue()
+        self.emitted = 0
+        # stop sequences can complete across ticks; never emit a token
+        # that a later match could retro-truncate.
+        self.hold = max((len(s) for s in req.stop), default=1) - 1
+
+
+class EngineWorker(threading.Thread):
+    """Single thread that owns the engine and ticks it.
+
+    Submissions arrive via ``submit`` (any thread), cancellation via
+    ``cancel`` (delegates to the engine's thread-safe flag).  The loop
+    sleeps on a condition variable while the engine is idle and no
+    submissions are pending, so an unused server costs nothing.
+    """
+
+    def __init__(self, engine, *, idle_wait_s: float = 0.05):
+        super().__init__(daemon=True, name="engine-worker")
+        self.engine = engine
+        self._idle_wait_s = idle_wait_s
+        self._cv = threading.Condition()
+        self._pending: List[Tuple[Request, _Stream]] = []
+        self._streams: Dict[int, _Stream] = {}
+        self._rids = itertools.count()
+        self._stopping = False
+
+    # ------------------------------------------------------- client API ----
+    def submit(self, prompt, max_tokens: int,
+               stop: Optional[List[List[int]]] = None) -> _Stream:
+        req = Request(rid=next(self._rids),
+                      prompt=np.asarray(prompt, dtype=np.int32),
+                      max_new=int(max_tokens),
+                      stop=[list(map(int, s)) for s in (stop or [])])
+        st = _Stream(req.rid, req)
+        with self._cv:
+            self._pending.append((req, st))
+            self._streams[req.rid] = st
+            self._cv.notify()
+        return st
+
+    def cancel(self, rid: int) -> None:
+        self.engine.request_cancel(rid)   # thread-safe by contract
+        with self._cv:
+            self._cv.notify()             # wake the loop to process it
+
+    def stop(self) -> None:
+        with self._cv:
+            self._stopping = True
+            self._cv.notify()
+        self.join(timeout=30)
+
+    # ------------------------------------------------------ worker loop ----
+    def run(self) -> None:
+        while True:
+            with self._cv:
+                while (not self._stopping and not self._pending
+                       and self.engine.idle and not self.engine._cancels):
+                    self._cv.wait(timeout=self._idle_wait_s)
+                if self._stopping:
+                    return
+                pending, self._pending = self._pending, []
+            for req, _ in pending:
+                req.arrival = self.engine.stats.steps
+                self.engine.submit(req)
+            if not self.engine.idle or self.engine._cancels:
+                self.engine.step()
+            self._publish()
+
+    def _publish(self) -> None:
+        done = []
+        for rid, st in self._streams.items():
+            out = st.req.output
+            safe = len(out) if st.req.done else max(0, len(out) - st.hold)
+            while st.emitted < safe:
+                st.q.put(("token", int(out[st.emitted])))
+                st.emitted += 1
+            if st.req.done:
+                st.q.put(("done", st.req.finish_reason or "length",
+                          [int(t) for t in out]))
+                done.append(rid)
+        for rid in done:
+            del self._streams[rid]
+
+
+def _make_handler(worker: EngineWorker):
+    class Handler(BaseHTTPRequestHandler):
+        # HTTP/1.0: one response per connection, no chunked framing
+        # needed for the SSE stream — the close delimits it.
+        protocol_version = "HTTP/1.0"
+
+        def log_message(self, *a):      # silence per-request stderr spam
+            pass
+
+        # ------------------------------------------------------ helpers ----
+        def _json(self, code: int, payload: dict) -> None:
+            body = json.dumps(payload).encode()
+            self.send_response(code)
+            self.send_header("Content-Type", "application/json")
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+
+        def _body(self) -> dict:
+            n = int(self.headers.get("Content-Length", 0))
+            return json.loads(self.rfile.read(n) or b"{}")
+
+        # ------------------------------------------------------- routes ----
+        def do_GET(self):
+            eng = worker.engine
+            if self.path == "/v1/health":
+                return self._json(200, {
+                    "ok": True, "steps": eng.stats.steps,
+                    "active": eng.sched.n_active,
+                    "waiting": len(eng.sched.waiting),
+                    "finished": len(eng.sched.finished)})
+            if self.path == "/v1/metrics":
+                payload = {"summary": eng.summary()}
+                if eng.tel.metrics is not None:
+                    payload["metrics"] = eng.tel.metrics.to_dict()
+                return self._json(200, payload)
+            self._json(404, {"error": f"no route {self.path}"})
+
+        def do_POST(self):
+            if self.path == "/v1/cancel":
+                body = self._body()
+                worker.cancel(int(body.get("rid", -1)))
+                return self._json(200, {"ok": True})
+            if self.path != "/v1/generate":
+                return self._json(404, {"error": f"no route {self.path}"})
+            try:
+                body = self._body()
+                prompt = body["prompt"]
+                if not prompt:
+                    raise ValueError("empty prompt")
+            except (ValueError, KeyError, json.JSONDecodeError) as e:
+                return self._json(400, {"error": str(e)})
+            st = worker.submit(prompt, body.get("max_tokens", 16),
+                               body.get("stop"))
+            if body.get("stream"):
+                return self._stream(st)
+            toks: List[int] = []
+            while True:
+                item = st.q.get()
+                if item[0] == "done":
+                    return self._json(200, {
+                        "rid": st.rid, "finish_reason": item[1],
+                        "output": item[2]})
+                toks.append(item[1])
+
+        def _stream(self, st: _Stream) -> None:
+            self.send_response(200)
+            self.send_header("Content-Type", "text/event-stream")
+            self.send_header("Cache-Control", "no-cache")
+            self.end_headers()
+            # rid first so the client can POST /v1/cancel mid-stream
+            self._event("start", {"rid": st.rid})
+            i = 0
+            while True:
+                item = st.q.get()
+                try:
+                    if item[0] == "done":
+                        self._event("done", {"rid": st.rid,
+                                             "finish_reason": item[1],
+                                             "output": item[2]})
+                        return
+                    self._event("token", {"token": item[1], "index": i})
+                    i += 1
+                except (BrokenPipeError, ConnectionResetError):
+                    worker.cancel(st.rid)   # client went away: free blocks
+                    return
+
+        def _event(self, event: str, payload: dict) -> None:
+            self.wfile.write(f"event: {event}\n"
+                             f"data: {json.dumps(payload)}\n\n".encode())
+            self.wfile.flush()
+
+    return Handler
+
+
+class Frontend:
+    """HTTP server + engine worker pair.  ``port=0`` binds ephemeral
+    (read the chosen one back from ``.port``) — used by the tests."""
+
+    def __init__(self, engine, host: str = "127.0.0.1", port: int = 8000):
+        self.worker = EngineWorker(engine)
+        self.httpd = ThreadingHTTPServer((host, port), _make_handler(self.worker))
+        self.host, self.port = self.httpd.server_address[:2]
+        self._serve_thread: Optional[threading.Thread] = None
+
+    def start(self) -> "Frontend":
+        self.worker.start()
+        self._serve_thread = threading.Thread(
+            target=self.httpd.serve_forever, daemon=True, name="http-serve")
+        self._serve_thread.start()
+        return self
+
+    def serve_forever(self) -> None:
+        """Blocking variant for the CLI (Ctrl-C to stop)."""
+        self.worker.start()
+        try:
+            self.httpd.serve_forever()
+        except KeyboardInterrupt:
+            pass
+        finally:
+            self.stop()
+
+    def stop(self) -> None:
+        self.httpd.shutdown()
+        self.httpd.server_close()
+        self.worker.stop()

@@ -1,11 +1,11 @@
 from .steps import (TrainStepConfig, lm_loss, make_chunked_prefill_step,
-                    make_paged_serve_step, make_prefill_step,
-                    make_serve_step, make_train_step, make_verify_step,
-                    cache_pspecs, scatter_prefill_to_paged)
-from .loop import LoopConfig, SimulatedFailure, TrainLoop
+                    make_paged_sample_step, make_paged_serve_step,
+                    make_prefill_step, make_serve_step, make_train_step,
+                    make_verify_step, cache_pspecs, scatter_prefill_to_paged)
+from .loop import LoopConfig, SimulatedFailure, TrainLoop, drive
 from .scheduler import (BlockAllocator, ContinuousScheduler, Request,
                         blocks_for)
 from .prefix_cache import PrefixCache, PrefixCacheStats
 from .spec import (accept_length, identity_draft, parse_draft_spec,
                    shallow_draft)
-from .engine import EngineStats, PagedMLAEngine
+from .engine import AsyncPagedMLAEngine, EngineStats, PagedMLAEngine

@@ -33,15 +33,34 @@ cache, block tables, eviction) to the jitted device steps:
     scheduler stays host-global and unsharded, and outputs are
     token-identical to single-host serving (tests/test_mesh_paged.py).
 
+Two engines share this machinery (and the scheduler, steps and stats):
+
+  * ``PagedMLAEngine`` — the synchronous reference tick: schedule ->
+    device step -> host sample, one barrier per tick.  Ground truth for
+    every parity gate.
+  * ``AsyncPagedMLAEngine`` — the double-buffered production tick: the
+    host runs tick N+1's scheduling (admission, block growth, CoW drain)
+    while the device still executes tick N, sampling is folded into the
+    compiled step (``make_paged_sample_step``) so only the (B,) accepted
+    tokens ever sync back, and token values are accounted one tick late —
+    token-identical to the synchronous engine (docs/architecture.md walks
+    the argument; tests/test_async_engine.py pins it).
+
+Both engines expose ``request_cancel`` (thread-safe, processed at tick
+start) and honor per-request ``stop`` sequences / ``max_new`` budgets via
+the scheduler — the frontend hooks (launch/server.py) need nothing else.
+
 Used by examples/serve_mla.py, benchmarks/bench_serving.py and
-``python -m repro.launch.serve --paged``.
+``python -m repro.launch.serve --paged`` (``--serve`` puts the HTTP/SSE
+frontend on top).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import threading
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -52,12 +71,18 @@ from ..core import cache as cachelib
 from ..core import mla as mlalib
 from ..core.schemes import PlatformPoint, auto_dispatch
 from ..models.common import ModelConfig
-from ..obs import OFF_TELEMETRY, Telemetry, as_logger
+from ..obs import OFF_TELEMETRY, Telemetry
+from ..obs.trace import PID_ENGINE
 from . import spec as speclib
 from .scheduler import ContinuousScheduler, Request, blocks_for
-from .steps import (make_chunked_prefill_step, make_paged_serve_step,
-                    make_prefill_step, make_verify_step,
-                    scatter_prefill_to_paged)
+from .steps import (make_chunked_prefill_step, make_paged_sample_step,
+                    make_paged_serve_step, make_prefill_step,
+                    make_verify_step, scatter_prefill_to_paged)
+
+# PID_ENGINE tid 0 carries the host-phase spans; the async engine's
+# device spans live on their own track so a device step spanning two host
+# ticks cannot break tid-0 span nesting (obs.trace.validate_trace).
+TID_DEVICE = 1
 
 
 @dataclasses.dataclass
@@ -218,7 +243,12 @@ class PagedMLAEngine:
             raise ValueError("prefill_chunk must be >= 1")
         self.temperature = float(temperature)
         self.top_k = int(top_k)
+        self._sample_seed = int(sample_seed)
         self._sample_key = jax.random.PRNGKey(sample_seed)
+        # cancellation flags from other threads (the HTTP frontend),
+        # drained at the start of every tick
+        self._cancel_lock = threading.Lock()
+        self._cancels: set = set()
         # max_blocks_per_req bounds the block-table WIDTH, i.e. the extent
         # every decode step scans per request — size it to the workload's
         # longest request, not the pool (nb = pool size would make each
@@ -555,6 +585,26 @@ class PagedMLAEngine:
     def submit(self, req: Request) -> None:
         self.sched.submit(req)
 
+    @property
+    def idle(self) -> bool:
+        """No queued, running or otherwise unaccounted work — the driver
+        loop (runtime.loop.drive) may stop ticking."""
+        return self.sched.all_done
+
+    def request_cancel(self, rid: int) -> None:
+        """Flag ``rid`` for cancellation.  Thread-safe: the frontend's
+        connection handlers call this from their own threads; the engine
+        drains the flags at the start of its next tick and releases the
+        request's slot and blocks (scheduler.cancel)."""
+        with self._cancel_lock:
+            self._cancels.add(rid)
+
+    def _process_cancels(self, step_i: int) -> None:
+        with self._cancel_lock:
+            rids, self._cancels = self._cancels, set()
+        for rid in sorted(rids):
+            self.sched.cancel(rid, step_i)
+
     def _sync_device(self) -> None:
         """Block until this tick's device work has retired.  jax dispatch
         is asynchronous: without this barrier the step wall clock stops
@@ -570,6 +620,7 @@ class PagedMLAEngine:
         decode step over all slots."""
         t0 = time.perf_counter()
         step_i = self.stats.steps
+        self._process_cancels(step_i)
         was_decoding = self.sched.n_active > 0
         tr = self.tel.tracer
         drift = self.tel.drift if (self.tel.drift is not None
@@ -782,32 +833,12 @@ class PagedMLAEngine:
 
     def run(self, requests: List[Request], *, max_steps: int = 100_000,
             log_every: int = 0, log=print) -> Dict[str, float]:
-        """Drive a request stream to completion.  ``req.arrival`` is the
-        step index at which a request joins the waiting queue (Poisson
-        arrivals in the example driver).  ``log`` may be a bare callable
-        (legacy ``log=print`` API) or an ``obs.StructLogger`` — either
-        way the step lines go through one structured path; a telemetry
-        logger, if configured, wins."""
-        slog = self.tel.logger if self.tel.logger is not None \
-            else as_logger(log, "engine")
-        todo = sorted(requests, key=lambda r: r.arrival)
-        i = 0
-        while not (i >= len(todo) and self.sched.all_done):
-            while i < len(todo) and todo[i].arrival <= self.stats.steps:
-                self.submit(todo[i])
-                i += 1
-            self.step()
-            if log_every and self.stats.steps % log_every == 0:
-                u = self.sched.utilization()
-                slog.info("step", step=self.stats.steps,
-                          active=self.sched.n_active,
-                          waiting=len(self.sched.waiting),
-                          done=len(self.sched.finished),
-                          util=u["valid_frac"], pool=u["pool_frac"],
-                          scheme=self._last_scheme)
-            if self.stats.steps >= max_steps:
-                raise RuntimeError(f"did not drain in {max_steps} steps")
-        return self.summary()
+        """Drive a request stream to completion — delegates to
+        :func:`runtime.loop.drive` (shared with the async engine and the
+        HTTP frontend's worker)."""
+        from .loop import drive
+        return drive(self, requests, max_steps=max_steps,
+                     log_every=log_every, log=log)
 
     def summary(self) -> Dict[str, float]:
         """Engine stats + prefix-cache stats + allocator totals."""
@@ -820,3 +851,280 @@ class PagedMLAEngine:
         out["cache_dtype"] = self.cache_dtype
         out["cache_token_bytes"] = float(self.cache_token_bytes)
         return out
+
+
+# --------------------------------------------------------- async engine ----
+
+
+@dataclasses.dataclass
+class _Inflight:
+    """One dispatched-but-unaccounted fused decode step."""
+    tokens: object                       # (B,) int32 device array (future)
+    entries: List[Tuple[int, Request]]   # (dispatch slot, request)
+    deferred: List[Tuple[int, Request]]  # slot released, token value pending
+    t_disp_tr: float                     # tracer ``now()`` clock at dispatch
+    t_disp_perf: float                   # perf_counter at dispatch (drift)
+    scheme: str
+    point: Tuple[int, int]               # (batch, cache_len) dispatch point
+    fetched: Optional[np.ndarray] = None  # host copy, once someone needed it
+
+
+class AsyncPagedMLAEngine(PagedMLAEngine):
+    """Double-buffered async engine: host work for tick N+1 overlaps the
+    device's execution of tick N.
+
+    Per tick (plain decode; ``spec_k > 0`` rounds drain the pipeline and
+    run the synchronous :meth:`PagedMLAEngine._spec_round` — accept /
+    rewind is value-dependent host work):
+
+      1. *schedule* — while the device still runs the step dispatched
+         last tick: requests whose in-flight token is structurally their
+         last (``len(tokens) + 1 >= max_new``) release their slot and
+         blocks immediately (the token VALUE arrives in step 3); block
+         growth, preemption, CoW drain and admission run as usual.  CoW /
+         prefill device ops enqueue AFTER the in-flight step in stream
+         order, so the device-side op sequence is exactly the synchronous
+         engine's.
+      2. *prefill* — admitted prompts chunk-prefill (this syncs on the
+         finishing rows' logits, serializing the tick — admission ticks
+         pay the pipeline bubble, steady-state decode ticks don't).
+      3. *host_sample* — fetch the in-flight (B,) token array (the only
+         device->host transfer; blocks for however much device time the
+         host did NOT overlap), emit the retrospective ``device_step``
+         span on the device-stream track, and account token values:
+         append, stop-sequence checks, deferred finishes, ``pending``.
+      4. *dispatch* — launch the fused decode+sample step
+         (``make_paged_sample_step``) for the current actives and advance
+         ``lengths`` structurally; the host returns without waiting.
+
+    Token identity with the synchronous engine (greedy and seeded) holds
+    because sampling keys fold (rid, absolute position) — invariant under
+    batch composition and admission timing — and each logits row depends
+    only on its own request's tokens/cache.  The one-tick-late accounting
+    only shifts WHEN slots free up, never what any request's next token
+    is.  Preempted victims with an unaccounted in-flight token fold it
+    into their replayed prompt first (:meth:`_fixup_preempted` — the rare
+    forced sync), so replay matches the synchronous fold exactly.
+    """
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self._sample_steps: Dict[str, object] = {}
+        self._inflight: Optional[_Inflight] = None
+
+    @property
+    def idle(self) -> bool:
+        return self.sched.all_done and self._inflight is None
+
+    def _sample_step(self, scheme: str):
+        if scheme not in self._sample_steps:
+            self._sample_steps[scheme] = make_paged_sample_step(
+                self.cfg, self.mesh, compute_dtype=self.compute_dtype,
+                impl=self.impl, scheme=scheme, policy=self.shard_policy,
+                cache_dtype=self.cache_dtype,
+                temperature=self.temperature, top_k=self.top_k,
+                sample_seed=self._sample_seed)
+        return self._sample_steps[scheme]
+
+    # ------------------------------------------------------------- tick ----
+
+    def step(self) -> None:
+        if self.spec_k:
+            # drain, then run the synchronous spec tick: double-buffering
+            # applies to plain decode; spec rounds are host-interactive.
+            self._drain_inflight()
+            return super().step()
+        t0 = time.perf_counter()
+        step_i = self.stats.steps
+        self._process_cancels(step_i)
+        was_decoding = self.sched.n_active > 0 or self._inflight is not None
+        tr = self.tel.tracer
+
+        with tr.span("step"):
+            with tr.span("schedule"):
+                self._release_structural_finishes()
+                preempted = self.sched.ensure_step_capacity()
+                self.stats.preemptions += len(preempted)
+                if preempted:
+                    self._fixup_preempted(preempted, step_i)
+                for src, dst in self.sched.drain_cow():
+                    self.pool = self._copy_block(
+                        self.pool, jnp.asarray(src, jnp.int32),
+                        jnp.asarray(dst, jnp.int32))
+                    if self.draft_pool is not None:
+                        self.draft_pool = self._copy_block(
+                            self.draft_pool, jnp.asarray(src, jnp.int32),
+                            jnp.asarray(dst, jnp.int32))
+                admitted = self.sched.try_admit(step_i)
+            for _, req in admitted:
+                self.stats.admissions += 1
+                self.stats.prompt_tokens += req.plen
+                if was_decoding:
+                    self.stats.mid_gen_admissions += 1
+            if admitted:
+                with tr.span("prefill"):
+                    if self.prefill_mode == "chunked":
+                        self._run_chunked_prefill(admitted, step_i)
+                    else:
+                        self._run_per_request_prefill(admitted, step_i)
+
+            self._account(step_i)
+
+            active = self.sched.active_slots
+            if active:
+                self._dispatch(active)
+
+            u = self.sched.utilization()
+            self.stats.util_valid_sum += u["valid_frac"]
+            self.stats.util_pool_sum += u["pool_frac"]
+            self.stats.util_samples += 1
+        self.stats.steps += 1
+        dt = time.perf_counter() - t0
+        self.stats.wall += dt
+        if self.tel.metrics is not None:
+            m = self.tel.metrics
+            m.histogram("step_ms").record(dt * 1e3)
+            m.histogram("pool_occupancy").record(u["pool_frac"])
+            m.histogram("pool_allocated_bytes").record(
+                u["allocated_blocks"] * self.block_size
+                * self.cache_token_bytes)
+
+    # --------------------------------------------------- pipeline stages ---
+
+    def _release_structural_finishes(self) -> None:
+        """Free the slots of in-flight requests whose pending token is
+        structurally their last (budget-predicted — stop hits cannot be
+        predicted and are discovered at account time, one tick later).
+        Their blocks become admissible NOW, overlapping the device."""
+        inf = self._inflight
+        if inf is None:
+            return
+        keep = []
+        for slot, req in inf.entries:
+            if req.slot == slot and not req.finish_reason \
+                    and len(req.tokens) + 1 >= req.max_new:
+                self.sched._release_slot(slot)
+                inf.deferred.append((slot, req))
+            else:
+                keep.append((slot, req))
+        inf.entries = keep
+
+    def _fixup_preempted(self, preempted: List[Request],
+                         step_i: int) -> None:
+        """Recompute-preemption under an unaccounted in-flight token: the
+        scheduler already folded ``tokens`` into the victim's prompt; the
+        in-flight token must join that fold for the replay to match the
+        synchronous engine.  This is the one place the async engine is
+        forced to sync early (preemptions are the overloaded-pool path)."""
+        inf = self._inflight
+        if inf is None:
+            return
+        victims = {id(r) for r in preempted}
+        keep, fix = [], []
+        for slot, req in inf.entries:
+            (fix if id(req) in victims else keep).append((slot, req))
+        inf.entries = keep
+        if not fix:
+            return
+        if inf.fetched is None:
+            inf.fetched = np.asarray(inf.tokens)
+        for slot, req in fix:
+            tok = int(inf.fetched[slot])
+            req.prompt = np.concatenate(
+                [req.prompt, np.asarray([tok], np.int32)])
+            req.max_new -= 1
+            self.stats.decode_tokens += 1
+            # the folded token may complete a stop sequence — the sync
+            # engine would have finished the request instead of
+            # preempting it; finish it here (it is back on the waiting
+            # queue) so it never replays past its stop.
+            if self.sched._check_stop(req):
+                self.sched.waiting.remove(req)
+                req.finished_step = step_i
+                req.finish_t = time.perf_counter()
+                self.sched.finished.append(req)
+
+    def _account(self, step_i: int) -> None:
+        """Fetch and account the in-flight step's token values (the only
+        device->host sync of a steady-state tick)."""
+        inf = self._inflight
+        if inf is None:
+            return
+        self._inflight = None
+        tr = self.tel.tracer
+        drift = self.tel.drift if (self.tel.drift is not None
+                                   and self.tel.drift.active) else None
+        with tr.span("host_sample"):
+            already = inf.fetched is not None
+            toks = inf.fetched if already else np.asarray(inf.tokens)
+            if tr.enabled:
+                tr.set_thread_name(PID_ENGINE, TID_DEVICE, "device stream")
+                tr.complete(
+                    "device_step", PID_ENGINE, TID_DEVICE,
+                    inf.t_disp_tr, tr.now(),
+                    args={"scheme": inf.scheme,
+                          "batch": len(inf.entries) + len(inf.deferred)})
+            if drift and not already:
+                # dispatch->ready wall: equals device time when the device
+                # is the bottleneck, an upper bound otherwise
+                b, cl = inf.point
+                drift.record_decode(inf.scheme, b, cl,
+                                    time.perf_counter() - inf.t_disp_perf)
+            for slot, req in inf.entries:
+                if req.finish_reason == "cancelled" or req.slot != slot:
+                    continue
+                tok = int(toks[slot])
+                req.tokens.append(tok)
+                self.stats.decode_tokens += 1
+                self.sched._check_stop(req)
+                if req.done:
+                    self.sched._finish(slot, step_i)
+                else:
+                    self.pending[slot] = tok
+            for slot, req in inf.deferred:
+                if req.finish_reason == "cancelled":
+                    continue
+                tok = int(toks[slot])
+                req.tokens.append(tok)
+                self.stats.decode_tokens += 1
+                self.sched._check_stop(req)
+                if not req.finish_reason:
+                    req.finish_reason = "length"
+                req.finished_step = step_i
+                req.finish_t = time.perf_counter()
+                self.sched.finished.append(req)
+
+    def _dispatch(self, active: List[int]) -> None:
+        """Launch the fused decode+sample step for the current actives and
+        return WITHOUT waiting; ``lengths`` advance structurally (the
+        step writes each fed token's latent at position lengths[s])."""
+        scheme = self._pick_scheme()
+        self.stats.schemes_used[scheme] = \
+            self.stats.schemes_used.get(scheme, 0) + 1
+        step_fn = self._sample_step(scheme)
+        B = self.sched.max_batch
+        rids = np.zeros((B,), np.uint32)
+        poss = np.zeros((B,), np.uint32)
+        entries = []
+        for s in active:
+            req = self.sched.slots[s]
+            rids[s] = req.rid
+            poss[s] = req.plen + len(req.tokens)
+            entries.append((s, req))
+        tr = self.tel.tracer
+        t_tr, t_perf = tr.now(), time.perf_counter()
+        tokens, self.pool = step_fn(
+            self.params, jnp.asarray(self.pending), self.pool,
+            jnp.asarray(self.sched.block_table),
+            jnp.asarray(self.sched.lengths),
+            jnp.asarray(rids), jnp.asarray(poss))
+        self._inflight = _Inflight(
+            tokens=tokens, entries=entries, deferred=[], t_disp_tr=t_tr,
+            t_disp_perf=t_perf, scheme=scheme, point=self._last_point)
+        for s in active:
+            self.sched.lengths[s] += 1
+
+    def _drain_inflight(self) -> None:
+        """Account any in-flight step immediately (spec ticks and external
+        sync points need the pipeline empty)."""
+        self._account(self.stats.steps)

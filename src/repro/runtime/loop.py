@@ -1,6 +1,15 @@
-"""Fault-tolerant training loop.
+"""Driver loops: the serving request driver (``drive``) shared by both
+paged engines, and the fault-tolerant training loop (``TrainLoop``).
 
-Production behaviors implemented (and unit-tested on CPU):
+Serving: ``drive(engine, requests)`` feeds a pre-built arrival-stamped
+request list into the engine tick by tick and steps until ``engine.idle``
+— for the synchronous engine that is scheduler-drained; the async engine
+also keeps ticking until its in-flight device step is accounted, so the
+pipeline drains through the same loop with no special-casing.  Live
+traffic (the HTTP frontend) uses launch/server.py's worker instead,
+which calls ``engine.submit`` / ``engine.step`` directly.
+
+Training-loop production behaviors (unit-tested on CPU):
   * auto-resume     — on construction, restores the latest complete
     checkpoint (params + optimizer + data-iterator state) and continues;
     a run killed at any point replays to an IDENTICAL final state
@@ -33,6 +42,39 @@ from ..obs import as_logger
 
 class SimulatedFailure(RuntimeError):
     pass
+
+
+def drive(engine, requests, *, max_steps: int = 100_000,
+          log_every: int = 0, log=print) -> Dict[str, float]:
+    """Drive a request stream to completion on either paged engine.
+
+    ``req.arrival`` is the step index at which a request joins the
+    waiting queue (Poisson arrivals in the example driver).  The loop
+    runs until every request is submitted and ``engine.idle`` — the
+    async engine stays non-idle while a dispatched step is unaccounted,
+    so its pipeline drains here without a separate flush call.  ``log``
+    may be a bare callable (legacy ``log=print`` API) or an
+    ``obs.StructLogger``; a telemetry logger, if configured, wins."""
+    slog = engine.tel.logger if engine.tel.logger is not None \
+        else as_logger(log, "engine")
+    todo = sorted(requests, key=lambda r: r.arrival)
+    i = 0
+    while not (i >= len(todo) and engine.idle):
+        while i < len(todo) and todo[i].arrival <= engine.stats.steps:
+            engine.submit(todo[i])
+            i += 1
+        engine.step()
+        if log_every and engine.stats.steps % log_every == 0:
+            u = engine.sched.utilization()
+            slog.info("step", step=engine.stats.steps,
+                      active=engine.sched.n_active,
+                      waiting=len(engine.sched.waiting),
+                      done=len(engine.sched.finished),
+                      util=u["valid_frac"], pool=u["pool_frac"],
+                      scheme=engine._last_scheme)
+        if engine.stats.steps >= max_steps:
+            raise RuntimeError(f"did not drain in {max_steps} steps")
+    return engine.summary()
 
 
 @dataclasses.dataclass

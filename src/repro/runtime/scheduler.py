@@ -59,6 +59,14 @@ class Request:
     max_new: int                  # generation budget
     arrival: int = 0              # driver step at which it becomes visible
     tokens: List[int] = dataclasses.field(default_factory=list)
+    # per-request termination (PR 9): generation also stops when the
+    # output's suffix matches any of these token-id sequences ("stop"),
+    # or when the frontend cancels the request mid-flight ("cancelled").
+    # The matched stop tokens are excluded from ``output`` (n_trunc hides
+    # them — they may span a preemption fold, so the prompt isn't edited).
+    stop: List[List[int]] = dataclasses.field(default_factory=list)
+    finish_reason: str = ""       # "" while running; length|stop|cancelled
+    n_trunc: int = 0              # trailing output tokens hidden by a stop
     slot: int = -1
     admitted_step: int = -1
     finished_step: int = -1
@@ -89,12 +97,13 @@ class Request:
     @property
     def output(self) -> List[int]:
         """All generated tokens, including any folded into the prompt by a
-        preemption."""
-        return list(self.prompt[self.orig_plen:]) + list(self.tokens)
+        preemption, minus any trailing matched stop sequence."""
+        out = list(self.prompt[self.orig_plen:]) + list(self.tokens)
+        return out[:len(out) - self.n_trunc] if self.n_trunc else out
 
     @property
     def done(self) -> bool:
-        return len(self.tokens) >= self.max_new
+        return bool(self.finish_reason) or len(self.tokens) >= self.max_new
 
 
 class BlockAllocator:
@@ -411,17 +420,15 @@ class ContinuousScheduler:
                               step: int = 0) -> Optional[Request]:
         """Account the token sampled from the PREFILL logits (generated
         token #1 — sampled but not yet written to the cache).  Returns the
-        request if that already exhausts its budget (max_new == 1)."""
+        request if that already finishes it (max_new == 1, or a
+        single-token stop sequence)."""
         req = self.slots[slot]
         req.tokens.append(int(tok))
         if req.first_tok_t < 0:
             req.first_tok_t = perf_counter()
+        self._check_stop(req)
         if req.done:
-            req.finished_step = step
-            req.finish_t = perf_counter()
-            self._release_slot(slot)
-            self.finished.append(req)
-            return req
+            return self._finish(slot, step)
         return None
 
     def advance(self, sampled: Dict[int, int], step: int = 0) -> List[Request]:
@@ -452,15 +459,66 @@ class ContinuousScheduler:
                 raise ValueError(
                     f"slot {slot}: {len(toks)} emitted tokens exceed the "
                     f"write window {self._window(req)}")
-            self.lengths[slot] += len(toks)
-            req.tokens.extend(int(t) for t in toks)
+            # token-at-a-time so a stop hit is token-exact: tokens after
+            # the match (later accepted drafts in a spec round) are
+            # discarded, never accounted.
+            for t in toks:
+                self.lengths[slot] += 1
+                req.tokens.append(int(t))
+                if self._check_stop(req) or req.done:
+                    break
             if req.done:
+                done.append(self._finish(slot, step))
+        return done
+
+    def _check_stop(self, req: Request) -> bool:
+        """True if the output's suffix now matches one of the request's
+        stop sequences; marks it finished ("stop") and hides the matched
+        tokens from ``output``.  Matched against ``output`` (not just
+        ``tokens``) so a sequence spanning a preemption fold still hits."""
+        if not req.stop or req.finish_reason:
+            return bool(req.finish_reason)
+        out = list(req.prompt[req.orig_plen:]) + list(req.tokens)
+        for seq in req.stop:
+            n = len(seq)
+            if n and n <= len(out) and out[-n:] == [int(t) for t in seq]:
+                req.finish_reason = "stop"
+                req.n_trunc = n
+                return True
+        return False
+
+    def _finish(self, slot: int, step: int) -> Request:
+        """Evict a finished request from its slot and account it."""
+        req = self.slots[slot]
+        if not req.finish_reason:
+            req.finish_reason = "length"
+        req.finished_step = step
+        req.finish_t = perf_counter()
+        self._release_slot(slot)
+        self.finished.append(req)
+        return req
+
+    def cancel(self, rid: int, step: int = 0) -> Optional[Request]:
+        """Abort a request wherever it is.  Waiting requests leave the
+        queue; running requests release their slot and blocks (trie-
+        registered prefix blocks stay cached and unpoisoned — the pool
+        contents they index are still valid prompt latents).  Unknown or
+        already-finished rids are a no-op.  Returns the cancelled request
+        (``finish_reason == "cancelled"``) or None."""
+        for req in self.waiting:
+            if req.rid == rid:
+                self.waiting.remove(req)
+                req.finish_reason = "cancelled"
                 req.finished_step = step
                 req.finish_t = perf_counter()
-                self._release_slot(slot)
                 self.finished.append(req)
-                done.append(req)
-        return done
+                return req
+        for slot in self.active_slots:
+            req = self.slots[slot]
+            if req.rid == rid:
+                req.finish_reason = "cancelled"
+                return self._finish(slot, step)
+        return None
 
     def _release_slot(self, slot: int) -> None:
         self.prefix.release(self.blocks_of.pop(slot))

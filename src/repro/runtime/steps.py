@@ -490,6 +490,83 @@ def make_paged_serve_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
     ), kind="decode", scheme=scheme, impl=impl)
 
 
+def make_paged_sample_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
+                           *, compute_dtype=jnp.bfloat16, impl: str = "ref",
+                           scheme: str = "seq", policy: str = "serve",
+                           cache_dtype: Optional[str] = None,
+                           temperature: float = 0.0, top_k: int = 0,
+                           sample_seed: int = 0):
+    """Decode step with sampling FOLDED INTO the compiled program:
+
+        fn(params, token (B,), pool_tree, block_tables (B, nb),
+           lengths (B,), rids (B,) u32, poss (B,) u32)
+          -> (next_token (B,) int32, pool_tree)
+
+    The double-buffered engine's step: only the (B,) sampled tokens ever
+    sync back to the host — the (B, V) logits stay on device — so the
+    host can prepare tick N+1 while the device still runs tick N and the
+    eventual host read is one small transfer, not a vocab-wide one.
+
+    Sampling matches the host path (``PagedMLAEngine._sample_fn``)
+    bit-for-bit: greedy argmax at ``temperature <= 0``, else temperature /
+    top-k categorical under fold(fold(seed, rid), position) keys — rows
+    are independent, so sampling every slot (inactive rows draw garbage
+    the scheduler discards) emits the same token per live row as the host
+    path's gathered subset.  Under a mesh the logits (and the rid /
+    position rows) are constrained to full replication before any random
+    op: under the pre-0.5 jax default (threefry_partitionable=False) a
+    random op lowered over a sharded operand draws different bits than
+    unsharded, and replication keeps the stream topology-invariant —
+    the same reason the host path gathers rows before sampling.
+    """
+    if cfg.attn_kind != "mla":
+        raise NotImplementedError("paged serving requires attn_kind='mla'")
+    base = jax.random.PRNGKey(sample_seed)
+
+    def sample(logits, rids, poss):
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if mesh is not None:
+            repl = lambda x: jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, PS()))
+            logits, rids, poss = repl(logits), repl(rids), repl(poss)
+        keys = jax.vmap(lambda r, p: jax.random.fold_in(
+            jax.random.fold_in(base, r), p))(rids, poss)
+        rows = logits.astype(jnp.float32) / temperature
+        if top_k > 0:
+            kth = jnp.sort(rows, axis=-1)[:, -top_k]
+            rows = jnp.where(rows >= kth[:, None], rows, -jnp.inf)
+        return jax.vmap(jax.random.categorical)(keys, rows).astype(jnp.int32)
+
+    def run(params, token, pool, block_tables, lengths, rids, poss):
+        logits, pool = models.decode_step(params, cfg, token, pool, None,
+                                          compute_dtype=compute_dtype,
+                                          impl=impl, mesh=mesh, scheme=scheme,
+                                          shard_mode=policy,
+                                          block_tables=block_tables,
+                                          lengths=lengths)
+        return sample(logits, rids, poss), pool
+
+    if mesh is None:
+        return _tag_obs(jax.jit(run, donate_argnums=(2,)),
+                        kind="decode", scheme=scheme, impl=impl)
+    rules = shd.make_rules(mesh, mode=policy, cfg=cfg)
+    dp = rules["batch"]
+    pool_shard = _paged_pool_shardings(cfg, mesh, rules, compute_dtype,
+                                       cache_dtype)
+    return _tag_obs(jax.jit(
+        run,
+        in_shardings=(None, NamedSharding(mesh, PS(dp)), pool_shard,
+                      NamedSharding(mesh, PS(dp, None)),
+                      NamedSharding(mesh, PS(dp)),
+                      NamedSharding(mesh, PS(dp)),
+                      NamedSharding(mesh, PS(dp))),
+        # tokens replicate (the host reads all B of them); pool stays put
+        out_shardings=(NamedSharding(mesh, PS()), pool_shard),
+        donate_argnums=(2,),
+    ), kind="decode", scheme=scheme, impl=impl)
+
+
 def make_chunked_prefill_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
                               *, compute_dtype=jnp.bfloat16,
                               impl: str = "ref", scheme: str = "seq",
