@@ -95,6 +95,7 @@ from repro.envflags import force_host_device_count
 force_host_device_count(8)
 
 import argparse
+import dataclasses
 import json
 import time
 
@@ -113,6 +114,7 @@ from repro.nn import module as nnm
 from repro.runtime import (
     PagedMLAEngine,
     Request,
+    SamplingParams,
     blocks_for,
     make_prefill_step,
     make_serve_step,
@@ -1357,6 +1359,254 @@ def main():
         "cache_read_per_token_at_measured_E": rd_per_tok,
         "cache_read_per_token_plain": dc.breakdown["B:cache_read"],
     }
+    # ---- PR 10: multi-turn conversation tree + n-way parallel sampling --
+    print("== multi-turn conversation tree: decode-block reuse (PR 10) ==")
+
+    # Both PR-10 sections compare runs whose PREFILL batches differ by
+    # construction (one forked prefill vs four independent ones; warm
+    # cache-hit suffixes vs cold full prompts).  MoE capacity overflow is
+    # the one op in the stack whose per-token result depends on the REST
+    # of the batch (which tokens drop is a function of every co-batched
+    # token's routing), so token-identity gates across batch shapes need
+    # drop-free capacity: C >= T at capacity_factor = E / top_k.  Every
+    # other op — attention, dense FFN, the expert einsums themselves, the
+    # expert-major combine — is bitwise row-independent.
+    cfg_nodrop = dataclasses.replace(
+        cfg, capacity_factor=float(cfg.n_experts) / cfg.top_k)
+
+    def run_conversations(warm: bool):
+        """Serve the same 3-turn x 4-conversation tree on one engine.
+        ``warm=False`` pins the PR-9 serving behaviour — block-granular
+        PROMPT matching only (no decode-block registration, no partial
+        tails, FCFS admission) — so the lift is attributable to PR 10."""
+        kw = {} if warm else dict(
+            decode_block_reuse=False, partial_match=False, admission="fcfs"
+        )
+        eng = PagedMLAEngine(
+            cfg_nodrop,
+            params,
+            num_blocks=96,
+            block_size=args.block_size,
+            max_batch=args.max_batch,
+            max_blocks_per_req=16,
+            compute_dtype=jnp.float32,
+            scheme="seq",
+            enable_prefix_cache=True,
+            prefill_mode="chunked",
+            prefill_chunk=args.prefill_chunk,
+            **kw,
+        )
+        rng_mt = np.random.default_rng(args.seed + 31)
+        # gen spans whole blocks (20 tokens, bs=8 -> 2 boundary crossings
+        # per turn) and the user suffix is short (4 tokens), so warm
+        # follow-up turns re-hit most of their own generation
+        n_convs, n_turns, gen = 4, 3, 20
+        hist = [
+            rng_mt.integers(0, cfg.vocab, (16,)).astype(np.int32)
+            for _ in range(n_convs)
+        ]
+        transcripts, per_turn, rid = [], [], 0
+        for _t in range(n_turns):
+            reqs_t = [
+                Request(
+                    rid=rid + c,
+                    prompt=hist[c].copy(),
+                    sampling=SamplingParams(max_tokens=gen),
+                )
+                for c in range(n_convs)
+            ]
+            rid += n_convs
+            pf0 = eng.stats.prefill_tokens
+            eng.run(reqs_t, max_steps=args.steps)
+            by = {r.rid: r for r in eng.sched.finished}
+            ttfts = []
+            for c in range(n_convs):
+                fr = by[reqs_t[c].rid]
+                out = [int(x) for x in fr.output]
+                transcripts.append(out)
+                ttfts.append((fr.first_tok_t - fr.submit_t) * 1e3)
+                # next turn: full history + the assistant reply + 4 fresh
+                # "user" tokens (the conversation-tree generator)
+                hist[c] = np.concatenate(
+                    [
+                        hist[c],
+                        np.asarray(out, np.int32),
+                        rng_mt.integers(0, cfg.vocab, (4,)).astype(np.int32),
+                    ]
+                )
+            per_turn.append(
+                {
+                    "prefill_tokens": int(eng.stats.prefill_tokens - pf0),
+                    "ttft_ms_p50": float(np.median(ttfts)),
+                }
+            )
+        summ = eng.summary()
+        row = {
+            k: summ[k]
+            for k in (
+                "prefix_hit_rate",
+                "prefix_hit_tokens",
+                "prefix_partial_hits",
+                "prefix_decode_inserted_blocks",
+                "prefill_tokens",
+                "decode_tokens",
+                "total_blocks_allocated",
+                "tokens_per_s",
+            )
+        }
+        row["per_turn"] = per_turn
+        return row, transcripts
+
+    mt_warm, tx_warm = run_conversations(warm=True)
+    mt_cold, tx_cold = run_conversations(warm=False)
+    mt = {
+        "warm": mt_warm,
+        "cold": mt_cold,
+        "parity": tx_warm == tx_cold,
+        "hit_rate_lift": mt_warm["prefix_hit_rate"] - mt_cold["prefix_hit_rate"],
+        "warm_turn_prefill_tokens": sum(
+            r["prefill_tokens"] for r in mt_warm["per_turn"][1:]
+        ),
+        "cold_turn_prefill_tokens": sum(
+            r["prefill_tokens"] for r in mt_cold["per_turn"][1:]
+        ),
+        "warm_over_cold_ttft": float(
+            np.mean([r["ttft_ms_p50"] for r in mt_warm["per_turn"][1:]])
+            / np.mean([r["ttft_ms_p50"] for r in mt_cold["per_turn"][1:]])
+        ),
+    }
+    print(
+        f"  warm: hit rate {mt_warm['prefix_hit_rate']:.2f} "
+        f"({mt_warm['prefix_decode_inserted_blocks']:.0f} decode blocks "
+        f"registered), cold (PR-9): {mt_cold['prefix_hit_rate']:.2f}"
+    )
+    print(
+        f"  follow-up turns prefill {mt['warm_turn_prefill_tokens']} vs "
+        f"{mt['cold_turn_prefill_tokens']} tokens; TTFT ratio "
+        f"{mt['warm_over_cold_ttft']:.2f}"
+    )
+
+    print("== n=4 parallel sampling: one prefill + CoW fork (PR 10) ==")
+
+    def run_fork(engine_cls):
+        """One n=4 fork group per prompt vs 4 independent seeded requests
+        on the same rids: tokens must be identical, blocks strictly
+        fewer."""
+        kwf = dict(
+            num_blocks=64,
+            block_size=args.block_size,
+            max_batch=4,
+            max_blocks_per_req=8,
+            compute_dtype=jnp.float32,
+            scheme="seq",
+            prefill_mode="chunked",
+            prefill_chunk=args.prefill_chunk,
+            temperature=0.9,
+            top_k=8,
+            sample_seed=args.seed,
+        )
+        rng_f = np.random.default_rng(args.seed + 61)
+        prompts = [
+            rng_f.integers(0, cfg.vocab, (16,)).astype(np.int32)
+            for _ in range(3)
+        ]
+        ge = engine_cls(cfg_nodrop, params, **kwf)
+        ge.run(
+            [
+                Request(
+                    rid=4 * i,
+                    prompt=p.copy(),
+                    arrival=2 * i,
+                    sampling=SamplingParams(max_tokens=10, n=4),
+                )
+                for i, p in enumerate(prompts)
+            ],
+            max_steps=args.steps,
+        )
+        ie = engine_cls(cfg_nodrop, params, **kwf)
+        ie.run(
+            [
+                Request(
+                    rid=4 * i + j,
+                    prompt=p.copy(),
+                    arrival=2 * i,
+                    sampling=SamplingParams(max_tokens=10),
+                )
+                for i, p in enumerate(prompts)
+                for j in range(4)
+            ],
+            max_steps=args.steps,
+        )
+        gout = {r.rid: [int(t) for t in r.output] for r in ge.sched.finished}
+        iout = {r.rid: [int(t) for t in r.output] for r in ie.sched.finished}
+        gs, ins = ge.summary(), ie.summary()
+        return {
+            "parity": gout == iout,
+            "group_blocks": gs["total_blocks_allocated"],
+            "independent_blocks": ins["total_blocks_allocated"],
+            "block_savings": 1.0
+            - gs["total_blocks_allocated"] / ins["total_blocks_allocated"],
+            "fork_groups": gs["fork_groups"],
+            "fork_children": gs["fork_children"],
+            "decode_tokens": gs["decode_tokens"],
+            "prefill_tokens": gs["prefill_tokens"],
+            "tokens_per_s": gs["tokens_per_s"],
+        }
+
+    fk_sync = run_fork(PagedMLAEngine)
+    fk_async = run_fork(AsyncPagedMLAEngine)
+    for name, row in (("sync", fk_sync), ("async", fk_async)):
+        print(
+            f"  {name}: {row['fork_groups']:.0f} groups x4, "
+            f"{row['group_blocks']:.0f} vs {row['independent_blocks']:.0f} "
+            f"blocks ({row['block_savings']:.0%} saved), parity="
+            f"{row['parity']}, {row['tokens_per_s']:.1f} tok/s"
+        )
+
+    ok &= common.check(
+        "multi-turn transcripts identical, warm vs PR-9 cold", mt["parity"]
+    )
+    ok &= common.check(
+        "multi-turn hit-rate lift from decode-block reuse",
+        mt["hit_rate_lift"] > 0.1,
+        f"{mt_warm['prefix_hit_rate']:.2f} vs {mt_cold['prefix_hit_rate']:.2f}",
+    )
+    ok &= common.check(
+        "decode blocks actually registered in the trie",
+        mt_warm["prefix_decode_inserted_blocks"] > 0
+        and mt_cold["prefix_decode_inserted_blocks"] == 0,
+        f"{mt_warm['prefix_decode_inserted_blocks']:.0f}",
+    )
+    ok &= common.check(
+        "warm follow-up turns prefill under half the cold tokens",
+        mt["warm_turn_prefill_tokens"] * 2 < mt["cold_turn_prefill_tokens"],
+        f"{mt['warm_turn_prefill_tokens']} vs "
+        f"{mt['cold_turn_prefill_tokens']}",
+    )
+    ok &= common.check(
+        "warm-turn TTFT cut vs cold cache",
+        mt["warm_over_cold_ttft"] < 0.9,
+        f"ratio {mt['warm_over_cold_ttft']:.2f}",
+    )
+    for name, row in (("sync", fk_sync), ("async", fk_async)):
+        ok &= common.check(
+            f"fork n=4 token-identical to 4 independent requests ({name})",
+            row["parity"],
+        )
+        ok &= common.check(
+            f"fork group allocates strictly fewer blocks ({name})",
+            row["group_blocks"] < row["independent_blocks"],
+            f"{row['group_blocks']:.0f} vs {row['independent_blocks']:.0f}",
+        )
+
+    common.save(
+        "bench_multiturn.json",
+        {
+            "multiturn": mt,
+            "fork": {"sync": fk_sync, "async": fk_async},
+        },
+    )
+
     common.save(
         "bench_serving.json",
         {

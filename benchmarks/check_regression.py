@@ -118,6 +118,36 @@ RULES = [
     # moves in the bad direction fail
     ("bench_load.json", "knee.tokens_per_s", "min_ratio", 0.25),
     ("bench_load.json", "trace_driven.async.ttft_ms.p99", "max_ratio", 8.0),
+    # multi-turn conversation tree + n-way parallel sampling (PR 10):
+    # transcripts, hit rates, prefill-token counts and block totals are
+    # seeded/deterministic so CI holds them exactly; the warm/cold TTFT
+    # ratio is wall-clock but SAME-RUN same-machine, so its band is
+    # tighter than the cross-machine ones; group throughput gets the
+    # usual wide cross-machine band
+    ("bench_multiturn.json", "multiturn.parity", "eq", None),
+    ("bench_multiturn.json", "multiturn.hit_rate_lift", "approx", 1e-9),
+    ("bench_multiturn.json", "multiturn.warm.prefix_hit_rate", "approx", 1e-9),
+    ("bench_multiturn.json", "multiturn.warm.prefill_tokens", "eq", None),
+    ("bench_multiturn.json", "multiturn.cold.prefill_tokens", "eq", None),
+    ("bench_multiturn.json", "multiturn.warm_turn_prefill_tokens", "eq", None),
+    ("bench_multiturn.json", "multiturn.cold_turn_prefill_tokens", "eq", None),
+    (
+        "bench_multiturn.json",
+        "multiturn.warm.prefix_decode_inserted_blocks",
+        "eq",
+        None,
+    ),
+    ("bench_multiturn.json", "multiturn.warm_over_cold_ttft", "max_ratio", 2.0),
+    ("bench_multiturn.json", "multiturn.warm.tokens_per_s", "min_ratio", 0.25),
+    ("bench_multiturn.json", "fork.sync.parity", "eq", None),
+    ("bench_multiturn.json", "fork.async.parity", "eq", None),
+    ("bench_multiturn.json", "fork.sync.group_blocks", "eq", None),
+    ("bench_multiturn.json", "fork.sync.independent_blocks", "eq", None),
+    ("bench_multiturn.json", "fork.sync.block_savings", "approx", 1e-6),
+    ("bench_multiturn.json", "fork.sync.decode_tokens", "eq", None),
+    ("bench_multiturn.json", "fork.async.decode_tokens", "eq", None),
+    ("bench_multiturn.json", "fork.async.group_blocks", "eq", None),
+    ("bench_multiturn.json", "fork.sync.tokens_per_s", "min_ratio", 0.25),
 ]
 
 

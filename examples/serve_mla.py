@@ -110,6 +110,27 @@ sync back, one tick later.  Tokens are identical to the synchronous
 engine under greedy AND seeded sampling, preemption and speculation
 included (tests/test_async_engine.py).
 
+PR 10 makes the stream conversational: DECODE-filled blocks register
+into the radix trie as each request crosses a block boundary (a second
+turn re-hits its own generation, not just the shared preamble), prefix
+matching is token-granular (a hit may end mid-block — the partial block
+forks copy-on-write), and requests carry ``SamplingParams`` — including
+``n``-way parallel sampling, which prefills once and forks the sequence
+n ways through the ref-counted block pool:
+
+  --n N                  parallel samples per request: one prefill, then
+                         an n-way copy-on-write fork; children sample
+                         with their own rid-folded PRNG keys, so tokens
+                         match n independent requests while the prompt
+                         blocks are allocated once per group
+  --admission {cache_aware,fcfs}
+                         'cache_aware' admits the waiting request with
+                         the longest cached prefix first (fewest new
+                         prefill tokens); 'fcfs' is strict arrival order
+  --admission-age-bound N
+                         starvation bound: a request bypassed N times is
+                         admitted unconditionally next
+
 Serving-flags summary (all compose):
 
   flag              default   effect
@@ -133,6 +154,9 @@ Serving-flags summary (all compose):
   --draft           shallow:2 draft spec ('shallow:N' | 'self')
   --trace           ''        Perfetto trace-event JSON output path
   --metrics         ''        metrics-registry JSON output path
+  --n               1         parallel samples per request (CoW fork)
+  --admission       cache_aware  'cache_aware' | 'fcfs' waiting order
+  --admission-age-bound 64    cache-aware admission starvation bound
 """
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -169,7 +193,7 @@ from repro.core.schemes import auto_dispatch, step_time
 from repro.hwmodel.platforms import PLATFORMS
 from repro.nn import module as nnm
 from repro.runtime import (AsyncPagedMLAEngine, PagedMLAEngine, Request,
-                           blocks_for)
+                           SamplingParams, blocks_for)
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--requests", type=int, default=10)
@@ -210,6 +234,16 @@ ap.add_argument("--engine", default="sync", choices=("sync", "async"),
                 help="paged engine: 'sync' waits on the device each tick; "
                      "'async' double-buffers host scheduling against device "
                      "execution (token-identical)")
+ap.add_argument("--n", type=int, default=1,
+                help="parallel samples per request: one prefill, then an "
+                     "n-way copy-on-write fork of the sequence")
+ap.add_argument("--admission", default="cache_aware",
+                choices=("cache_aware", "fcfs"),
+                help="waiting-queue order: longest-cached-prefix first "
+                     "(aging-bounded) vs strict arrival order")
+ap.add_argument("--admission-age-bound", type=int, default=64,
+                help="admit a request unconditionally after cache-aware "
+                     "admission bypassed it this many times")
 args = ap.parse_args()
 
 cfg = configs.smoke("deepseek-v2-236b")
@@ -246,8 +280,10 @@ for i in range(args.requests):
     gen = int(rng.integers(4, 20))
     prompt = np.concatenate(
         [preamble, rng.integers(0, cfg.vocab, (plen,)).astype(np.int32)])
-    reqs.append(Request(rid=i, prompt=prompt, max_new=gen,
-                        arrival=int(arrivals[i])))
+    # rids spaced by n: fork-group children claim rid+1..rid+n-1
+    reqs.append(Request(rid=i * args.n, prompt=prompt,
+                        arrival=int(arrivals[i]),
+                        sampling=SamplingParams(max_tokens=gen, n=args.n)))
 
 per_req = max(blocks_for(r.plen + r.max_new + 1, bs) for r in reqs)
 draft_cfg = draft_params = None
@@ -276,7 +312,9 @@ engine = engine_cls(cfg, params, num_blocks=args.num_blocks,
                     sample_seed=args.seed, mesh=mesh,
                     spec_k=args.spec_k, draft_cfg=draft_cfg,
                     draft_params=draft_params,
-                    cache_dtype=args.cache_dtype, telemetry=tel)
+                    cache_dtype=args.cache_dtype, telemetry=tel,
+                    admission=args.admission,
+                    admission_age_bound=args.admission_age_bound)
 total_need = sum(blocks_for(r.plen + r.max_new + 1, bs) for r in reqs)
 print(f"\n{args.requests} requests (prompts 8-32, gen 4-19), pool "
       f"{args.num_blocks - 1} usable blocks x {bs} tokens "
@@ -304,6 +342,9 @@ print(f"  prefilled tokens / chunks : {summary['prefill_tokens']:.0f} / "
       f"({summary['prefill_compiles']:.0f} compiled prefill shapes)")
 print(f"  cache evictions / CoW     : {summary['prefix_evictions']:.0f} / "
       f"{summary['prefix_cow_copies']:.0f}")
+if args.n > 1:
+    print(f"  fork groups / children    : {summary['fork_groups']:.0f} / "
+          f"{summary['fork_children']:.0f} (one prefill per group)")
 if args.spec_k:
     print(f"  spec accept / emit rate   : "
           f"{summary['spec_accept_rate']:.2f} "

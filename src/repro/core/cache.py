@@ -276,6 +276,28 @@ def copy_block_paged(pool_tree, src: int, dst: int):
     return jax.tree.map(leaf, pool_tree)
 
 
+def copy_blocks_paged(pool_tree, srcs, dsts):
+    """Batched :func:`copy_block_paged`: copy pool blocks srcs[i] -> dsts[i]
+    (all leaves, all layers) in ONE device op — the engine drains a tick's
+    whole copy-on-write queue (write-share breaks, partial prefix-match
+    tails, n-way fork tails) in a single dispatch instead of one jit call
+    per pair.  Pairs must be independent: every src is gathered before any
+    dst is written, so a dst reused as a later src would read stale data —
+    the engine falls back to in-order :func:`copy_block_paged` calls for
+    (rare) chained batches.  (0, 0) pairs are no-ops on the reserved null
+    block; callers pad the pair count with them to bound compile variants.
+    """
+    srcs = jnp.asarray(srcs, jnp.int32)
+    dsts = jnp.asarray(dsts, jnp.int32)
+
+    def leaf(a):
+        if a.ndim == 4:     # stacked (scan) layers: (layers, N, bs, D)
+            return a.at[:, dsts].set(a[:, srcs])
+        return a.at[dsts].set(a[srcs])
+
+    return jax.tree.map(leaf, pool_tree)
+
+
 def gather_latent_paged(pool: Dict[str, Any], block_table):
     """Materialize the contiguous (B, max_blocks*bs, D) view of each
     request's cache — the reference/naive path (the kernel path reads the

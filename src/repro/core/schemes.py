@@ -113,6 +113,37 @@ def prefill_time(cfg: MLAConfig, platform: PlatformPoint, seq_len: int,
     return max(c.flops / platform.peak_flops, c.bytes / platform.hbm_bw)
 
 
+def cow_copy_time(cfg: MLAConfig, platform: PlatformPoint,
+                  paged_block: int, n_copies: int = 1,
+                  cache_dtype: Optional[str] = None) -> float:
+    """Roofline time of ``n_copies`` copy-on-write block copies in ONE
+    MLA layer's latent pool: each copy streams a whole
+    ``paged_block x (kv_lora_rank + qk_rope_dim)`` latent block out of
+    HBM and back (read src + write dst — pure bandwidth, no FLOPs).
+    This prices the device side of partial-hit tail materialization and
+    write-target share breaking; the engine batches independent copies
+    into one op, which changes launch overhead but not bytes moved."""
+    bytes_per_block = (paged_block * (cfg.kv_lora_rank + cfg.qk_rope_dim)
+                       * cache_width(cfg, platform, cache_dtype))
+    return 2.0 * n_copies * bytes_per_block / platform.hbm_bw
+
+
+def fork_time(cfg: MLAConfig, platform: PlatformPoint, seq_len: int,
+              n: int, paged_block: int,
+              cache_dtype: Optional[str] = None) -> float:
+    """Device cost of forking a just-prefilled sequence ``n`` ways for
+    parallel sampling (runtime.scheduler.fork_group): the ``seq_len //
+    paged_block`` FULL blocks are shared by reference — free on the
+    device — and only a mid-block tail (``seq_len % paged_block != 0``)
+    costs one CoW block copy per fork.  The contrast with n independent
+    requests (n-1 extra prefills, or n-1 full cache re-reads on a
+    perfect prefix hit) is the term bench_serving's fork rows report."""
+    if n <= 1 or seq_len % paged_block == 0:
+        return 0.0
+    return cow_copy_time(cfg, platform, paged_block, n_copies=n - 1,
+                         cache_dtype=cache_dtype)
+
+
 def auto_dispatch(cfg: MLAConfig, platform: PlatformPoint, cache_len: int,
                   batch: int = 1, candidates=("seq", "rc", "ru"),
                   paged_block: int = 0, dp_shards: int = 1,

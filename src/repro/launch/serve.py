@@ -118,6 +118,41 @@ Async double-buffered engine + HTTP frontend (PR 9):
                       frees its pool blocks.
   --host / --port     frontend bind address (default 127.0.0.1:8000).
 
+Multi-turn & parallel sampling (PR 10):
+
+  --n N               parallel samples per request (SamplingParams.n):
+                      the prompt prefills ONCE, then the sequence forks
+                      N ways through refcounted block sharing +
+                      copy-on-write on the partial tail block
+                      (runtime.scheduler.fork_group).  Each fork samples
+                      its own fold(rid + i, position) key stream, so the
+                      group is token-identical to N independent seeded
+                      requests while allocating strictly fewer blocks.
+                      Per-request knobs ride runtime.sampling
+                      .SamplingParams; the legacy Request(prompt,
+                      max_new, stop=...) constructor still works through
+                      a deprecation shim.
+  --admission {cache_aware,fcfs}
+                      admission order of waiting requests.
+                      'cache_aware' (default) admits the request with
+                      the longest currently-cached prefix first (probed
+                      fork-free via PrefixCache.lookup_len) so warm
+                      conversation turns jump cold prompts; requests
+                      bypassed --admission-age-bound times are served
+                      regardless (starvation bound).  'fcfs' restores
+                      strict arrival order.
+  --admission-age-bound N
+                      how many times cache-aware admission may bypass a
+                      waiting request before it is served unconditionally
+                      (default 64).
+
+  Decode-filled blocks also register in the radix trie as generation
+  crosses each block boundary, so a follow-up turn whose prompt embeds
+  the previous turn's output re-hits its OWN generation, and prefix
+  matches are token-granular (a hit may end mid-block; the tail is
+  materialized copy-on-write).  Both behaviors are on by default with
+  the prefix cache and off with --no-prefix-cache.
+
 Common knobs: --arch picks the model family/config, --smoke shrinks it
 to CI size, --platform names the hwmodel deployment point that
 auto_dispatch prices schemes against, and --seed seeds weight init and
@@ -166,6 +201,9 @@ Serving-flags summary (the paged runtime; all compose):
   --serve           off       HTTP/SSE frontend instead of batch mode
   --host            127.0.0.1 frontend bind host (with --serve)
   --port            8000      frontend bind port (with --serve)
+  --n               1         parallel samples per request (fork + CoW)
+  --admission       cache_aware  admission order: 'cache_aware' | 'fcfs'
+  --admission-age-bound 64    starvation bound of cache-aware admission
 
 Static audit (PR 6): every step factory this CLI dispatches to
 (decode/prefill/verify x gather/pallas x scheme, single-device and
@@ -273,6 +311,20 @@ def main():
                     help="frontend bind host (with --serve)")
     ap.add_argument("--port", type=int, default=8000,
                     help="frontend bind port (with --serve)")
+    ap.add_argument("--n", type=int, default=1,
+                    help="parallel samples per request: prefill once, "
+                         "fork the sequence n ways copy-on-write "
+                         "(SamplingParams.n); requires --paged")
+    ap.add_argument("--admission", default="cache_aware",
+                    choices=("cache_aware", "fcfs"),
+                    help="admission order of waiting requests: "
+                         "'cache_aware' admits the longest-cached-prefix "
+                         "first (aging-bounded), 'fcfs' strict arrival "
+                         "order; requires --paged")
+    ap.add_argument("--admission-age-bound", type=int, default=64,
+                    help="serve a waiting request unconditionally after "
+                         "cache-aware admission bypassed it this many "
+                         "times")
     args = ap.parse_args()
 
     cfg = configs.smoke(args.arch) if args.smoke else configs.full(args.arch)
@@ -297,6 +349,9 @@ def main():
         raise SystemExit("--serve/--engine require --paged (the frontend "
                          "and the async double-buffer run on the paged "
                          "runtime)")
+    if args.n != 1:
+        raise SystemExit("--n requires --paged (parallel sampling forks "
+                         "the paged block pool copy-on-write)")
 
     scheme = args.scheme
     if scheme == "auto":
@@ -389,13 +444,15 @@ def _serve_paged(args, cfg, params, dtype, mesh=None):
     mesh, batch rows shard over 'data', heads over 'model', and the pool
     replicates (runtime.steps) — same tokens as single-host serving."""
     from repro.runtime import (AsyncPagedMLAEngine, PagedMLAEngine, Request,
-                               blocks_for)
+                               SamplingParams, blocks_for)
 
     engine_cls = AsyncPagedMLAEngine if args.engine == "async" \
         else PagedMLAEngine
     bs = args.block_size
     per_req = blocks_for(args.prompt_len + args.gen + 1, bs)
-    num_blocks = args.num_blocks or (1 + args.batch * per_req)
+    # fork children share the prompt blocks; each needs its own tail run
+    per_group = per_req + (args.n - 1) * blocks_for(args.gen + 1, bs)
+    num_blocks = args.num_blocks or (1 + args.batch * per_group)
     draft_cfg = draft_params = None
     if args.spec_k:
         from repro.runtime.spec import parse_draft_spec
@@ -409,7 +466,7 @@ def _serve_paged(args, cfg, params, dtype, mesh=None):
                            metrics=bool(args.metrics), drift=True)
     engine = engine_cls(
         cfg, params, num_blocks=num_blocks, block_size=bs,
-        max_batch=args.batch, max_blocks_per_req=per_req,
+        max_batch=max(args.batch, args.n), max_blocks_per_req=per_req,
         compute_dtype=dtype, impl=args.impl, scheme=args.scheme,
         platform=PLATFORMS[args.platform],
         enable_prefix_cache=not args.no_prefix_cache,
@@ -419,7 +476,9 @@ def _serve_paged(args, cfg, params, dtype, mesh=None):
         temperature=args.temperature, top_k=args.top_k,
         sample_seed=args.seed, mesh=mesh, shard_policy=args.policy,
         spec_k=args.spec_k, draft_cfg=draft_cfg, draft_params=draft_params,
-        cache_dtype=args.cache_dtype, telemetry=tel)
+        cache_dtype=args.cache_dtype, telemetry=tel,
+        admission=args.admission,
+        admission_age_bound=args.admission_age_bound)
     if args.serve:
         from repro.launch.server import Frontend
         fe = Frontend(engine, host=args.host, port=args.port)
@@ -428,10 +487,12 @@ def _serve_paged(args, cfg, params, dtype, mesh=None):
               f"GET /v1/health, /v1/metrics; Ctrl-C to stop)")
         return fe.serve_forever()
     rng = np.random.default_rng(args.seed + 1)
-    reqs = [Request(rid=i,
+    # rids are spaced by n: a fork group's children claim rid+1..rid+n-1.
+    reqs = [Request(rid=i * args.n,
                     prompt=rng.integers(0, cfg.vocab,
                                         (args.prompt_len,)).astype(np.int32),
-                    max_new=args.gen, arrival=2 * i)
+                    arrival=2 * i,
+                    sampling=SamplingParams(max_tokens=args.gen, n=args.n))
             for i in range(args.batch)]
     t0 = time.time()
     summary = engine.run(reqs, log_every=8)
@@ -448,6 +509,11 @@ def _serve_paged(args, cfg, params, dtype, mesh=None):
           f"{summary['prefill_tokens']:.0f} prefilled in "
           f"{summary['prefill_chunks']:.0f} chunks, "
           f"{summary['prefill_compiles']:.0f} prefill compiles")
+    if args.n > 1:
+        print(f"[serve] parallel sampling: {summary['fork_groups']:.0f} "
+              f"groups forked n={args.n} "
+              f"({summary['fork_children']:.0f} children, one prefill per "
+              f"group)")
     if args.spec_k:
         print(f"[serve] spec decode: {summary['spec_rounds']:.0f} rounds, "
               f"accept rate {summary['spec_accept_rate']:.2f} "

@@ -38,6 +38,7 @@ _ENGINE_COUNTERS = (
     "steps", "decode_tokens", "prefill_tokens", "prompt_tokens",
     "prefill_chunks", "admissions", "mid_gen_admissions", "preemptions",
     "scheme_switches", "spec_rounds", "spec_drafted", "spec_accepted",
+    "fork_groups", "fork_children",
 )
 _ENGINE_GAUGES = (
     "tokens_per_s", "cache_utilization", "pool_occupancy",

@@ -6,6 +6,7 @@ from .loop import LoopConfig, SimulatedFailure, TrainLoop, drive
 from .scheduler import (BlockAllocator, ContinuousScheduler, Request,
                         blocks_for)
 from .prefix_cache import PrefixCache, PrefixCacheStats
+from .sampling import SamplingParams
 from .spec import (accept_length, identity_draft, parse_draft_spec,
                    shallow_draft)
 from .engine import AsyncPagedMLAEngine, EngineStats, PagedMLAEngine

@@ -152,6 +152,10 @@ class PagedMLAEngine:
                  spec_k: int = 0, draft_cfg: Optional[ModelConfig] = None,
                  draft_params=None,
                  cache_dtype: str = "bf16",
+                 admission: str = "cache_aware",
+                 admission_age_bound: int = 64,
+                 decode_block_reuse: bool = True,
+                 partial_match: bool = True,
                  telemetry: Optional[Telemetry] = None):
         if cfg.attn_kind != "mla":
             raise NotImplementedError("PagedMLAEngine requires an MLA model")
@@ -257,7 +261,11 @@ class PagedMLAEngine:
             num_blocks=num_blocks, block_size=block_size,
             max_batch=max_batch, max_blocks_per_req=max_blocks_per_req,
             enable_prefix_cache=enable_prefix_cache,
-            decode_window=spec_k + 1)
+            decode_window=spec_k + 1,
+            admission=admission,
+            admission_age_bound=admission_age_bound,
+            decode_block_reuse=decode_block_reuse,
+            partial_match=partial_match)
         self.pool = models.init_paged_cache(cfg, num_blocks, block_size,
                                             compute_dtype,
                                             cache_dtype=cache_dtype)
@@ -311,6 +319,8 @@ class PagedMLAEngine:
         self._draft_chunk_steps: Dict[int, object] = {}
         self._copy_block = jax.jit(cachelib.copy_block_paged,
                                    donate_argnums=(0,))
+        self._copy_blocks = jax.jit(cachelib.copy_blocks_paged,
+                                    donate_argnums=(0,))
         self._last_scheme: Optional[str] = None
         self._last_point = (1, 1)     # (batch, cache_len) of the last pick
         self.stats = EngineStats()
@@ -545,6 +555,7 @@ class PagedMLAEngine:
                 tok = self._sample_tokens(logits[slot][None], [slot])[slot]
                 # register blocks only now — their latents are in the pool
                 self.sched.commit_prefill(slot)
+                self._fork_and_seed(slot, logits[slot][None], step_i)
                 if self.sched.record_prefill_sample(slot, tok, step_i) is None:
                     self.pending[slot] = tok
         if drift:
@@ -577,12 +588,42 @@ class PagedMLAEngine:
             self.stats.prefill_tokens += req.plen
             tok = self._sample_tokens(logits[0][None], [slot])[slot]
             self.sched.commit_prefill(slot)
+            self._fork_and_seed(slot, logits[0][None], step_i)
             if self.sched.record_prefill_sample(slot, tok, step_i) is None:
                 self.pending[slot] = tok
 
     # ------------------------------------------------------------- run ----
 
+    def validate_sampling(self, sp) -> None:
+        """Raise ValueError unless the per-request ``SamplingParams`` are
+        servable by THIS engine.  Knobs that are engine-global
+        (temperature / top_k / seed) must MATCH the engine's configuration
+        when set: the async engine bakes them into the compiled fused
+        step (make_paged_sample_step), so honoring a per-request override
+        would mint a new compiled-step variant per value — exactly what
+        the hot-path auditor's compiled-variant matrix forbids.  None
+        always means 'inherit'.  The HTTP frontend calls this on the
+        handler thread so a mismatch becomes a 400, not a worker death."""
+        if sp is None:
+            return
+        if sp.temperature is not None \
+                and float(sp.temperature) != self.temperature:
+            raise ValueError(
+                f"temperature={sp.temperature} != engine temperature "
+                f"{self.temperature}; per-request overrides are baked "
+                f"into the compiled step — set it engine-wide or leave "
+                f"None to inherit")
+        if sp.top_k is not None and int(sp.top_k) != self.top_k:
+            raise ValueError(
+                f"top_k={sp.top_k} != engine top_k {self.top_k}; set it "
+                f"engine-wide or leave None")
+        if sp.seed is not None and int(sp.seed) != self._sample_seed:
+            raise ValueError(
+                f"seed={sp.seed} != engine sample_seed "
+                f"{self._sample_seed}; set it engine-wide or leave None")
+
     def submit(self, req: Request) -> None:
+        self.validate_sampling(req.sampling)
         self.sched.submit(req)
 
     @property
@@ -604,6 +645,60 @@ class PagedMLAEngine:
             rids, self._cancels = self._cancels, set()
         for rid in sorted(rids):
             self.sched.cancel(rid, step_i)
+
+    def _drain_cow(self) -> None:
+        """Apply the scheduler's queued copy-on-write block copies to the
+        device pool(s).  Independent pairs batch into ONE device op per
+        pool (core.cache.copy_blocks_paged), padded to the next power of
+        two with (0, 0) null pairs — block 0 is the reserved NULL block,
+        so copying it onto itself is a no-op — bounding compiled variants
+        to log2(max batch).  A CHAINED batch (some dst re-read as a later
+        src, e.g. preemption-replay cascades) must apply in queue order
+        and falls back to sequential single-block copies."""
+        pairs = self.sched.drain_cow()
+        if not pairs:
+            return
+        srcs = [p[0] for p in pairs]
+        dsts = [p[1] for p in pairs]
+        if len(pairs) == 1 or (set(srcs) & set(dsts)):
+            for src, dst in pairs:
+                self.pool = self._copy_block(self.pool,
+                                             jnp.asarray(src, jnp.int32),
+                                             jnp.asarray(dst, jnp.int32))
+                if self.draft_pool is not None:
+                    # block-level ops track both pools (same geometry)
+                    self.draft_pool = self._copy_block(
+                        self.draft_pool, jnp.asarray(src, jnp.int32),
+                        jnp.asarray(dst, jnp.int32))
+            return
+        n = 1
+        while n < len(pairs):
+            n *= 2
+        pad = n - len(pairs)
+        s = jnp.asarray(srcs + [0] * pad, jnp.int32)
+        d = jnp.asarray(dsts + [0] * pad, jnp.int32)
+        self.pool = self._copy_blocks(self.pool, s, d)
+        if self.draft_pool is not None:
+            self.draft_pool = self._copy_blocks(self.draft_pool, s, d)
+
+    def _fork_and_seed(self, slot: int, row, step_i: int) -> None:
+        """Fork a just-prefilled n > 1 parent (scheduler.fork_group) and
+        sample every child's first token from the parent's last-position
+        prefill logits — each on its OWN fold(child rid, position) key
+        stream, so the group is token-identical to n independent
+        requests.  Runs between commit_prefill and the parent's own
+        record_prefill_sample: a parent finishing instantly (max_tokens
+        == 1) has then already handed its children their refcounts."""
+        kids = self.sched.fork_group(slot)
+        if not kids:
+            return
+        cslots = [cs for cs, _ in kids]
+        rows = jnp.broadcast_to(row, (len(kids),) + tuple(row.shape[1:]))
+        picks = self._sample_tokens(rows, cslots)
+        for cs in cslots:
+            tok = picks[cs]
+            if self.sched.record_prefill_sample(cs, tok, step_i) is None:
+                self.pending[cs] = tok
 
     def _sync_device(self) -> None:
         """Block until this tick's device work has retired.  jax dispatch
@@ -634,17 +729,11 @@ class PagedMLAEngine:
                 # just paid for.
                 self.stats.preemptions += len(
                     self.sched.ensure_step_capacity())
-                for src, dst in self.sched.drain_cow():
-                    self.pool = self._copy_block(self.pool,
-                                                 jnp.asarray(src, jnp.int32),
-                                                 jnp.asarray(dst, jnp.int32))
-                    if self.draft_pool is not None:
-                        # block-level ops track both pools (same
-                        # geometry/tables)
-                        self.draft_pool = self._copy_block(
-                            self.draft_pool, jnp.asarray(src, jnp.int32),
-                            jnp.asarray(dst, jnp.int32))
+                self._drain_cow()
                 admitted = self.sched.try_admit(step_i)
+                # partial-hit tail copies queued by try_admit must land
+                # before prefill gathers/writes touch the pool
+                self._drain_cow()
             for _, req in admitted:
                 self.stats.admissions += 1
                 self.stats.prompt_tokens += req.plen
@@ -656,6 +745,9 @@ class PagedMLAEngine:
                         self._run_chunked_prefill(admitted, step_i)
                     else:
                         self._run_per_request_prefill(admitted, step_i)
+                # fork-group tail copies queued by fork_group must land
+                # before both forks' decode writes dispatch
+                self._drain_cow()
 
             active = self.sched.active_slots
             if active and self.spec_k:
@@ -846,6 +938,8 @@ class PagedMLAEngine:
         out.update(self.sched.prefix.summary())
         out["total_blocks_allocated"] = float(
             self.sched.allocator.total_allocs)
+        out["fork_groups"] = float(self.sched.fork_groups)
+        out["fork_children"] = float(self.sched.forked_children)
         out["prefill_compiles"] = float(self.prefill_compiles)
         out["spec_compiles"] = float(self.spec_compiles)
         out["cache_dtype"] = self.cache_dtype
@@ -947,15 +1041,11 @@ class AsyncPagedMLAEngine(PagedMLAEngine):
                 self.stats.preemptions += len(preempted)
                 if preempted:
                     self._fixup_preempted(preempted, step_i)
-                for src, dst in self.sched.drain_cow():
-                    self.pool = self._copy_block(
-                        self.pool, jnp.asarray(src, jnp.int32),
-                        jnp.asarray(dst, jnp.int32))
-                    if self.draft_pool is not None:
-                        self.draft_pool = self._copy_block(
-                            self.draft_pool, jnp.asarray(src, jnp.int32),
-                            jnp.asarray(dst, jnp.int32))
+                self._drain_cow()
                 admitted = self.sched.try_admit(step_i)
+                # partial-hit tail copies queued by try_admit must land
+                # before prefill gathers/writes touch the pool
+                self._drain_cow()
             for _, req in admitted:
                 self.stats.admissions += 1
                 self.stats.prompt_tokens += req.plen
@@ -967,6 +1057,9 @@ class AsyncPagedMLAEngine(PagedMLAEngine):
                         self._run_chunked_prefill(admitted, step_i)
                     else:
                         self._run_per_request_prefill(admitted, step_i)
+                # fork-group tail copies queued by fork_group must land
+                # before both forks' decode writes dispatch
+                self._drain_cow()
 
             self._account(step_i)
 
@@ -1123,6 +1216,11 @@ class AsyncPagedMLAEngine(PagedMLAEngine):
             t_disp_perf=t_perf, scheme=scheme, point=self._last_point)
         for s in active:
             self.sched.lengths[s] += 1
+            if int(self.sched.lengths[s]) % self.block_size == 0:
+                # a generated block just structurally completed; its
+                # latent write is in-flight, but any future consumer's
+                # gather enqueues AFTER it in stream order
+                self.sched.register_decode_blocks(s)
 
     def _drain_inflight(self) -> None:
         """Account any in-flight step immediately (spec ticks and external

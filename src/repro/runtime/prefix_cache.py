@@ -17,16 +17,23 @@ Design (vLLM/SGLang-style, at block granularity):
     a trie hit ``fork``s the block (refcount += 1) and maps the request's
     leading block-table entries onto it; ``release`` (refcount -= 1)
     replaces raw ``free`` everywhere in the scheduler.
-  * Copy-on-write boundary: sharing stops at the first divergent or
-    partially-filled block.  Full matched blocks are mapped read-only;
-    the first divergent / partial block and everything after it is the
-    request's private copy (recomputed by the chunked prefill).  Matches
-    are additionally capped at ``plen - 1`` tokens so at least one prompt
-    token always runs through prefill — the last-position logits are what
-    samples the first generated token.  Should a write ever target a
-    block that is shared or trie-registered (e.g. an external fork), the
-    scheduler breaks the share with a device-side block copy
-    (``core.cache.copy_block_paged``) before writing.
+  * Copy-on-write boundary: full matched blocks are mapped read-only; a
+    hit may additionally end MID-BLOCK (``MatchResult.partial_len``
+    tokens into one more cached block) — the scheduler materializes that
+    tail by allocating a private block and queueing a device-side block
+    copy (``core.cache.copy_block_paged``), so only the genuinely novel
+    suffix runs through prefill.  Matches are capped at ``plen - 1``
+    tokens so at least one prompt token always prefills — the
+    last-position logits are what samples the first generated token.
+    Should a write ever target a block that is shared or trie-registered
+    (decode-block registration, n-way forks), the scheduler breaks the
+    share with the same block copy before writing.
+  * DECODE blocks are registered too: as a request's length crosses each
+    block boundary, the just-completed block of generated-token latents
+    enters the trie under its token content
+    (``scheduler.register_decode_blocks``) — a follow-up conversation
+    turn whose prompt embeds the previous turn's output re-hits its own
+    generation instead of re-prefilling it.
   * Eviction is LRU over refcount-ZERO cached blocks instead of the
     immediate reuse of PR-1: when a request releases its blocks, the
     trie-registered ones stay resident (refcount 0, evictable) so a later
@@ -57,6 +64,45 @@ def _block_keys(tokens: Sequence[int], block_size: int) -> List[Tuple[int, ...]]
             for i in range(n_full)]
 
 
+def _common_prefix_len(a: Tuple[int, ...], b: Tuple[int, ...]) -> int:
+    n = 0
+    for x, y in zip(a, b):
+        if x != y:
+            break
+        n += 1
+    return n
+
+
+class MatchResult(List[int]):
+    """A :meth:`PrefixCache.match` hit.
+
+    The LIST CONTENT is the full-block part of the match (forked pool
+    block ids, exactly what match() always returned), so every existing
+    ``len(shared)`` / ``shared + fresh`` / ``match(...) == [...]`` caller
+    keeps working.  On top of that a hit may end mid-block:
+
+      partial_src   pool block id whose leading ``partial_len`` token
+                    slots extend the match (forked on behalf of the
+                    caller, like the full blocks), or None
+      partial_len   tokens matched inside ``partial_src`` (0 = none)
+
+    The caller materializes the partial tail copy-on-write: allocate a
+    private block, queue a device copy ``partial_src -> private``, then
+    ``release([partial_src])`` — the trie block is only ever READ by the
+    copy, which the engine orders before any later pool write.
+    """
+
+    def __init__(self, blocks: Sequence[int] = (),
+                 partial_src: Optional[int] = None, partial_len: int = 0):
+        super().__init__(blocks)
+        self.partial_src = partial_src
+        self.partial_len = int(partial_len)
+
+    def n_tokens(self, block_size: int) -> int:
+        """Total prompt tokens this match serves from the cache."""
+        return len(self) * block_size + self.partial_len
+
+
 class _Node:
     """One cached block: an edge of the trie (keyed by its token content in
     the parent) plus the pool block id holding those tokens' latents."""
@@ -73,10 +119,13 @@ class _Node:
 @dataclasses.dataclass
 class PrefixCacheStats:
     lookups: int = 0            # match() calls
-    hits: int = 0               # match() calls returning >= 1 block
-    hit_tokens: int = 0         # tokens served from the cache
+    hits: int = 0               # match() calls serving >= 1 token
+    hit_tokens: int = 0         # tokens served from the cache (incl. partial)
     lookup_tokens: int = 0      # prompt tokens offered for matching
-    inserted_blocks: int = 0
+    partial_hits: int = 0       # matches that ended mid-block
+    partial_hit_tokens: int = 0  # tokens served from partial tail blocks
+    inserted_blocks: int = 0    # total trie registrations (prompt + decode)
+    decode_blocks_inserted: int = 0  # registrations from decode boundaries
     evictions: int = 0
     cow_copies: int = 0
 
@@ -95,10 +144,14 @@ class PrefixCache:
     carries one code path.
     """
 
-    def __init__(self, allocator, block_size: int, *, enabled: bool = True):
+    def __init__(self, allocator, block_size: int, *, enabled: bool = True,
+                 partial: bool = True):
         self.allocator = allocator
         self.block_size = block_size
         self.enabled = enabled
+        # token-granular partial-block matching; False restores the
+        # block-granular PR-9 behavior (the bench's A/B baseline)
+        self.partial = partial
         self.root = _Node(None, None, None)
         self._node_of: Dict[int, _Node] = {}     # registered block -> node
         self._evictable: Dict[int, _Node] = {}   # refcount-0 cached blocks
@@ -115,22 +168,26 @@ class PrefixCache:
         self._clock += 1
         return self._clock
 
-    def match(self, tokens: Sequence[int]) -> List[int]:
-        """Longest cached prefix of ``tokens`` as a list of pool block ids,
-        each ``fork``ed (refcount +1) on behalf of the caller.
+    def match(self, tokens: Sequence[int]) -> MatchResult:
+        """Longest cached prefix of ``tokens``: full blocks as the list
+        content, plus (``partial=True``) a token-granular tail —
+        ``partial_len`` tokens into one more cached block whose content
+        extends the prefix (``MatchResult``).  Every returned block,
+        including the partial source, is ``fork``ed (refcount +1) on
+        behalf of the caller.
 
         Capped at ``len(tokens) - 1`` tokens: a full-prompt hit would
         leave nothing to prefill, but the last position's logits are
-        needed to sample the first generated token — the final block is
-        recomputed privately instead (the copy-on-write boundary).
+        needed to sample the first generated token — at least the final
+        prompt token is always recomputed privately.
         """
         self.stats.lookups += 1
         self.stats.lookup_tokens += len(tokens)
         if not self.enabled:
-            return []
-        max_blocks = max(len(tokens) - 1, 0) // self.block_size
+            return MatchResult()
+        budget = max(len(tokens) - 1, 0)
         node, blocks = self.root, []
-        for key in _block_keys(tokens, self.block_size)[:max_blocks]:
+        for key in _block_keys(tokens, self.block_size)[:budget // self.block_size]:
             child = node.children.get(key)
             if child is None:
                 break
@@ -139,31 +196,96 @@ class PrefixCache:
             child.last_used = self._tick()
             blocks.append(child.block)
             node = child
-        if blocks:
+        partial_src, partial_len = None, 0
+        if self.partial:
+            tail = self._partial_child(node, tokens, len(blocks), budget)
+            if tail is not None:
+                child, partial_len = tail
+                self.allocator.fork([child.block])
+                self._evictable.pop(child.block, None)
+                child.last_used = self._tick()
+                partial_src = child.block
+        if blocks or partial_len:
             self.stats.hits += 1
-            self.stats.hit_tokens += len(blocks) * self.block_size
-        return blocks
+            self.stats.hit_tokens += len(blocks) * self.block_size \
+                + partial_len
+        if partial_len:
+            self.stats.partial_hits += 1
+            self.stats.partial_hit_tokens += partial_len
+        return MatchResult(blocks, partial_src, partial_len)
+
+    def _partial_child(self, node: _Node, tokens: Sequence[int],
+                       n_full: int, budget: int):
+        """The cached block extending the match past its last full block:
+        the child of ``node`` sharing the longest non-empty token prefix
+        with the remainder of ``tokens``, clipped to the ``budget``-token
+        cap.  Returns (node, matched_len) or None."""
+        start = n_full * self.block_size
+        tail_budget = min(budget - start, self.block_size)
+        if tail_budget <= 0 or not node.children:
+            return None
+        rest = tuple(np.asarray(tokens).tolist()[start:start + tail_budget])
+        best, best_len = None, 0
+        for key, child in node.children.items():
+            n = _common_prefix_len(key, rest)
+            if n > best_len:
+                best, best_len = child, n
+        return (best, best_len) if best is not None else None
+
+    def lookup_len(self, tokens: Sequence[int]) -> int:
+        """Tokens a :meth:`match` would serve right now — NO forks, no
+        stats, no LRU touch.  The cache-aware admission policy probes
+        every waiting request with this each tick; only the request
+        actually admitted runs the real (side-effecting) match."""
+        if not self.enabled:
+            return 0
+        budget = max(len(tokens) - 1, 0)
+        node, n_full = self.root, 0
+        for key in _block_keys(tokens, self.block_size)[:budget // self.block_size]:
+            child = node.children.get(key)
+            if child is None:
+                break
+            n_full += 1
+            node = child
+        n = n_full * self.block_size
+        if self.partial:
+            tail = self._partial_child(node, tokens, n_full, budget)
+            if tail is not None:
+                n += tail[1]
+        return n
 
     def cancel_match(self, tokens: Sequence[int],
-                     blocks: Sequence[int]) -> None:
+                     blocks: "MatchResult") -> None:
         """Undo a ``match`` whose admission was refused: release the forked
-        blocks AND back out the stats, so the reported hit rate counts
-        only tokens actually served from the cache (a pool-pressured
-        queue head re-matching every scheduler tick must not inflate
-        it)."""
+        blocks (full AND partial source) and back out the stats, so the
+        reported hit rate counts only tokens actually served from the
+        cache (a pool-pressured queue head re-matching every scheduler
+        tick must not inflate it)."""
         self.release(blocks)
+        psrc = getattr(blocks, "partial_src", None)
+        plen = getattr(blocks, "partial_len", 0)
+        if psrc is not None:
+            self.release([psrc])
         self.stats.lookups -= 1
         self.stats.lookup_tokens -= len(tokens)
-        if blocks:
+        if blocks or plen:
             self.stats.hits -= 1
-            self.stats.hit_tokens -= len(blocks) * self.block_size
+            self.stats.hit_tokens -= len(blocks) * self.block_size + plen
+        if plen:
+            self.stats.partial_hits -= 1
+            self.stats.partial_hit_tokens -= plen
 
-    def insert(self, tokens: Sequence[int], blocks: Sequence[int]) -> int:
-        """Register a prefilled request's FULL prompt blocks in the trie.
+    def insert(self, tokens: Sequence[int], blocks: Sequence[int],
+               decode: bool = False) -> int:
+        """Register a request's FULL sequence blocks in the trie — prompt
+        blocks after prefill (the engine's ``commit_prefill``), or
+        prompt+generated blocks as decode crosses each block boundary
+        (``decode=True``, scheduler.register_decode_blocks).
 
         ``blocks[i]`` must hold the latents of tokens
-        ``[i*bs, (i+1)*bs)`` — i.e. call this only after the prefill has
-        scattered into the pool (the engine's ``commit_prefill``).  Paths
+        ``[i*bs, (i+1)*bs)`` — i.e. call this only after those latents
+        are in the pool (or their writes are enqueued ahead of any
+        future reader, the async dispatch-order argument).  Paths
         already present keep their existing block (the caller's duplicate
         stays private and is simply freed on release); new paths adopt
         the caller's block without taking an extra refcount — trie
@@ -184,6 +306,8 @@ class PrefixCache:
                 self._node_of[blk] = child
                 added += 1
                 self.stats.inserted_blocks += 1
+                if decode:
+                    self.stats.decode_blocks_inserted += 1
             child.last_used = self._tick()
             node = child
         return added
@@ -278,7 +402,10 @@ class PrefixCache:
             "prefix_hit_tokens": float(s.hit_tokens),
             "prefix_lookup_tokens": float(s.lookup_tokens),
             "prefix_hit_rate": s.hit_rate,
+            "prefix_partial_hits": float(s.partial_hits),
+            "prefix_partial_hit_tokens": float(s.partial_hit_tokens),
             "prefix_inserted_blocks": float(s.inserted_blocks),
+            "prefix_decode_inserted_blocks": float(s.decode_blocks_inserted),
             "prefix_evictions": float(s.evictions),
             "prefix_cow_copies": float(s.cow_copies),
             "prefix_cached_blocks": float(self.num_cached),

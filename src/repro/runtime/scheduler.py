@@ -11,15 +11,28 @@ numpy, between jitted steps:
     replace raw ``free`` throughout the scheduler — prefix-shared blocks
     are mapped by several requests at once (runtime.prefix_cache).
   * ``ContinuousScheduler`` — fixed ``max_batch`` decode slots.  Requests
-    are admitted FCFS into free slots whenever the pool can cover their
+    are admitted into free slots whenever the pool can cover their
     prompt (+1 for the first generated token); ``try_admit`` first matches
-    the longest cached prefix in the radix ``PrefixCache`` and maps the
-    request's leading block-table entries onto the shared pool blocks, so
-    only the un-cached suffix needs prefilling (``Request.n_cached``).
-    Each decode step lazily allocates one more block for any request
-    crossing a block boundary; finished requests release their blocks —
-    trie-registered ones stay resident as LRU-evictable prefix cache,
-    the rest return to the free list immediately.
+    the longest cached prefix in the radix ``PrefixCache`` — token-
+    granular: a hit may end mid-block, materialized by a queued
+    copy-on-write of the partial source block — and maps the request's
+    leading block-table entries onto the shared pool blocks, so only the
+    un-cached suffix needs prefilling (``Request.n_cached``).  Admission
+    order is ``admission='fcfs'`` (strict) or ``'cache_aware'``
+    (longest-cached-prefix first with an ``admission_age_bound``
+    starvation bound).  Each decode step lazily allocates one more block
+    for any request crossing a block boundary — and registers the block
+    just completed in the trie (``decode_block_reuse``), so a follow-up
+    conversation turn re-hits its own generation; finished requests
+    release their blocks — trie-registered ones stay resident as
+    LRU-evictable prefix cache, the rest return to the free list
+    immediately.
+  * n-way PARALLEL SAMPLING (``SamplingParams.n > 1``): the prompt
+    prefills once, then ``fork_group`` maps every pre-admitted fork
+    child onto the parent's full prompt blocks (``BlockAllocator.fork``)
+    with a copy-on-write tail, and each fork decodes as an ordinary
+    independent request (own stop/cancel/preemption, consecutive rids,
+    own sampling-key stream).
   * Out-of-blocks mid-decode first evicts LRU refcount-zero cached
     blocks, then preempts the youngest running request (recompute-style:
     its prompt + generated tokens re-enter the waiting queue as a longer
@@ -42,12 +55,15 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import itertools
+import warnings
 from time import perf_counter
 from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from .prefix_cache import PrefixCache
+from .sampling import SamplingParams
 
 NULL_BLOCK = 0
 
@@ -56,7 +72,11 @@ NULL_BLOCK = 0
 class Request:
     rid: int
     prompt: np.ndarray            # (plen,) int32
-    max_new: int                  # generation budget
+    # generation budget — the scheduler's MUTABLE working copy
+    # (preemption shrinks it as output folds into the prompt).  None
+    # defers to ``sampling.max_tokens``; passing it directly is the
+    # legacy pre-SamplingParams constructor, kept via a deprecation shim.
+    max_new: Optional[int] = None
     arrival: int = 0              # driver step at which it becomes visible
     tokens: List[int] = dataclasses.field(default_factory=list)
     # per-request termination (PR 9): generation also stops when the
@@ -84,9 +104,39 @@ class Request:
     first_tok_t: float = -1.0
     finish_t: float = -1.0
     preempt_ts: List[float] = dataclasses.field(default_factory=list)
+    # -- request API (PR 10): consolidated per-request knobs.  max_new /
+    # stop above remain the scheduler's mutable working copies,
+    # initialized from here.
+    sampling: Optional[SamplingParams] = None
+    # n-way parallel sampling: ``sampling.n - 1`` fork children ride on
+    # the parent through the queue (rids rid+1 .. rid+n-1, sampling
+    # n=1); ``fork_group`` maps them onto the parent's prompt blocks
+    # right after its prefill, after which each is an ordinary
+    # independent request.  ``forked`` stays True across preemption so a
+    # replayed parent never re-forks.
+    fork_children: List["Request"] = dataclasses.field(default_factory=list)
+    forked: bool = False
+    n_skipped: int = 0            # times bypassed by cache-aware admission
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32)
+        if self.sampling is None:
+            if self.max_new is None:
+                raise ValueError(
+                    "Request needs sampling=SamplingParams(...) (or the "
+                    "legacy max_new=)")
+            warnings.warn(
+                "Request(prompt, max_new, stop=...) is deprecated; pass "
+                "sampling=SamplingParams(max_tokens=..., stop=..., ...)",
+                DeprecationWarning, stacklevel=3)
+            self.sampling = SamplingParams.from_legacy(self.max_new,
+                                                       self.stop)
+        else:
+            self.sampling = self.sampling.validate()
+            if self.max_new is None:
+                self.max_new = self.sampling.max_tokens
+            if not self.stop:
+                self.stop = [list(s) for s in self.sampling.stop]
         if self.orig_plen < 0:
             self.orig_plen = self.plen
 
@@ -208,14 +258,27 @@ class ContinuousScheduler:
     def __init__(self, *, num_blocks: int, block_size: int, max_batch: int,
                  max_blocks_per_req: Optional[int] = None,
                  enable_prefix_cache: bool = True,
-                 decode_window: int = 1):
+                 decode_window: int = 1,
+                 admission: str = "fcfs",
+                 admission_age_bound: int = 64,
+                 decode_block_reuse: bool = True,
+                 partial_match: bool = True):
         if decode_window < 1:
             raise ValueError(f"decode_window must be >= 1, {decode_window}")
+        if admission not in ("fcfs", "cache_aware"):
+            raise ValueError(f"unknown admission policy {admission!r} "
+                             "(expected 'fcfs' or 'cache_aware')")
+        if admission_age_bound < 1:
+            raise ValueError("admission_age_bound must be >= 1")
         self.allocator = BlockAllocator(num_blocks)
         self.block_size = block_size
         self.decode_window = decode_window
+        self.admission = admission
+        self.admission_age_bound = admission_age_bound
+        self.decode_block_reuse = decode_block_reuse
         self.prefix = PrefixCache(self.allocator, block_size,
-                                  enabled=enable_prefix_cache)
+                                  enabled=enable_prefix_cache,
+                                  partial=partial_match)
         self.max_batch = max_batch
         self.max_blocks = max_blocks_per_req or (num_blocks - 1)
         self.block_table = np.full((max_batch, self.max_blocks), NULL_BLOCK,
@@ -227,14 +290,28 @@ class ContinuousScheduler:
         self.finished: List[Request] = []
         self._admit_order: List[int] = []   # slots, oldest admission first
         # (src, dst) device copies the engine must run before the next
-        # pool write (copy-on-write breaks of shared write targets)
+        # pool write (copy-on-write breaks of shared write targets,
+        # partial-match tails, fork-group tails)
         self.cow_pending: List[Tuple[int, int]] = []
+        self.fork_groups = 0        # parallel-sampling groups forked
+        self.forked_children = 0    # fork children spawned across groups
 
     # ------------------------------------------------------------ queue ---
 
     def submit(self, req: Request) -> None:
         if req.submit_t < 0:
             req.submit_t = perf_counter()
+        if req.sampling.n > 1 and not req.forked and not req.fork_children:
+            # materialize the fork children now so cancellation and group
+            # accounting have real Request objects; they ride on the
+            # parent (NOT the queue) until fork_group seats them.  The
+            # caller owns rid uniqueness for [rid, rid + n).
+            one = dataclasses.replace(req.sampling, n=1)
+            for i in range(1, req.sampling.n):
+                child = Request(rid=req.rid + i, prompt=req.prompt,
+                                arrival=req.arrival, sampling=one)
+                child.submit_t = req.submit_t
+                req.fork_children.append(child)
         self.waiting.append(req)
 
     @property
@@ -251,53 +328,183 @@ class ContinuousScheduler:
 
     # -------------------------------------------------------- admission ---
 
+    def _pick_waiting(self) -> Request:
+        """The waiting request admission should try next.  'fcfs': the
+        queue head.  'cache_aware': the request with the longest
+        currently-cached prefix (probed with ``PrefixCache.lookup_len`` —
+        no forks, no stats), arrival order breaking ties — warm
+        conversation turns jump cold prompts, multiplying the hit rate
+        the decode-block registrations create.  Starvation bound: any
+        request already bypassed ``admission_age_bound`` times is served
+        first regardless of its cache affinity."""
+        if self.admission == "fcfs" or len(self.waiting) <= 1:
+            return self.waiting[0]
+        for req in self.waiting:
+            if req.n_skipped >= self.admission_age_bound:
+                return req
+        best, best_len = None, -1
+        for req in self.waiting:
+            n = self.prefix.lookup_len(req.prompt)
+            if n > best_len:
+                best, best_len = req, n
+        return best
+
+    def _dequeue(self, req: Request) -> None:
+        """Remove ``req`` from the waiting queue; under cache-aware
+        admission every request it jumped over ages by one (the
+        starvation counter ``_pick_waiting`` honors)."""
+        idx = self.waiting.index(req)
+        self.waiting.remove(req)
+        for jumped in itertools.islice(self.waiting, idx):
+            jumped.n_skipped += 1
+
     def try_admit(self, step: int = 0) -> List[Tuple[int, Request]]:
-        """FCFS admission into free slots.  The radix cache is consulted
-        first: the longest cached prefix is ``fork``ed onto the request's
-        leading block-table entries (``req.n_cached`` tokens need no
-        prefill); fresh blocks cover the rest of the prompt plus the
-        first generated token.  If the pool cannot cover the queue head
-        even after LRU eviction, admission stops (no head-of-line
-        skipping — keeps FCFS latency honest).  Returns [(slot, request)]
-        admitted now; the engine prefills the un-cached suffixes as a
-        batch and then calls ``commit_prefill`` per request."""
+        """Admission into free slots (``admission`` picks the order; see
+        ``_pick_waiting``).  The radix cache is consulted first: the
+        longest cached prefix is ``fork``ed onto the request's leading
+        block-table entries (``req.n_cached`` tokens need no prefill);
+        fresh blocks cover the rest of the prompt plus the first
+        generated token.  A token-granular match ending MID-BLOCK is
+        materialized copy-on-write: the first fresh block becomes a
+        private copy of the cached partial source via a queued device
+        copy the engine runs before prefill.
+
+        An n-way parallel-sampling parent admits as a GROUP, atomically:
+        one slot per fork plus each fork's private tail blocks are
+        reserved now, so ``fork_group`` (which runs later the same tick,
+        right after the parent's prefill) can never fail mid-flight.
+
+        If the pool cannot cover the picked request even after LRU
+        eviction, admission stops.  Returns [(slot, request)] admitted
+        now — parents only, fork children never prefill; the engine
+        prefills the un-cached suffixes as a batch and then calls
+        ``commit_prefill`` (+ ``fork_group``) per request."""
         admitted = []
-        for slot in range(self.max_batch):
-            if not self.waiting:
+        free = collections.deque(
+            s for s in range(self.max_batch) if self.slots[s] is None)
+        while self.waiting and free:
+            req = self._pick_waiting()
+            group = [] if req.forked else req.fork_children
+            if 1 + len(group) > len(free):
                 break
-            if self.slots[slot] is not None:
-                continue
-            req = self.waiting[0]
             need = blocks_for(req.plen + self._window(req), self.block_size)
+            n_shared_full = req.plen // self.block_size
+            child_needs = [blocks_for(c.plen + self._window(c),
+                                      self.block_size) - n_shared_full
+                           for c in group]
             if need > self.max_blocks:
                 raise ValueError(
                     f"request {req.rid}: prompt {req.plen} needs {need} "
                     f"blocks > max_blocks_per_req {self.max_blocks}")
-            if need > self.allocator.num_blocks - 1:
+            if need + sum(child_needs) > self.allocator.num_blocks - 1:
                 # can NEVER fit, even with an empty pool — fail fast
                 # instead of refusing admission forever
                 raise ValueError(
-                    f"request {req.rid}: prompt {req.plen} needs {need} "
+                    f"request {req.rid}: prompt {req.plen} (x{1 + len(group)}"
+                    f" parallel samples) needs {need + sum(child_needs)} "
                     f"blocks > pool size {self.allocator.num_blocks - 1}")
             shared = self.prefix.match(req.prompt)
             fresh = self.prefix.alloc(need - len(shared))
             if fresh is None:               # out of blocks: admission refused
                 self.prefix.cancel_match(req.prompt, shared)
                 break
-            blocks = shared + fresh
-            self.waiting.popleft()
+            reserved: List[List[int]] = []
+            for cn in child_needs:
+                got = self.prefix.alloc(cn)
+                if got is None:
+                    break
+                reserved.append(got)
+            if len(reserved) < len(group):  # group doesn't fit atomically
+                for got in reserved:
+                    self.prefix.release(got)
+                self.prefix.release(fresh)
+                self.prefix.cancel_match(req.prompt, shared)
+                break
+            self._dequeue(req)
+            slot = free.popleft()
+            blocks = list(shared) + fresh
             req.slot, req.admitted_step = slot, step
             if req.admit_t < 0:
                 req.admit_t = perf_counter()
-            req.n_cached = len(shared) * self.block_size
+            req.n_cached = shared.n_tokens(self.block_size)
             self.slots[slot] = req
             self.blocks_of[slot] = blocks
             self.block_table[slot] = NULL_BLOCK
             self.block_table[slot, :need] = blocks
             self.lengths[slot] = req.plen
             self._admit_order.append(slot)
+            if shared.partial_len:
+                # Materialize the mid-block tail: fresh[0] (block index
+                # len(shared), where the partial tokens live) becomes a
+                # private copy of the cached source.  Releasing the
+                # source fork immediately is safe: the engine drains
+                # cow_pending between admission and prefill, so the copy
+                # is enqueued ahead of every later pool write in stream
+                # order — even if eviction recycles the source block
+                # this very tick, its latents are still intact when the
+                # copy executes.
+                self.cow_pending.append((shared.partial_src, fresh[0]))
+                self.prefix.count_cow()
+                self.prefix.release([shared.partial_src])
+            for child, got in zip(group, reserved):
+                # seat the fork child now (slot + private tail blocks);
+                # its shared prompt mapping and lengths arrive at
+                # fork_group, after the parent's prefill this tick.
+                cslot = free.popleft()
+                child.slot, child.admitted_step = cslot, step
+                if child.admit_t < 0:
+                    child.admit_t = perf_counter()
+                self.slots[cslot] = child
+                self.blocks_of[cslot] = list(got)
+                self.block_table[cslot] = NULL_BLOCK
+                for i, b in enumerate(got):
+                    self.block_table[cslot, n_shared_full + i] = b
+                self.lengths[cslot] = 0
+                self._admit_order.append(cslot)
             admitted.append((slot, req))
         return admitted
+
+    def fork_group(self, slot: int) -> List[Tuple[int, Request]]:
+        """Fork the just-prefilled parent in ``slot`` n ways (parallel
+        sampling): each pre-admitted fork child maps the parent's FULL
+        prompt blocks read-only (``BlockAllocator.fork``, refcount += 1)
+        ahead of the private tail blocks reserved at admission; a
+        mid-block prompt tail is materialized by queueing a parent-tail
+        -> child-tail device copy on ``cow_pending`` (the engine drains
+        it before the next decode dispatch, so the copy is ordered ahead
+        of both forks' future writes).  Called by the engine right after
+        ``commit_prefill``; the parent's last-position logits then seed
+        every child's first token, each sampled on its own
+        fold(child rid, position) key stream.  Idempotent across
+        preemption replay (``forked``).  Returns [(child_slot, child)].
+        """
+        parent = self.slots[slot]
+        if parent is None or parent.forked or not parent.fork_children:
+            return []
+        parent.forked = True
+        n_full = parent.plen // self.block_size
+        shared = self.blocks_of[slot][:n_full]
+        tail = parent.plen % self.block_size
+        out = []
+        for child in parent.fork_children:
+            cslot = child.slot
+            self.allocator.fork(shared)
+            self.blocks_of[cslot] = list(shared) + self.blocks_of[cslot]
+            self.block_table[cslot, :n_full] = shared
+            self.lengths[cslot] = parent.plen
+            child.n_cached = parent.plen    # served by the fork, not prefill
+            if tail:
+                self.cow_pending.append((self.blocks_of[slot][n_full],
+                                         self.blocks_of[cslot][n_full]))
+                self.prefix.count_cow()
+            out.append((cslot, child))
+        self.fork_groups += 1
+        self.forked_children += len(out)
+        tel = self.prefix.tel
+        if tel is not None:
+            tel.tracer.instant("fork_group", args={"rid": parent.rid,
+                                                   "n": 1 + len(out)})
+        return out
 
     def commit_prefill(self, slot: int) -> int:
         """Register the request's full prompt blocks in the radix cache.
@@ -308,6 +515,29 @@ class ContinuousScheduler:
         req = self.slots[slot]
         n_full = req.plen // self.block_size
         return self.prefix.insert(req.prompt, self.blocks_of[slot][:n_full])
+
+    def register_decode_blocks(self, slot: int) -> int:
+        """Register the slot's completed blocks — prompt AND generated
+        tokens — in the radix trie, so a later request whose prompt
+        embeds this generation (the follow-up turn of a conversation,
+        an agent replaying a transcript) re-hits it instead of
+        re-prefilling.  Called as ``lengths`` crosses each block
+        boundary; idempotent — trie paths already present are only
+        LRU-refreshed, and a block registered once is never offered
+        again (``PrefixCache.insert``).  Safe against speculative
+        rewind: only blocks fully below ``lengths`` are offered, and
+        lengths advances over ACCEPTED tokens only, so stale
+        rejected-draft latents always sit past the registered range."""
+        if not self.decode_block_reuse or not self.prefix.enabled:
+            return 0
+        req = self.slots[slot]
+        n_full = int(self.lengths[slot]) // self.block_size
+        if n_full <= req.plen // self.block_size:
+            return 0    # nothing decode-filled completes a new block yet
+        seq = np.concatenate(
+            [req.prompt, np.asarray(req.tokens, np.int32)])
+        return self.prefix.insert(seq[:n_full * self.block_size],
+                                  self.blocks_of[slot][:n_full], decode=True)
 
     # ----------------------------------------------------- decode cycle ---
 
@@ -373,10 +603,11 @@ class ContinuousScheduler:
     def _cow_write_target(self, slot: int, window: int = 1) -> None:
         """Copy-on-write: if any block about to receive one of this slot's
         next ``window`` tokens is shared, swap in a private copy.
-        Structurally this does not arise from prefix sharing alone (shared
-        blocks cover only full prompt prefixes, writes land strictly after
-        the prompt) — it guards external forks and future decode-block
-        registration."""
+        Structurally this does not arise from prefix sharing, fork
+        groups or decode-block registration alone (shared / registered
+        blocks are always FULL — writes land strictly past them), but a
+        preempted request replaying through a partial cache hit, or an
+        external fork, can put a shared block under the write cursor."""
         lo = int(self.lengths[slot]) // self.block_size
         hi = (int(self.lengths[slot]) + window - 1) // self.block_size
         for widx in range(lo, min(hi, len(self.blocks_of[slot]) - 1) + 1):
@@ -465,6 +696,10 @@ class ContinuousScheduler:
             for t in toks:
                 self.lengths[slot] += 1
                 req.tokens.append(int(t))
+                if int(self.lengths[slot]) % self.block_size == 0:
+                    # a block of generated latents just completed — make
+                    # it matchable (multi-turn decode-block reuse)
+                    self.register_decode_blocks(slot)
                 if self._check_stop(req) or req.done:
                     break
             if req.done:
@@ -502,17 +737,34 @@ class ContinuousScheduler:
         """Abort a request wherever it is.  Waiting requests leave the
         queue; running requests release their slot and blocks (trie-
         registered prefix blocks stay cached and unpoisoned — the pool
-        contents they index are still valid prompt latents).  Unknown or
-        already-finished rids are a no-op.  Returns the cancelled request
+        contents they index are still valid prompt latents).  Fork
+        groups: cancelling a not-yet-forked waiting parent takes its
+        children with it; cancelling a single not-yet-forked child just
+        shrinks the group; post-fork, every member is an ordinary
+        independent request and cancels alone.  Unknown or already-
+        finished rids are a no-op.  Returns the cancelled request
         (``finish_reason == "cancelled"``) or None."""
+        def retire(r: Request) -> Request:
+            r.finish_reason = "cancelled"
+            r.finished_step = step
+            r.finish_t = perf_counter()
+            self.finished.append(r)
+            return r
+
         for req in self.waiting:
             if req.rid == rid:
                 self.waiting.remove(req)
-                req.finish_reason = "cancelled"
-                req.finished_step = step
-                req.finish_t = perf_counter()
-                self.finished.append(req)
-                return req
+                if not req.forked:
+                    # pre-admission children exist only as attachments
+                    for child in req.fork_children:
+                        retire(child)
+                    req.fork_children = []
+                return retire(req)
+            if not req.forked:
+                for child in req.fork_children:
+                    if child.rid == rid:
+                        req.fork_children.remove(child)
+                        return retire(child)
         for slot in self.active_slots:
             req = self.slots[slot]
             if req.rid == rid:

@@ -285,6 +285,19 @@ def test_matrix_includes_quantized_cells_and_tolerances():
         ("decode", "gather", "1dev")]
 
 
+def test_fork_cow_cannot_grow_the_matrix():
+    """PR 10 pin: n-way parallel sampling / CoW forking is host-side
+    bookkeeping over the SAME compiled steps — the audit matrix is
+    unchanged by construction.  StepSpec has no axis that could even
+    express a fork/sampling-group variant, and the cell sets stay at
+    their PR-8 size (27 single-device + 15 mesh cells)."""
+    import dataclasses
+    assert {f.name for f in dataclasses.fields(audit.StepSpec)} == {
+        "kind", "impl", "scheme", "mesh_shape", "cache_dtype"}
+    assert len(audit.single_device_matrix()) == 27
+    assert len(audit.mesh_matrix()) == 15
+
+
 def test_injected_f64_hlo_text_detected():
     pool = {"ckv": jnp.zeros((2, 4, 8, 32), jnp.bfloat16)}
     jaxpr = jax.make_jaxpr(lambda p: jax.tree.map(lambda x: x * 2, p))(pool)

@@ -149,6 +149,76 @@ def test_generate_rejects_empty_prompt(frontend):
     assert e.value.code == 400
 
 
+# -------------------------------------------- PR 10: request API wire ----
+
+
+def test_generate_single_response_golden_bytes(smoke_model, frontend):
+    """Without "n" in the body, the PR-9 single-completion wire format
+    is preserved byte for byte (key set, key order, serialization)."""
+    cfg, params = smoke_model
+    raw = _post(frontend, "/v1/generate",
+                {"prompt": PROMPT, "max_tokens": 4}).read()
+    r = json.loads(raw)
+    golden = json.dumps({"rid": r["rid"], "finish_reason": "length",
+                         "output": _reference(cfg, params, PROMPT, 4)})
+    assert raw == golden.encode()
+
+
+def test_generate_n_blocking_choices(smoke_model, frontend):
+    cfg, params = smoke_model
+    r = json.load(_post(frontend, "/v1/generate",
+                        {"prompt": PROMPT, "max_tokens": 5, "n": 2}))
+    assert set(r) == {"rid", "choices"}
+    assert [c["index"] for c in r["choices"]] == [0, 1]
+    ref = _reference(cfg, params, PROMPT, 5)   # greedy engine: forks agree
+    for c in r["choices"]:
+        assert c["tokens"] == ref and c["finish_reason"] == "length"
+
+
+def test_generate_explicit_n1_uses_choices_format(frontend):
+    # "n" PRESENT — even n=1 — selects the choices[] format; only its
+    # ABSENCE keeps the legacy body (the byte-compat contract above)
+    r = json.load(_post(frontend, "/v1/generate",
+                        {"prompt": PROMPT, "max_tokens": 3, "n": 1}))
+    assert set(r) == {"rid", "choices"}
+    assert len(r["choices"]) == 1 and r["choices"][0]["index"] == 0
+
+
+def test_generate_stream_n_carries_choice_indices(frontend):
+    resp = _post(frontend, "/v1/generate",
+                 {"prompt": PROMPT, "max_tokens": 4, "n": 2,
+                  "stream": True})
+    evs = _events(resp)
+    (start,) = [d for e, d in evs if e == "start"]
+    assert start["n"] == 2
+    toks = {}
+    for e, d in evs:
+        if e == "token":
+            toks.setdefault(d["choice"], []).append(d["token"])
+    (done,) = [d for e, d in evs if e == "done"]
+    by_idx = {c["index"]: c for c in done["choices"]}
+    assert set(toks) == {0, 1} == set(by_idx)
+    for c in (0, 1):
+        assert toks[c] == by_idx[c]["tokens"]
+        assert by_idx[c]["finish_reason"] == "length"
+
+
+@pytest.mark.parametrize("body", [
+    {"prompt": [5, 9], "max_tokens": 4, "n": 0},            # n < 1
+    {"prompt": [5, 9], "max_tokens": 4, "temperature": -1},  # negative
+    {"prompt": [5, 9], "max_tokens": 0},                     # empty budget
+    {"prompt": [5, 9], "max_tokens": 4, "temperature": 0.7},  # != engine
+    {"max_tokens": 4},                                       # no prompt
+], ids=["n0", "neg-temp", "max0", "temp-mismatch", "no-prompt"])
+def test_generate_structured_error_bodies(frontend, body):
+    with pytest.raises(urllib.error.HTTPError) as e:
+        _post(frontend, "/v1/generate", body)
+    assert e.value.code == 400
+    err = json.load(e.value)
+    assert err["error"]["type"] == "invalid_request"
+    assert err["error"]["message"]
+
+
 # ------------------------------------------------------- cancellation ----
 
 
@@ -245,6 +315,29 @@ def test_cancel_leaves_radix_cache_unpoisoned(smoke_model):
         r = json.load(_post(fe, "/v1/generate",
                             {"prompt": PROMPT, "max_tokens": 6}))
         assert r["output"] == _reference(cfg, params, PROMPT, 6)
+    finally:
+        fe.stop()
+
+
+def test_cancel_one_fork_leaves_rest_of_group_running(smoke_model):
+    """POST /v1/cancel with rid + c kills ONLY choice c: the sibling
+    decodes to its natural finish, the done event reports per-choice
+    finish reasons, and every block reference unwinds."""
+    cfg, params = smoke_model
+    eng = _engine(cfg, params)
+    fe = Frontend(eng, port=0).start()
+    try:
+        rid, resp = _stream_until_rid_and_tokens(
+            fe, {"prompt": PROMPT, "max_tokens": 40, "n": 2}, 2)
+        _post(fe, "/v1/cancel", {"rid": rid + 1})   # choice 1 only
+        evs = _events(resp)                          # drain to done
+        (done,) = [d for e, d in evs if e == "done"]
+        by = {c["index"]: c for c in done["choices"]}
+        assert by[1]["finish_reason"] == "cancelled"
+        assert by[0]["finish_reason"] == "length"
+        assert len(by[0]["tokens"]) == 40           # sibling unharmed
+        _drain(fe)
+        assert all(rc == 0 for rc in eng.sched.allocator.refcount.values())
     finally:
         fe.stop()
 

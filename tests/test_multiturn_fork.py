@@ -1,0 +1,249 @@
+"""Multi-turn serving + n-way parallel sampling (PR 10 acceptance).
+
+  * SamplingParams: validation errors, and the legacy
+    ``Request(prompt, max_new, stop=...)`` constructor kept working
+    through the DeprecationWarning shim (pinned here);
+  * per-request temperature/top_k/seed must MATCH the engine config
+    (they are baked into the compiled step — a per-request value would
+    mint new step variants) — ``validate_sampling`` raises;
+  * multi-turn decode-block reuse: a follow-up turn whose prompt embeds
+    the previous turn's generation re-hits the trie blocks that DECODE
+    filled (registered as lengths crossed each block boundary), prefills
+    only the genuinely new suffix, and still emits the cold-engine
+    tokens;
+  * n-way parallel sampling: one prefill + fork is token-identical to n
+    independent seeded requests on consecutive rids, on BOTH engines,
+    while allocating strictly fewer pool blocks (the acceptance
+    criterion) and compiling no extra step shapes;
+  * cancelling one fork mid-decode frees exactly that fork's unshared
+    blocks: the shared prompt blocks drop one refcount and the rest of
+    the group decodes on, token-unchanged.
+"""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as configs
+import repro.models as models
+from repro.nn import module as nnm
+from repro.runtime import (AsyncPagedMLAEngine, PagedMLAEngine, Request,
+                           SamplingParams, blocks_for)
+
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    # The parity tests below compare runs whose PREFILL batches differ by
+    # construction (one forked prefill vs n independent ones).  MoE
+    # capacity overflow is the only op whose per-token result depends on
+    # the rest of the batch (which tokens DROP is a function of every
+    # co-batched token's routing), so token-identity across batch shapes
+    # needs drop-free capacity: C >= T at capacity_factor = E / top_k.
+    cfg = configs.smoke("deepseek-v2-236b")
+    cfg = dataclasses.replace(
+        cfg, capacity_factor=float(cfg.n_experts) / cfg.top_k)
+    params = nnm.init_params(jax.random.PRNGKey(0), models.model_defs(cfg),
+                             jnp.float32)
+    return cfg, params
+
+
+def _engine(cfg, params, engine_cls=PagedMLAEngine, **kw):
+    kw.setdefault("num_blocks", 40)
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("max_blocks_per_req", 12)
+    return engine_cls(cfg, params, block_size=8,
+                      compute_dtype=jnp.float32, scheme="seq",
+                      prefill_chunk=8, **kw)
+
+
+def _prompt(n, seed=11):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 64, (n,)).astype(np.int32)
+
+
+def _outs(eng):
+    return {r.rid: (tuple(r.output), r.finish_reason)
+            for r in eng.sched.finished}
+
+
+# ------------------------------------------------------ SamplingParams ----
+
+
+def test_sampling_params_validation():
+    sp = SamplingParams(max_tokens=4, n=2, stop=[[1, 2]])
+    assert sp.validate() is sp
+    assert sp.stop == ((1, 2),)          # JSON lists normalize to tuples
+    for bad in (dict(n=0), dict(max_tokens=0), dict(temperature=-0.5),
+                dict(top_k=-1), dict(stop=((),))):
+        with pytest.raises(ValueError):
+            SamplingParams(**bad).validate()
+
+
+def test_legacy_request_constructor_shim():
+    with pytest.warns(DeprecationWarning, match="SamplingParams"):
+        r = Request(rid=0, prompt=np.arange(4, dtype=np.int32), max_new=5,
+                    stop=[[1, 2]])
+    assert r.sampling == SamplingParams(max_tokens=5, stop=((1, 2),))
+    assert r.max_new == 5 and r.stop == [[1, 2]]
+    # the new-style constructor must NOT warn
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        r = Request(rid=1, prompt=np.arange(4, dtype=np.int32),
+                    sampling=SamplingParams(max_tokens=3))
+    assert r.max_new == 3
+
+
+def test_engine_rejects_mismatched_sampling_overrides(smoke_model):
+    cfg, params = smoke_model
+    eng = _engine(cfg, params, temperature=0.8, top_k=5, sample_seed=7)
+    ids = np.arange(6, dtype=np.int32)
+    # matching overrides (and None = inherit) are fine
+    eng.validate_sampling(SamplingParams(max_tokens=2))
+    eng.validate_sampling(SamplingParams(max_tokens=2, temperature=0.8,
+                                         top_k=5, seed=7))
+    for bad in (dict(temperature=0.3), dict(top_k=9), dict(seed=1)):
+        with pytest.raises(ValueError, match="engine"):
+            eng.submit(Request(rid=0, prompt=ids,
+                               sampling=SamplingParams(max_tokens=2, **bad)))
+
+
+# ---------------------------------------------------------- multi-turn ----
+
+
+def test_second_turn_rehits_decode_blocks(smoke_model):
+    """Turn 2's prompt = turn 1's prompt + generation + new user tokens:
+    the generation blocks were trie-registered as decode crossed each
+    block boundary, so only the new suffix prefills — and the tokens
+    still match a cold engine serving the same turn-2 prompt."""
+    cfg, params = smoke_model
+    p1 = _prompt(16)
+    eng = _engine(cfg, params)
+    eng.run([Request(rid=0, prompt=p1,
+                     sampling=SamplingParams(max_tokens=16))])
+    out1 = list(eng.sched.finished[0].output)
+    assert len(out1) == 16
+    st = eng.sched.prefix.stats
+    # lengths crossed 24 (16 prompt + 8 generated): >= 1 decode block
+    assert st.decode_blocks_inserted >= 1
+    hit0, prefill0 = st.hit_tokens, eng.stats.prefill_tokens
+
+    p2 = np.concatenate([p1, np.asarray(out1, np.int32),
+                         _prompt(6, seed=12)])
+    eng.run([Request(rid=1, prompt=p2,
+                     sampling=SamplingParams(max_tokens=4))])
+    st = eng.sched.prefix.stats
+    # the warm turn re-hit prompt AND generated blocks: 16 + 8 full
+    # blocks at least (the trailing partial tail forks copy-on-write)
+    assert st.hit_tokens - hit0 >= 24
+    warm_prefill = eng.stats.prefill_tokens - prefill0
+    assert warm_prefill < len(p2) // 2
+
+    cold = _engine(cfg, params)
+    cold.run([Request(rid=1, prompt=p2,
+                      sampling=SamplingParams(max_tokens=4))])
+    assert _outs(cold)[1] == _outs(eng)[1]
+
+
+# ---------------------------------------------------- parallel sampling ----
+
+
+@pytest.mark.parametrize("engine_cls", [PagedMLAEngine, AsyncPagedMLAEngine],
+                         ids=["sync", "async"])
+def test_fork_group_token_identical_and_fewer_blocks(smoke_model,
+                                                     engine_cls):
+    """The n=4 acceptance: one prefill + CoW fork emits exactly the
+    tokens of 4 independent seeded requests on consecutive rids, while
+    allocating strictly fewer pool blocks (the prompt is block-aligned,
+    so the group shares every prompt block) and compiling no extra
+    prefill shapes."""
+    cfg, params = smoke_model
+    kw = dict(temperature=0.9, top_k=5, sample_seed=7)
+    p = _prompt(16)                       # 16 % block_size == 0
+
+    grp = _engine(cfg, params, engine_cls=engine_cls, **kw)
+    grp.run([Request(rid=0, prompt=p,
+                     sampling=SamplingParams(max_tokens=6, n=4))])
+
+    ind = _engine(cfg, params, engine_cls=engine_cls, **kw)
+    ind.run([Request(rid=i, prompt=p,
+                     sampling=SamplingParams(max_tokens=6))
+             for i in range(4)])
+
+    assert _outs(grp) == _outs(ind)
+    assert len(_outs(grp)) == 4
+    # with temperature on, the forks must actually diverge
+    assert len({toks for toks, _ in _outs(grp).values()}) > 1
+    assert (grp.sched.allocator.total_allocs
+            < ind.sched.allocator.total_allocs)
+    assert grp.summary()["fork_groups"] == 1.0
+    assert grp.summary()["fork_children"] == 3.0
+    # host-side fork/CoW: no new compiled step shapes vs the independents
+    assert grp.prefill_compiles <= ind.prefill_compiles
+
+
+def test_fork_group_midblock_prompt_cow(smoke_model):
+    """A NON-block-aligned prompt forks too: the partial tail block is
+    materialized per child by a queued device copy, and tokens still
+    match the independent runs."""
+    cfg, params = smoke_model
+    kw = dict(temperature=0.9, top_k=5, sample_seed=7)
+    p = _prompt(13)                       # 13 % 8 != 0: CoW tail per child
+
+    grp = _engine(cfg, params, **kw)
+    grp.run([Request(rid=0, prompt=p,
+                     sampling=SamplingParams(max_tokens=5, n=3))])
+    ind = _engine(cfg, params, **kw)
+    ind.run([Request(rid=i, prompt=p, sampling=SamplingParams(max_tokens=5))
+             for i in range(3)])
+    assert _outs(grp) == _outs(ind)
+    assert grp.sched.prefix.stats.cow_copies >= 2    # one per child
+
+
+def test_cancel_one_fork_frees_only_unshared_blocks(smoke_model):
+    """Mid-decode cancellation of a single fork: exactly that fork's
+    private blocks return to the pool, every shared prompt block drops
+    ONE refcount, and the survivors' tokens are unchanged."""
+    cfg, params = smoke_model
+    kw = dict(temperature=0.9, top_k=5, sample_seed=7)
+    p = _prompt(16)
+
+    ref = _engine(cfg, params, **kw)
+    ref.run([Request(rid=0, prompt=p,
+                     sampling=SamplingParams(max_tokens=10, n=3))])
+
+    eng = _engine(cfg, params, **kw)
+    eng.submit(Request(rid=0, prompt=p,
+                       sampling=SamplingParams(max_tokens=10, n=3)))
+    # step until the group is forked and a couple of tokens are out,
+    # but BEFORE any decode block completes (16 + 8 boundary) so the
+    # victim's private blocks are trie-free
+    while eng.sched.fork_groups == 0 or any(
+            len(eng.sched.slots[s].tokens) < 3
+            for s in eng.sched.active_slots):
+        eng.step()
+    alloc = eng.sched.allocator
+    victim_slot = next(s for s in eng.sched.active_slots
+                       if eng.sched.slots[s].rid == 1)
+    n_shared = len(p) // 8
+    shared = eng.sched.blocks_of[victim_slot][:n_shared]
+    private = eng.sched.blocks_of[victim_slot][n_shared:]
+    rc_before = {b: alloc.refcount[b] for b in shared}
+    n_before = alloc.num_allocated
+
+    eng.request_cancel(1)
+    eng.step()
+    assert alloc.num_allocated == n_before - len(private)
+    for b in private:
+        assert b not in alloc.refcount            # hard-freed, not cached
+    for b in shared:
+        assert alloc.refcount[b] == rc_before[b] - 1
+
+    while not eng.sched.all_done:
+        eng.step()
+    outs, refs = _outs(eng), _outs(ref)
+    assert outs[1][1] == "cancelled"
+    for rid in (0, 2):                    # survivors: token-unchanged
+        assert outs[rid] == refs[rid]

@@ -21,6 +21,8 @@ Covers, bottom-up:
   * temperature / top-k sampling determinism, incl. preemption replay;
   * the hwmodel prefix-hit cost term.
 """
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -34,7 +36,8 @@ from repro.core.schemes import prefill_time
 from repro.hwmodel import attention_costs as ac
 from repro.nn import module as nnm
 from repro.runtime import (BlockAllocator, ContinuousScheduler,
-                           PagedMLAEngine, PrefixCache, Request, blocks_for)
+                           PagedMLAEngine, PrefixCache, Request,
+                           SamplingParams, blocks_for)
 
 MCFG = mlalib.MLAConfig(d_model=64, n_heads=4, q_lora_rank=48,
                         kv_lora_rank=32, qk_nope_dim=16, qk_rope_dim=8,
@@ -74,13 +77,21 @@ def test_allocator_refcount_semantics():
 # ---------------------------------------------------------- radix matching --
 
 
-def _cache(num_blocks=10, bs=4, enabled=True):
+def _cache(num_blocks=10, bs=4, enabled=True, partial=True):
     alloc = BlockAllocator(num_blocks)
-    return PrefixCache(alloc, bs, enabled=enabled), alloc
+    return PrefixCache(alloc, bs, enabled=enabled, partial=partial), alloc
+
+
+def _release_match(pc, m):
+    """Hand back a match the way the scheduler does: full blocks plus the
+    forked partial source (whose copy-on-write copy we don't make here)."""
+    pc.release(m)
+    if m.partial_src is not None:
+        pc.release([m.partial_src])
 
 
 def test_match_longest_prefix_with_cow_cap():
-    pc, alloc = _cache()
+    pc, alloc = _cache(partial=False)            # block-granular (PR-9)
     toks = np.arange(12)                         # 3 full blocks of 4
     blocks = alloc.alloc(3)
     pc.insert(toks, blocks)
@@ -100,6 +111,48 @@ def test_match_longest_prefix_with_cow_cap():
     # prompts shorter than one full block never match
     assert pc.match(np.arange(4)) == []
     assert pc.stats.hit_tokens == (2 + 3 + 1) * 4
+    assert pc.stats.partial_hits == 0
+
+
+def test_match_token_granular_partial():
+    """partial=True extends each hit mid-block: the cached block whose
+    content continues the prefix is forked as ``partial_src`` and the
+    caller materializes it copy-on-write."""
+    pc, alloc = _cache()
+    toks = np.arange(12)
+    blocks = alloc.alloc(3)
+    pc.insert(toks, blocks)
+    pc.release(blocks)
+    # identical prompt: 2 full blocks + 3 tokens into block 3 (the cap
+    # still reserves the LAST prompt token for prefill)
+    m = pc.match(toks)
+    assert m == blocks[:2]
+    assert m.partial_src == blocks[2] and m.partial_len == 3
+    assert m.n_tokens(4) == 11
+    assert alloc.refcount[blocks[2]] == 1        # forked for the caller
+    _release_match(pc, m)
+    # lookup_len sees the same count without forking anything
+    assert pc.lookup_len(toks) == 11
+    assert all(alloc.refcount[b] == 0 for b in blocks)
+    # divergence inside block 2: full hit on block 1 + 2-token partial
+    div = np.concatenate([np.arange(6), [99], np.arange(7, 14)])
+    m = pc.match(div)
+    assert m == blocks[:1]
+    assert m.partial_src == blocks[1] and m.partial_len == 2
+    _release_match(pc, m)
+    # prompts shorter than one full block can now hit mid-block
+    m = pc.match(np.arange(4))
+    assert m == [] and m.partial_src == blocks[0] and m.partial_len == 3
+    _release_match(pc, m)
+    # a cancelled partial match backs its stats and fork out
+    before = dataclasses.replace(pc.stats)
+    m = pc.match(np.arange(7))
+    pc.cancel_match(np.arange(7), m)
+    assert pc.stats == before
+    assert all(alloc.refcount[b] == 0 for b in blocks)
+    assert pc.stats.partial_hits == 3
+    assert pc.stats.partial_hit_tokens == 3 + 2 + 3
+    assert pc.stats.hit_tokens == (8 + 3) + (4 + 2) + 3
 
 
 def test_disabled_cache_is_passthrough():
@@ -173,12 +226,15 @@ def test_insert_keeps_existing_mapping():
 
 
 def _drive_scheduler(seed: int, n_ops: int = 120) -> None:
-    """Random submit/decode/fork/release/evict traffic against the real
-    scheduler (allocator + prefix cache), with invariants checked after
-    every op:  refcount(b) == #live block-table references to b, the
-    free list never intersects live tables or the trie, and shared
-    blocks are never freed while referenced (free() raising on rc > 1 is
-    exercised explicitly)."""
+    """Random submit/decode/fork/release/evict/cancel traffic against
+    the real scheduler (allocator + prefix cache), with invariants
+    checked after every op:  refcount(b) == #live block-table references
+    to b, the free list never intersects live tables or the trie, and
+    shared blocks are never freed while referenced (free() raising on
+    rc > 1 is exercised explicitly).  Submits include n-way
+    parallel-sampling groups (admit -> commit -> fork_group in one op,
+    the engine's tick order), so CoW forks, group cancellation and
+    decode-block trie registration all run under the same invariants."""
     rng = np.random.default_rng(seed)
     s = ContinuousScheduler(num_blocks=int(rng.integers(6, 16)),
                             block_size=int(rng.integers(2, 5)),
@@ -213,19 +269,29 @@ def _drive_scheduler(seed: int, n_ops: int = 120) -> None:
                     s.allocator.free([b])
 
     for _ in range(n_ops):
-        op = rng.integers(0, 5)
+        op = rng.integers(0, 6)
         if op == 0 and len(s.waiting) < 4:           # submit
             # small alphabet + common preamble -> real prefix collisions
             plen = int(rng.integers(1, max(pool_tokens // 2, 2)))
             prompt = np.concatenate([
                 np.zeros(min(plen, 4), np.int32),
                 rng.integers(0, 3, max(plen - 4, 0)).astype(np.int32)])
+            gen = int(rng.integers(1, 6))
+            # sometimes an n-way parallel-sampling group — only when the
+            # worst-case group demand fits the pool (try_admit fails
+            # fast, by design, on can-never-fit groups)
+            n = int(rng.integers(2, 4)) if rng.integers(0, 3) == 0 else 1
+            if (n > s.max_batch or n * blocks_for(plen + gen + 1,
+                                                  s.block_size)
+                    > s.allocator.num_blocks - 1):
+                n = 1
             s.submit(Request(rid=rid, prompt=prompt,
-                             max_new=int(rng.integers(1, 6))))
-            rid += 1
-        elif op == 1:                                # admit + commit
+                             sampling=SamplingParams(max_tokens=gen, n=n)))
+            rid += n
+        elif op == 1:                                # admit + commit + fork
             for slot, _ in s.try_admit():
                 s.commit_prefill(slot)
+                s.fork_group(slot)
         elif op == 2 and s.active_slots:             # one decode tick
             s.ensure_step_capacity()
             s.drain_cow()
@@ -240,6 +306,13 @@ def _drive_scheduler(seed: int, n_ops: int = 120) -> None:
             blk = s.blocks_of[slot][0]
             s.allocator.fork([blk])
             s.prefix.release([blk])
+        elif op == 5:                                # cancel anywhere
+            rids = [r.rid for r in s.waiting]
+            rids += [c.rid for r in s.waiting if not r.forked
+                     for c in r.fork_children]
+            rids += [s.slots[sl].rid for sl in s.active_slots]
+            if rids:
+                s.cancel(int(rng.choice(rids)))
         check()
 
 
@@ -500,7 +573,12 @@ def test_engine_shared_prefix_beats_pr1(smoke_model):
 
 def test_engine_prefix_reuse_after_release(smoke_model):
     """Blocks released at finish stay LRU-evictable and are re-hit by a
-    later identical prompt (no re-prefill of the shared blocks)."""
+    later identical prompt (no re-prefill of the shared blocks).  With
+    token-granular matching + decode-block registration the second
+    request also partial-hits the block request 0's decode completed:
+    11 prompt tokens -> 2 full blocks (8) + 2 tokens into block 3 (whose
+    content is prompt[8:11] + request 0's first generated token), so
+    only ONE prompt token re-prefills."""
     cfg, params = smoke_model
     rng = np.random.default_rng(7)
     prompt = rng.integers(0, cfg.vocab, (11,)).astype(np.int32)
@@ -508,10 +586,20 @@ def test_engine_prefix_reuse_after_release(smoke_model):
             for i in range(2)]                  # strictly sequential
     eng = _run_engine(cfg, params, reqs, prefill_chunk=4)
     s = eng.summary()
-    assert s["prefix_hit_tokens"] == 8          # 2 full blocks re-hit
-    assert s["prefill_tokens"] == 11 + 3
+    assert s["prefix_hit_tokens"] == 8 + 2      # 2 full blocks + partial
+    assert s["prefix_partial_hits"] == 1
+    assert s["prefix_decode_inserted_blocks"] == 1
+    assert s["prefill_tokens"] == 11 + 1
     outs = {r.rid: r.output for r in eng.sched.finished}
     assert outs[0] == outs[1]
+    # the PR-9 configuration is still reachable for A/B runs
+    old = _run_engine(cfg, params, reqs, prefill_chunk=4,
+                      partial_match=False, decode_block_reuse=False,
+                      admission="fcfs")
+    so = old.summary()
+    assert so["prefix_hit_tokens"] == 8
+    assert so["prefill_tokens"] == 11 + 3
+    assert {r.rid: r.output for r in old.sched.finished} == outs
 
 
 # ---------------------------------------------------------------- sampling --

@@ -262,9 +262,11 @@ def _trie_paths(node, acc=()):
 
 def test_spec_rejections_leave_no_stale_prefix_blocks(smoke_model):
     """Rejected drafts must never surface through the radix cache: every
-    registered trie path is a PROMPT prefix (drafts are only ever written
-    past ``lengths`` and never committed), refcounts match live block
-    tables, and a second wave re-hitting the shared preamble still decodes
+    registered trie path is a prefix of some request's COMMITTED stream
+    (prompt + emitted output — decode-filled blocks are trie-registered
+    at block boundaries, but drafts are only ever written past
+    ``lengths`` and never committed), refcounts match live block tables,
+    and a second wave re-hitting the shared preamble still decodes
     token-identically."""
     cfg, params = smoke_model
     reqs = _mkreqs(shared_prefix=8,
@@ -275,10 +277,11 @@ def test_spec_rejections_leave_no_stale_prefix_blocks(smoke_model):
     assert out == plain
     assert eng.stats.spec_accepted < eng.stats.spec_drafted  # rejections
     assert eng.summary()["prefix_hit_rate"] > 0               # cache used
-    prompts = [list(r.prompt) for r in reqs]
+    streams = [list(r.prompt) + [int(t) for t in r.output]
+               for r in eng.sched.finished]
     for block, path in _trie_paths(eng.sched.prefix.root):
-        assert any(list(path) == p[:len(path)] for p in prompts), \
-            f"block {block} caches tokens that are not a prompt prefix"
+        assert any(list(path) == s[:len(path)] for s in streams), \
+            f"block {block} caches tokens that were never committed"
     live = {}
     for slot, blocks in eng.sched.blocks_of.items():
         for b in blocks:
